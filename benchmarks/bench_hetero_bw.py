@@ -1,0 +1,26 @@
+"""Paper Fig. 3: heterogeneous BS bandwidth (B_k ~ U[0.5, 1.5] MHz)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.fl import FLConfig, FLSimulation
+from repro.fl.rounds import accuracy_at_budget
+
+
+def run(quick: bool = True) -> None:
+    n_rounds = 10 if quick else 30
+    schedulers = ["dagsa", "rs", "ub", "fedcs_low", "fedcs_high", "sa"]
+    results = {}
+    for name in schedulers:
+        cfg = FLConfig(dataset="fashionmnist", scheduler=name, n_train=1000,
+                       n_test=500, batch_size=20, eval_every=1,
+                       hetero_bw=True, seed=2)
+        sim = FLSimulation(cfg)
+        results[name] = sim.run(n_rounds)
+    budget = 0.95 * min(r[-1].wall_clock for r in results.values())
+    for name, recs in results.items():
+        emit(f"fig3_hetero_{name}",
+             np.mean([r.t_round for r in recs]) * 1e6,
+             f"acc@{budget:.1f}s={accuracy_at_budget(recs, budget):.3f} "
+             f"final_acc={recs[-1].test_acc:.3f}")

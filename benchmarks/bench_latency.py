@@ -1,0 +1,45 @@
+"""Control-plane latency comparison (paper's core claim, isolated).
+
+Runs ONLY the wireless round — mobility, channels, scheduling, bandwidth —
+for many rounds and reports the mean per-round latency t_round per
+scheduler.  This is the pure form of Table-free Fig. 2's mechanism: DAGSA
+must sit below every baseline.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import (ParticipationState, WirelessConfig, channel,
+                        mobility)
+from repro.core import scheduler as sched
+
+
+def run(quick: bool = True) -> None:
+    cfg = WirelessConfig()
+    n_rounds = 50 if quick else 300
+    for name in ["dagsa", "dagsa_jit", "rs", "ub", "fedcs_low",
+                 "fedcs_high", "sa"]:
+        key = jax.random.PRNGKey(0)
+        k0, key = jax.random.split(key)
+        state = mobility.init_positions_grid_bs(k0, cfg)
+        part = ParticipationState.init(cfg.n_users)
+        lats, sels = [], []
+        import time as _t
+        t0 = _t.perf_counter()
+        for r in range(n_rounds):
+            key, km, kp, ks = jax.random.split(key, 4)
+            state = mobility.step(km, state, cfg)
+            prob = channel.make_problem(kp, state, cfg, part.counts,
+                                        part.round_idx)
+            res = sched.schedule(name, prob, cfg, ks, seed=r)
+            part = part.update(res)
+            lats.append(float(res.t_round))
+            sels.append(int(res.selected.sum()))
+        us = (_t.perf_counter() - t0) / n_rounds * 1e6
+        emit(f"latency_{name}", us,
+             f"mean_t_round={np.mean(lats):.4f}s "
+             f"p95={np.percentile(lats, 95):.4f}s "
+             f"mean_selected={np.mean(sels):.1f} "
+             f"min_part_rate={float(part.counts.min()) / n_rounds:.2f}")

@@ -1,0 +1,24 @@
+"""Roofline table from dry-run artifacts (§Roofline deliverable)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = True) -> None:
+    del quick
+    from repro.roofline.report import analyse, load_records
+    recs = load_records(multi_pod=False)
+    if not recs:
+        emit("roofline", 0.0, "no_dryrun_artifacts_yet")
+        return
+    for rec in recs:
+        row = analyse(rec)
+        if row.status != "ok":
+            emit(f"roofline_{row.arch}_{row.shape}", 0.0,
+                 f"status={row.status}")
+            continue
+        emit(f"roofline_{row.arch}_{row.shape}",
+             max(row.compute_s, row.memory_s, row.collective_s) * 1e6,
+             f"dom={row.dominant} comp={row.compute_s:.2e}s "
+             f"mem={row.memory_s:.2e}s coll={row.collective_s:.2e}s "
+             f"useful={row.useful_ratio:.2f}")

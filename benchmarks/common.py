@@ -1,0 +1,22 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_fn(fn: Callable, n: int = 10, warmup: int = 2) -> float:
+    """Mean wall-clock microseconds per call."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  python -m benchmarks.run             # quick suite (default)
+  python -m benchmarks.run --full      # paper-scale settings
+  python -m benchmarks.run --only fig2 # one bench
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+BENCHES = [
+    ("bandwidth", "benchmarks.bench_bandwidth", "Eq.(11) solver micro-bench"),
+    ("latency", "benchmarks.bench_latency", "control-plane round latency"),
+    ("fig2", "benchmarks.bench_scheduling", "Fig.2 scheduling policies"),
+    ("fig3", "benchmarks.bench_hetero_bw", "Fig.3 heterogeneous bandwidth"),
+    ("fig4", "benchmarks.bench_mobility", "Fig.4 mobility sweep"),
+    ("roofline", "benchmarks.bench_roofline", "dry-run roofline terms"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=[b[0] for b in BENCHES] + [None])
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for name, module, desc in BENCHES:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        mod = __import__(module, fromlist=["run"])
+        mod.run(quick=not args.full)
+        print(f"# {name} ({desc}) took {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end LM training driver: AdamW + cosine schedule + checkpointing.
+
+Trains a REDUCED olmo-1b on a synthetic Markov-chain corpus (the container
+is offline) for a few hundred steps; the loss must drop well below the
+uniform baseline because the data has real bigram structure.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 60
+"""
+import argparse
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config
+from repro.data import token_batches
+from repro.models import api
+
+CKPT = "/tmp/repro_lm_ckpt.npz"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config("olmo_1b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg)
+
+    sched = optim.cosine_warmup_schedule(3e-3, warmup_steps=10,
+                                         total_steps=args.steps)
+    opt = optim.adamw(sched, weight_decay=0.01)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: api.loss_fn(p, cfg, batch), has_aux=True)(params)
+        grads = optim.clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state, loss
+
+    uniform = math.log(cfg.vocab)
+    print(f"vocab={cfg.vocab}  uniform-baseline nll={uniform:.3f}")
+    t0 = time.time()
+    stream = token_batches(seed=1, vocab=cfg.vocab, batch=args.batch,
+                           seq_len=args.seq, n_batches=args.steps, top=8)
+    loss = None
+    for i, batch in enumerate(stream):
+        params, opt_state, loss = step(params, opt_state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss={float(loss):.3f}  "
+                  f"({time.time() - t0:.0f}s)")
+
+    save_pytree(CKPT, params, step=args.steps)
+    restored = load_pytree(CKPT, params)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(params),
+                              jax.tree.leaves(restored)))
+    print(f"checkpoint round-trip max err: {err:.2e}")
+    assert float(loss) < uniform - 0.5, "model failed to learn structure"
+    print("ok: learned bigram structure")
+    os.remove(CKPT)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpointing: pytree <-> .npz with structure metadata."""
+from repro.checkpoint.ckpt import save_pytree, load_pytree
+
+__all__ = ["save_pytree", "load_pytree"]

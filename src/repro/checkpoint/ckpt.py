@@ -1,0 +1,67 @@
+"""Minimal but real checkpointing: flatten pytree with key-paths -> npz.
+
+No orbax in the container; this supports everything the framework needs:
+exact round-trip of arbitrarily nested dict/list/tuple pytrees of arrays,
+including dtype preservation (bf16 stored as uint16 view).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_BF16_TAG = "__bf16__"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(path: str, tree: PyTree, step: int | None = None) -> None:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays, names = {}, []
+    for i, (kp, leaf) in enumerate(flat):
+        name = f"{i:05d}|{_path_str(kp)}"
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arrays[name + _BF16_TAG] = arr.view(np.uint16)
+        else:
+            arrays[name] = arr
+        names.append(name)
+    meta = {"treedef": str(treedef), "names": names, "step": step}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, __meta__=np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path) as z:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for i, (kp, leaf) in enumerate(flat):
+            name = f"{i:05d}|{_path_str(kp)}"
+            if name + _BF16_TAG in z:
+                arr = z[name + _BF16_TAG].view(jnp.bfloat16)
+            else:
+                arr = z[name]
+            if arr.shape != leaf.shape:
+                raise ValueError(f"shape mismatch at {name}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,20 @@
+"""qwen3-0.6b [dense]: 28L d_model=1024 16H (GQA kv=8) d_ff=3072
+vocab=151936 — qk_norm, GQA.  [hf:Qwen/Qwen3-8B family]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-0.6b",
+        arch_type="dense",
+        n_layers=28,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=8,
+        d_head=128,                 # qwen3 family uses head_dim 128
+        d_ff=3072,
+        vocab=151936,
+        qk_norm=True,
+        rope_theta=1e6,
+        source="hf:Qwen/Qwen3-8B (family card, 0.6B variant)",
+    )

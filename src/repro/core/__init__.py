@@ -1,0 +1,10 @@
+"""Paper contribution: mobility-aware joint user scheduling + bandwidth
+allocation for low-latency federated learning (DAGSA and baselines)."""
+from repro.core.types import (MobilityState, ScheduleResult,
+                              SchedulingProblem, WirelessConfig)
+from repro.core.scheduler import (SCHEDULERS, ParticipationState, schedule)
+
+__all__ = [
+    "MobilityState", "ScheduleResult", "SchedulingProblem", "WirelessConfig",
+    "SCHEDULERS", "ParticipationState", "schedule",
+]

@@ -1,0 +1,108 @@
+"""Optimal single-BS bandwidth allocation — paper Eq. (10)-(12).
+
+Given the scheduled set S_k of BS k, the bandwidth sub-problem
+
+    min t_k   s.t.  sum_{i in S_k} B_i <= B_k,
+                    tcomp_i + c_i / B_i <= t_k          (c_i = S/log2(1+snr))
+
+is convex; KKT says at the optimum every scheduled user finishes EXACTLY at
+t_k^* and the budget is tight:
+
+    f(t) := sum_{i in S_k} c_i / (t - tcomp_i) = B_k          (Eq. 11)
+    B_i^* = c_i / (t_k^* - tcomp_i)                            (Eq. 12)
+
+f is strictly decreasing on (max_i tcomp_i, inf), so t_k^* is the unique root,
+found here by fixed-iteration bisection (jit/vmap friendly — no data-dependent
+control flow).  Bracketing:
+
+    lo = max_i tcomp_i                    (f -> +inf as t -> lo+)
+    hi = max_i tcomp_i + sum_i c_i / B_k  (f(hi) <= sum c_i / (hi - max tcomp)
+                                           = B_k, so f(hi) <= B_k)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BISECT_ITERS = 60
+
+
+def bs_time(coeff: jnp.ndarray, tcomp: jnp.ndarray, mask: jnp.ndarray,
+            bw: jnp.ndarray, iters: int = _BISECT_ITERS) -> jnp.ndarray:
+    """Solve Eq. (11) for one BS.
+
+    Args:
+      coeff: [N] c_i = S/log2(1+snr_i) for this BS (MHz*s).
+      tcomp: [N] computation latencies (s).
+      mask:  [N] bool, which users are scheduled on this BS.
+      bw:    scalar B_k (MHz).
+
+    Returns:
+      t_k^* (scalar).  0.0 if the BS is empty.
+    """
+    m = mask.astype(coeff.dtype)
+    any_user = jnp.any(mask)
+    csum = jnp.sum(coeff * m)
+    tmax = jnp.max(jnp.where(mask, tcomp, -jnp.inf))
+    tmax = jnp.where(any_user, tmax, 0.0)
+    lo = tmax
+    hi = tmax + csum / jnp.maximum(bw, 1e-12) + 1e-9
+
+    def f(t):
+        # masked-out users contribute 0; guard the denominator for them.
+        denom = jnp.where(mask, t - tcomp, 1.0)
+        return jnp.sum(jnp.where(mask, coeff / jnp.maximum(denom, 1e-12), 0.0))
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        too_fast = f(mid) > bw          # demand exceeds budget -> need more time
+        return (jnp.where(too_fast, mid, lo), jnp.where(too_fast, hi, mid))
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    t = 0.5 * (lo + hi)
+    return jnp.where(any_user, t, 0.0)
+
+
+def allocate(coeff: jnp.ndarray, tcomp: jnp.ndarray, mask: jnp.ndarray,
+             bw: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. (12): per-user optimal bandwidth for one BS.
+
+    Returns (t_k^*, B_i[N]); B_i = 0 for unscheduled users.
+    """
+    t = bs_time(coeff, tcomp, mask, bw)
+    denom = jnp.maximum(t - tcomp, 1e-12)
+    bi = jnp.where(mask, coeff / denom, 0.0)
+    return t, bi
+
+
+def solve_all(coeff: jnp.ndarray, tcomp: jnp.ndarray, assign: jnp.ndarray,
+              bs_bw: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorized Eq. (11)-(12) across every BS of the system.
+
+    Args:
+      coeff:  [N, M] c_{i,k}.
+      tcomp:  [N].
+      assign: [N, M] bool assignment (row-sum <= 1).
+      bs_bw:  [M].
+
+    Returns:
+      bs_time: [M] t_k^* (0 for empty BSs).
+      user_bw: [N] B_i^* summed over the (single) assigned BS.
+    """
+    def per_bs(c_k, mask_k, bw_k):
+        return allocate(c_k, tcomp, mask_k, bw_k)
+
+    t_k, bi_k = jax.vmap(per_bs, in_axes=(1, 1, 0))(coeff, assign, bs_bw)
+    user_bw = jnp.sum(jnp.transpose(bi_k), axis=1)  # [N]
+    return t_k, user_bw
+
+
+def uniform_time(coeff: jnp.ndarray, tcomp: jnp.ndarray, mask: jnp.ndarray,
+                 bw: jnp.ndarray) -> jnp.ndarray:
+    """Round time of one BS under EVEN bandwidth split (UB / FedCS baselines)."""
+    n_sel = jnp.sum(mask)
+    per_user_bw = bw / jnp.maximum(n_sel, 1)
+    t_users = tcomp + coeff / jnp.maximum(per_user_bw, 1e-12)
+    t = jnp.max(jnp.where(mask, t_users, 0.0))
+    return jnp.where(n_sel > 0, t, 0.0)

@@ -1,0 +1,115 @@
+"""Baseline schedulers from paper §IV: RS, UB, FedCS (Low/High), SA.
+
+All four are pure-JAX (jit-able): selection + best-channel BS choice are
+elementwise, FedCS's per-BS greedy is a sort + prefix-max, and the bandwidth
+step reuses :mod:`repro.core.bandwidth`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bandwidth
+from repro.core.types import ScheduleResult, SchedulingProblem
+
+
+def _best_bs_assign(snr: jnp.ndarray, selected: jnp.ndarray) -> jnp.ndarray:
+    """[N, M] one-hot of argmax_k snr, zeroed for unselected users."""
+    best = jnp.argmax(snr, axis=1)
+    onehot = jax.nn.one_hot(best, snr.shape[1], dtype=bool)
+    return onehot & selected[:, None]
+
+
+def _optimal_result(problem: SchedulingProblem,
+                    assign: jnp.ndarray) -> ScheduleResult:
+    t_k, user_bw = bandwidth.solve_all(problem.coeff, problem.tcomp, assign,
+                                       problem.bs_bw)
+    selected = assign.any(axis=1)
+    return ScheduleResult(assign=assign, selected=selected, bw=user_bw,
+                          bs_time=t_k, t_round=jnp.max(t_k))
+
+
+def _uniform_result(problem: SchedulingProblem,
+                    assign: jnp.ndarray) -> ScheduleResult:
+    """Even bandwidth split inside each BS (UB / FedCS)."""
+    n_per_bs = jnp.sum(assign, axis=0)                       # [M]
+    per_user = problem.bs_bw / jnp.maximum(n_per_bs, 1)      # [M]
+    user_bw = jnp.sum(jnp.where(assign, per_user[None, :], 0.0), axis=1)
+
+    def per_bs(c_k, mask_k, bw_k):
+        return bandwidth.uniform_time(c_k, problem.tcomp, mask_k, bw_k)
+
+    t_k = jax.vmap(per_bs, in_axes=(1, 1, 0))(problem.coeff, assign,
+                                              problem.bs_bw)
+    selected = assign.any(axis=1)
+    return ScheduleResult(assign=assign, selected=selected, bw=user_bw,
+                          bs_time=t_k, t_round=jnp.max(t_k))
+
+
+def _bernoulli_with_necessary(key: jax.Array, problem: SchedulingProblem,
+                              p: float) -> jnp.ndarray:
+    """Random participation at rate p; Eq. (8g)-necessary users always in."""
+    sel = jax.random.bernoulli(key, p, (problem.snr.shape[0],))
+    return sel | problem.necessary
+
+
+def rs_schedule(problem: SchedulingProblem, key: jax.Array,
+                p: float) -> ScheduleResult:
+    """Randomly Select: bernoulli(p) users, best-channel BS, OPTIMAL bw."""
+    selected = _bernoulli_with_necessary(key, problem, p)
+    assign = _best_bs_assign(problem.snr, selected)
+    return _optimal_result(problem, assign)
+
+
+def ub_schedule(problem: SchedulingProblem, key: jax.Array,
+                p: float) -> ScheduleResult:
+    """Uniform Bandwidth: bernoulli(p) users, best-channel BS, EVEN bw."""
+    selected = _bernoulli_with_necessary(key, problem, p)
+    assign = _best_bs_assign(problem.snr, selected)
+    return _uniform_result(problem, assign)
+
+
+def sa_schedule(problem: SchedulingProblem) -> ScheduleResult:
+    """Select All: everyone participates, best-channel BS, OPTIMAL bw."""
+    selected = jnp.ones((problem.snr.shape[0],), dtype=bool)
+    assign = _best_bs_assign(problem.snr, selected)
+    return _optimal_result(problem, assign)
+
+
+def fedcs_schedule(problem: SchedulingProblem,
+                   threshold_s: float) -> ScheduleResult:
+    """FedCS [Nishio & Yonetani 2019] extended to multi-BS (paper §IV).
+
+    Each user is a candidate only at its best-channel BS.  Each BS admits
+    candidates in descending-SNR order while the round time under an EVEN
+    bandwidth split stays <= threshold.  With j admitted users each gets
+    B_k/j, so t(j) = max_{i<=j} (tcomp_i + c_i * j / B_k); we take the largest
+    j with t(j) <= threshold — a sort + prefix-max, fully vectorized.
+    """
+    n = problem.snr.shape[0]
+    all_sel = jnp.ones((n,), dtype=bool)
+    cand = _best_bs_assign(problem.snr, all_sel)             # [N, M]
+
+    def per_bs(snr_k, coeff_k, cand_k, bw_k):
+        # Sort candidates by SNR desc; non-candidates pushed to the end.
+        sort_key = jnp.where(cand_k, snr_k, -jnp.inf)
+        order = jnp.argsort(-sort_key)
+        c_s = coeff_k[order]
+        tc_s = problem.tcomp[order]
+        is_cand = cand_k[order]
+        # t_for_j[j-1] = max_{i<j} tc_s[i] + c_s[i]*j/bw  (j = 1..N)
+        j = jnp.arange(1, n + 1, dtype=coeff_k.dtype)        # [N]
+        vals = tc_s[:, None] + c_s[:, None] * j[None, :] / bw_k  # [N, N]
+        vals = jnp.where(is_cand[:, None], vals, -jnp.inf)
+        prefix = jax.lax.cummax(vals, axis=0)
+        t_for_j = jnp.diagonal(prefix)                        # [N]
+        n_cand = jnp.sum(is_cand)
+        feasible = (t_for_j <= threshold_s) & (jnp.arange(1, n + 1) <= n_cand)
+        n_take = jnp.max(jnp.where(feasible, jnp.arange(1, n + 1), 0))
+        take_sorted = jnp.arange(n) < n_take
+        take = jnp.zeros((n,), dtype=bool).at[order].set(take_sorted)
+        return take & cand_k
+
+    assign = jax.vmap(per_bs, in_axes=(1, 1, 1, 0), out_axes=1)(
+        problem.snr, problem.coeff, cand, problem.bs_bw)
+    return _uniform_result(problem, assign)

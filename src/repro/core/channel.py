@@ -1,0 +1,103 @@
+"""Wireless channel model: 3GPP-style path loss + Rayleigh small-scale fading.
+
+Paper Eq. (4): uplink rate r = B * log2(1 + p |h|^2 / N0) with path-loss model
+PL(dB) = 128.1 + 37.6 log10(D_km).  Powers are spectral densities (dBm/MHz) so
+the SNR inside the log is independent of the allocated bandwidth — this is
+what makes the bandwidth sub-problem (10) convex with the clean KKT solution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import MobilityState, SchedulingProblem, WirelessConfig
+
+
+def path_loss_db(dist_m: jnp.ndarray) -> jnp.ndarray:
+    """128.1 + 37.6 log10(D) with D in km (paper §II-C)."""
+    return 128.1 + 37.6 * jnp.log10(jnp.maximum(dist_m, 1.0) / 1000.0)
+
+
+def mean_snr(dist_m: jnp.ndarray, cfg: WirelessConfig) -> jnp.ndarray:
+    """Linear mean SNR (large-scale only): 10^((p - N0 - PL)/10)."""
+    snr_db = cfg.tx_dbm_mhz - cfg.noise_dbm_mhz - path_loss_db(dist_m)
+    return jnp.power(10.0, snr_db / 10.0)
+
+
+def sample_snr(key: jax.Array, dist_m: jnp.ndarray,
+               cfg: WirelessConfig,
+               shadow_db: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Rayleigh-faded linear SNR: |h|^2 ~ Exp(1) on top of the mean SNR.
+
+    ``shadow_db`` optionally adds per-(user,BS) log-normal shadowing —
+    unlike fast fading it persists while the user is static, which is what
+    makes v=0 runs geometry-stuck (paper Fig. 4 mechanism).
+    """
+    gain = jax.random.exponential(key, dist_m.shape)
+    snr = mean_snr(dist_m, cfg) * gain
+    if shadow_db is not None:
+        snr = snr * jnp.power(10.0, shadow_db / 10.0)
+    return snr
+
+
+def sample_shadowing(key: jax.Array, user_pos: jnp.ndarray,
+                     bs_pos: jnp.ndarray, cfg: WirelessConfig,
+                     sigma_db: float = 8.0,
+                     corr_dist_m: float = 50.0) -> jnp.ndarray:
+    """Spatially-correlated log-normal shadowing field, [N, M] dB.
+
+    Implemented as a per-BS random field evaluated at the user position via
+    smooth random Fourier features — users that barely move see barely
+    changing shadowing (correlation distance ~corr_dist_m), so the field is
+    CONSISTENT across rounds given the same key.
+    """
+    n_feat = 64
+    kw, kp = jax.random.split(key)
+    m = bs_pos.shape[0]
+    freqs = jax.random.normal(kw, (m, n_feat, 2)) / corr_dist_m
+    phases = jax.random.uniform(kp, (m, n_feat), maxval=2.0 * jnp.pi)
+    # [N, M, F]: cos(w . x + phi) per BS field
+    proj = jnp.einsum("nd,mfd->nmf", user_pos, freqs) + phases[None]
+    field = jnp.sqrt(2.0 / n_feat) * jnp.sum(jnp.cos(proj), axis=-1)
+    return sigma_db * field
+
+
+def spectral_efficiency(snr: jnp.ndarray) -> jnp.ndarray:
+    """log2(1 + SNR), bits/s/Hz."""
+    return jnp.log2(1.0 + snr)
+
+
+def bandwidth_time_coeff(snr: jnp.ndarray, cfg: WirelessConfig) -> jnp.ndarray:
+    """c_{i,k} = S / log2(1+snr_{i,k})  [MHz * s].
+
+    Upload latency of user i on BS k with bandwidth B is c_{i,k} / B; this
+    coefficient is the only thing the bandwidth solver needs per user.
+    """
+    return cfg.model_mbit / jnp.maximum(spectral_efficiency(snr), 1e-9)
+
+
+def sample_tcomp(key: jax.Array, cfg: WirelessConfig) -> jnp.ndarray:
+    """Per-user local computation latency ~ U(tmin, tmax) (paper §IV)."""
+    return jax.random.uniform(key, (cfg.n_users,), minval=cfg.tcomp_min_s,
+                              maxval=cfg.tcomp_max_s)
+
+
+def make_problem(key: jax.Array, state: MobilityState, cfg: WirelessConfig,
+                 part_counts: jnp.ndarray, round_idx: int,
+                 bs_bw: jnp.ndarray | None = None) -> SchedulingProblem:
+    """Assemble one round's SchedulingProblem from the physical state.
+
+    ``necessary`` implements Eq. (8g): user i must participate this round if
+    its historical participation count would otherwise fall below rho1 * n.
+    """
+    k_snr, k_tc = jax.random.split(key)
+    snr = sample_snr(k_snr, state.distances(), cfg)
+    tcomp = sample_tcomp(k_tc, cfg)
+    coeff = bandwidth_time_coeff(snr, cfg)
+    if bs_bw is None:
+        bs_bw = jnp.full((cfg.n_bs,), cfg.bs_bandwidth_mhz)
+    necessary = part_counts < cfg.rho1 * float(round_idx)
+    min_participants = int(jnp.ceil(cfg.rho2 * cfg.n_users))
+    return SchedulingProblem(snr=snr, tcomp=tcomp, bs_bw=bs_bw, coeff=coeff,
+                             necessary=necessary,
+                             min_participants=min_participants)

@@ -1,0 +1,119 @@
+"""DAGSA — Delay-Aware Greedy Search Algorithm (paper Algorithm 1).
+
+Faithful host-side implementation of the greedy search.  The bandwidth
+sub-solver (Eq. 11) is shared with the JAX path via a numpy mirror that is
+unit-tested against :mod:`repro.core.bandwidth`.
+
+Algorithm (prose + listing reconciled; the listing's ``argmin h`` is read as
+``argmax h`` — "select a user with better channel state ... will reduce total
+latency" (§III-B) and every baseline in §IV picks the *best* channel; argmin
+would contradict both):
+
+  1. C <- users whose historical participation would violate Eq. (8g);
+     place each on its best-channel BS (they are unconditionally required).
+  2. t* <- max_k T(S_k)  — the automated delay threshold implied by step 1.
+  3. One greedy pass: for each BS, keep adding the best-channel remaining
+     user while the BS's optimal time T(S_k u {i}) stays <= t*.
+  4. If Eq. (8h) (>= N*rho2 participants) is still unsatisfied, force-add the
+     best user for a uniformly random BS, raise t* to that BS's new optimal
+     time, and go to 3.
+  5. Final bandwidth split via Eq. (12) on every BS.
+
+A fully-jittable variant lives in :mod:`repro.core.dagsa_jit` (beyond-paper:
+same decisions, lax control flow, vmappable across fleets of simulations).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bandwidth
+from repro.core.types import ScheduleResult, SchedulingProblem
+
+_BISECT_ITERS = 60
+
+
+def _bs_time_np(coeff: np.ndarray, tcomp: np.ndarray, mask: np.ndarray,
+                bw: float) -> float:
+    """Numpy mirror of bandwidth.bs_time (Eq. 11 bisection)."""
+    if not mask.any():
+        return 0.0
+    c = coeff[mask]
+    tc = tcomp[mask]
+    lo = float(tc.max())
+    hi = lo + float(c.sum()) / max(bw, 1e-12) + 1e-9
+    for _ in range(_BISECT_ITERS):
+        mid = 0.5 * (lo + hi)
+        demand = float(np.sum(c / np.maximum(mid - tc, 1e-12)))
+        if demand > bw:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def dagsa_schedule(problem: SchedulingProblem,
+                   seed: int = 0) -> ScheduleResult:
+    """Run Algorithm 1 on one round's problem.  Host numpy control flow."""
+    snr = np.asarray(problem.snr, dtype=np.float64)
+    coeff = np.asarray(problem.coeff, dtype=np.float64)
+    tcomp = np.asarray(problem.tcomp, dtype=np.float64)
+    bs_bw = np.asarray(problem.bs_bw, dtype=np.float64)
+    necessary = np.asarray(problem.necessary, dtype=bool)
+    n, m = snr.shape
+    rng = np.random.default_rng(seed)
+
+    assign = np.zeros((n, m), dtype=bool)
+    remaining = np.ones(n, dtype=bool)
+
+    def bs_time(k: int) -> float:
+        return _bs_time_np(coeff[:, k], tcomp, assign[:, k], float(bs_bw[k]))
+
+    def bs_time_with(k: int, i: int) -> float:
+        trial = assign[:, k].copy()
+        trial[i] = True
+        return _bs_time_np(coeff[:, k], tcomp, trial, float(bs_bw[k]))
+
+    # -- Step 1: necessary users (Eq. 8g) to their best-channel BS ----------
+    nec_idx = np.flatnonzero(necessary)
+    rng.shuffle(nec_idx)                       # "Random select i in C"
+    for i in nec_idx:
+        k = int(np.argmax(snr[i]))
+        assign[i, k] = True
+        remaining[i] = False
+
+    # -- Step 2: automated threshold ----------------------------------------
+    t_star = max((bs_time(k) for k in range(m)), default=0.0)
+
+    def fill_pass(t_star: float) -> None:
+        """One greedy pass: each BS absorbs best-channel users under t*."""
+        for k in range(m):
+            while remaining.any():
+                cand = np.where(remaining, snr[:, k], -np.inf)
+                i = int(np.argmax(cand))
+                if bs_time_with(k, i) > t_star:
+                    break
+                assign[i, k] = True
+                remaining[i] = False
+
+    # -- Steps 3-4: fill, then raise the threshold until Eq. (8h) holds -----
+    fill_pass(t_star)
+    while int(assign.any(axis=1).sum()) < problem.min_participants \
+            and remaining.any():
+        k = int(rng.integers(m))
+        cand = np.where(remaining, snr[:, k], -np.inf)
+        i = int(np.argmax(cand))
+        assign[i, k] = True
+        remaining[i] = False
+        t_star = max(t_star, bs_time(k))
+        fill_pass(t_star)
+
+    # -- Step 5: final optimal bandwidth (Eq. 12) ----------------------------
+    assign_j = jnp.asarray(assign)
+    t_k, user_bw = bandwidth.solve_all(jnp.asarray(coeff, dtype=jnp.float32),
+                                       jnp.asarray(tcomp, dtype=jnp.float32),
+                                       assign_j,
+                                       jnp.asarray(bs_bw, dtype=jnp.float32))
+    selected = assign_j.any(axis=1)
+    return ScheduleResult(assign=assign_j, selected=selected, bw=user_bw,
+                          bs_time=t_k, t_round=jnp.max(t_k))

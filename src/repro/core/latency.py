@@ -1,0 +1,25 @@
+"""Round latency assembly — paper Eq. (3)-(5).
+
+t_round = max_i a_i (tcomp_i + t_up_i);  t_up_i = c_{i,k(i)} / B_i.
+Download latency is negligible (paper §II-C) and omitted, matching Eq. (9).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import ScheduleResult, SchedulingProblem
+
+
+def upload_latency(problem: SchedulingProblem,
+                   result: ScheduleResult) -> jnp.ndarray:
+    """[N] per-user upload latency under the decided assignment/bandwidth."""
+    c_user = jnp.sum(jnp.where(result.assign, problem.coeff, 0.0), axis=1)
+    return jnp.where(result.selected,
+                     c_user / jnp.maximum(result.bw, 1e-12), 0.0)
+
+
+def round_latency(problem: SchedulingProblem,
+                  result: ScheduleResult) -> jnp.ndarray:
+    """Recompute Eq. (3) from first principles (cross-checks result.t_round)."""
+    t_user = problem.tcomp + upload_latency(problem, result)
+    return jnp.max(jnp.where(result.selected, t_user, 0.0))

@@ -1,0 +1,55 @@
+"""Unified scheduler registry + participation (fairness) bookkeeping."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, dagsa
+from repro.core.types import ScheduleResult, SchedulingProblem, WirelessConfig
+
+SCHEDULERS = ("dagsa", "rs", "ub", "fedcs_low", "fedcs_high", "sa")
+
+# FedCS time thresholds from paper §IV.
+FEDCS_LOW_S = 0.6
+FEDCS_HIGH_S = 1.0
+
+
+@dataclasses.dataclass
+class ParticipationState:
+    """Tracks Eq. (8g) history: how many rounds each user has participated."""
+
+    counts: jnp.ndarray      # [N] float
+    round_idx: int
+
+    @staticmethod
+    def init(n_users: int) -> "ParticipationState":
+        return ParticipationState(counts=jnp.zeros((n_users,)), round_idx=0)
+
+    def update(self, result: ScheduleResult) -> "ParticipationState":
+        return ParticipationState(
+            counts=self.counts + result.participation(),
+            round_idx=self.round_idx + 1)
+
+
+def schedule(name: str, problem: SchedulingProblem, cfg: WirelessConfig,
+             key: jax.Array, seed: int = 0) -> ScheduleResult:
+    """Dispatch one round of scheduling by algorithm name."""
+    if name == "dagsa":
+        return dagsa.dagsa_schedule(problem, seed=seed)
+    if name == "dagsa_jit":
+        from repro.core import dagsa_jit
+        return dagsa_jit.dagsa_schedule_jit(problem, key)
+    if name == "rs":
+        return baselines.rs_schedule(problem, key, cfg.rho2)
+    if name == "ub":
+        return baselines.ub_schedule(problem, key, cfg.rho2)
+    if name == "fedcs_low":
+        return baselines.fedcs_schedule(problem, FEDCS_LOW_S)
+    if name == "fedcs_high":
+        return baselines.fedcs_schedule(problem, FEDCS_HIGH_S)
+    if name == "sa":
+        return baselines.sa_schedule(problem)
+    raise ValueError(f"unknown scheduler {name!r}; choose from {SCHEDULERS}")

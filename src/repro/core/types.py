@@ -1,0 +1,95 @@
+"""Shared dataclasses for the wireless FL control plane.
+
+All quantities follow the paper's units:
+  * powers are spectral densities in dBm/MHz (so SNR is bandwidth-independent),
+  * bandwidth in MHz, model size ``S`` in Mbit, latency in seconds,
+  * area in metres, speed in m/s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WirelessConfig:
+    """Static parameters of the multi-BS wireless FL system (paper §IV)."""
+
+    n_users: int = 50
+    n_bs: int = 8
+    area_m: float = 1000.0          # L: users/BSs live in an L x L square
+    noise_dbm_mhz: float = -114.0   # N0 noise PSD
+    tx_dbm_mhz: float = 14.0        # p^max transmit PSD
+    model_mbit: float = 0.5         # S: uplink payload per client (Mbit)
+    bs_bandwidth_mhz: float = 1.0   # B_k, homogeneous default (Fig. 2/4)
+    tcomp_min_s: float = 0.10       # local computation latency ~ U(min, max)
+    tcomp_max_s: float = 0.11
+    speed_mps: float = 20.0         # v: Random Direction speed
+    round_duration_s: float = 1.0   # dt used by the mobility integrator
+    rho1: float = 0.1               # Eq. (8g) historical participation rate
+    rho2: float = 0.5               # Eq. (8h) per-round participation rate
+
+    def __post_init__(self):
+        assert self.n_users > 0 and self.n_bs > 0
+        assert 0.0 <= self.rho1 <= 1.0 and 0.0 <= self.rho2 <= 1.0
+        assert self.tcomp_max_s >= self.tcomp_min_s >= 0.0
+
+
+@dataclasses.dataclass
+class SchedulingProblem:
+    """One round's inputs to any scheduler.
+
+    Attributes:
+      snr:    [N, M] linear uplink SNR of user i at BS k (fading included).
+      tcomp:  [N] local computation latency of each user this round (s).
+      bs_bw:  [M] per-BS bandwidth budget B_k (MHz).
+      coeff:  [N, M] "bandwidth-time" coefficient c_{i,k} = S / log2(1+snr),
+              i.e. MHz*seconds needed to push the model through that link.
+      necessary: [N] bool, users that MUST be scheduled to keep Eq. (8g).
+      min_participants: int, N * rho2 ceil, Eq. (8h).
+    """
+
+    snr: jnp.ndarray
+    tcomp: jnp.ndarray
+    bs_bw: jnp.ndarray
+    coeff: jnp.ndarray
+    necessary: jnp.ndarray
+    min_participants: int
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    """One round's scheduling decision.
+
+    Attributes:
+      assign:  [N, M] bool user->BS assignment (a_{i,k}); row-sum <= 1.
+      selected:[N] bool participation indicator (a_i).
+      bw:      [N] allocated bandwidth per user (MHz); 0 if unscheduled.
+      bs_time: [M] optimal round time of each BS (t_k^*); 0 for empty BSs.
+      t_round: float, max_k bs_time — the round latency the paper minimizes.
+    """
+
+    assign: jnp.ndarray
+    selected: jnp.ndarray
+    bw: jnp.ndarray
+    bs_time: jnp.ndarray
+    t_round: jnp.ndarray
+
+    def participation(self) -> jnp.ndarray:
+        return self.selected.astype(jnp.float32)
+
+
+@dataclasses.dataclass
+class MobilityState:
+    """Positions of users and BSs plus the RNG-free kinematic state."""
+
+    user_pos: jnp.ndarray   # [N, 2] metres
+    bs_pos: jnp.ndarray     # [M, 2] metres
+
+    def distances(self) -> jnp.ndarray:
+        """[N, M] user->BS euclidean distance in metres (floored at 1 m)."""
+        d = jnp.linalg.norm(self.user_pos[:, None, :] - self.bs_pos[None, :, :],
+                            axis=-1)
+        return jnp.maximum(d, 1.0)

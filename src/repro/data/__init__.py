@@ -1,0 +1,5 @@
+"""Data substrate: synthetic datasets + token pipeline (offline container)."""
+from repro.data.synthetic import DATASETS, make_dataset, Dataset
+from repro.data.tokens import token_batches
+
+__all__ = ["DATASETS", "make_dataset", "Dataset", "token_batches"]

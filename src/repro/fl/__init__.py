@@ -1,0 +1,7 @@
+"""Federated-learning substrate: partitioning, local training, aggregation,
+and the mobility-aware round engine that couples the control plane (core/)
+to the data plane."""
+from repro.fl.partition import shard_partition
+from repro.fl.rounds import FLConfig, FLSimulation, RoundRecord
+
+__all__ = ["shard_partition", "FLConfig", "FLSimulation", "RoundRecord"]

@@ -1,0 +1,28 @@
+"""Server-side aggregation — paper Eq. (2), masked weighted FedAvg."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def fedavg(global_params: PyTree, client_params: PyTree,
+           selected: jnp.ndarray, data_sizes: jnp.ndarray) -> PyTree:
+    """w^n = sum_i a_i |D_i| w_i / sum_i a_i |D_i|  (Eq. 2).
+
+    client_params leaves: [N, ...]; selected: [N] bool; data_sizes: [N].
+    If nothing was selected the global model is kept (guarded denominator).
+    """
+    w = selected.astype(jnp.float32) * data_sizes.astype(jnp.float32)
+    total = jnp.sum(w)
+    safe_total = jnp.maximum(total, 1e-9)
+
+    def agg(g, c):
+        wb = w.reshape((-1,) + (1,) * (c.ndim - 1)).astype(c.dtype)
+        avg = jnp.sum(wb * c, axis=0) / safe_total.astype(c.dtype)
+        return jnp.where(total > 0, avg, g)
+
+    return jax.tree.map(agg, global_params, client_params)

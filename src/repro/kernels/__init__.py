@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships:
+  <name>.py  — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ref.py     — pure-jnp oracles (dry-run graph + test ground truth)
+  ops.py     — jit'd dispatch wrappers (kernel on TPU, oracle elsewhere)
+
+Kernels are validated on CPU with interpret=True against the oracles.
+"""

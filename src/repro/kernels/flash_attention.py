@@ -1,0 +1,98 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Blockwise online-softmax attention: the grid walks (batch*kv_head, q-block)
+and each program streams kv-blocks through VMEM, keeping the running max /
+denominator / output accumulator in f32 VMEM scratch.  Tiles are MXU-aligned
+(q-block x d and kv-block x d with d a multiple of 128 when possible).
+
+GQA: q heads are grouped onto their kv head OUTSIDE the kernel (the group
+axis is folded into the q-block rows), so the kernel itself is MHA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_Q_BLOCK = 128
+DEFAULT_KV_BLOCK = 256
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_seq: int, kv_block: int,
+                  scale: float, causal: bool, q_block: int, q_seq: int):
+    """One (batch*head, q_block) program: stream kv blocks, online softmax."""
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale              # [Qb, D]
+
+    m = jnp.full((q_block, 1), -jnp.inf, jnp.float32)
+    l = jnp.zeros((q_block, 1), jnp.float32)
+    acc = jnp.zeros((q_block, q_ref.shape[-1]), jnp.float32)
+
+    n_kv = kv_seq // kv_block
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(j * kv_block, kv_block), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(j * kv_block, kv_block), :].astype(jnp.float32)
+        s = q @ k.T                                          # [Qb, KVb]
+        if causal:
+            # rows are (group, position) folded; position = abs_row % q_seq
+            # (valid because q_block divides q_seq, so no block straddles
+            # a group boundary)
+            abs_row = qi * q_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 0)
+            q_pos = jax.lax.rem(abs_row, q_seq)
+            k_pos = j * kv_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 1)
+            s = jnp.where(q_pos >= k_pos, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m, l, acc))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, q_block: int = DEFAULT_Q_BLOCK,
+                    kv_block: int = DEFAULT_KV_BLOCK,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q [B,S,H,D], k/v [B,T,KV,D] -> [B,S,H,D].  S % q_block == 0 etc."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    assert h % kv == 0 and s % q_block == 0 and t % kv_block == 0
+    scale = 1.0 / (d ** 0.5)
+
+    # fold (group, q) into rows per kv head: [B*KV, G*S, D]
+    qf = (q.reshape(b, s, kv, g, d).transpose(0, 2, 3, 1, 4)
+          .reshape(b * kv, g * s, d))
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, t, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, t, d)
+
+    grid = (b * kv, (g * s) // q_block)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, kv_seq=t, kv_block=kv_block,
+                          scale=scale, causal=causal, q_block=q_block,
+                          q_seq=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, q_block, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, t, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, q_block, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g * s, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    return (out.reshape(b, kv, g, s, d).transpose(0, 3, 1, 2, 4)
+            .reshape(b, s, h, d))

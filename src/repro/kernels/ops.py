@@ -1,0 +1,44 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, pure-jnp oracle elsewhere.
+
+The dry-run lowers the oracle path (identical math, real XLA HLO) because
+Pallas TPU kernels cannot lower on the CPU backend; tests exercise the
+kernels in interpret mode against the oracles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import flash_attention as fa
+from repro.kernels import ssd_scan as ssd
+from repro.kernels import rmsnorm as rms
+from repro.kernels import bandwidth_solve as bws
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = True):
+    if _on_tpu():
+        return fa.flash_attention(q, k, v, causal=causal)
+    return ref.flash_attention(q, k, v, causal=causal)
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int = 128):
+    if _on_tpu():
+        return ssd.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    return ref.ssd_scan(x, dt, A, B, C, chunk=chunk)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    if _on_tpu():
+        return rms.rmsnorm(x, scale, eps=eps)
+    return ref.rmsnorm(x, scale, eps=eps)
+
+
+def bandwidth_solve(coeff, tcomp, mask, bw):
+    if _on_tpu():
+        return bws.bandwidth_solve(coeff, tcomp, mask, bw)
+    return ref.bandwidth_solve(coeff, tcomp, mask, bw)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the single source of truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    scale: float | None = None) -> jnp.ndarray:
+    """q [B,S,H,D], k/v [B,T,KV,D] -> [B,S,H,D].  GQA by head grouping."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    sc = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, s, kv, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * sc
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), dtype=bool), k=t - s)
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, d)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) *
+            scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int) -> jnp.ndarray:
+    """Chunked SSD oracle — delegates to the model implementation."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, B, C, chunk)
+
+
+def bandwidth_solve(coeff, tcomp, mask, bw, iters: int = 60) -> jnp.ndarray:
+    """Batched Eq.(11) bisection oracle.
+
+    coeff/tcomp/mask: [K, U]; bw: [K] -> t* [K].
+    """
+    from repro.core.bandwidth import bs_time
+    return jax.vmap(lambda c, t, m, b: bs_time(c, t, m, b, iters=iters))(
+        coeff, tcomp, mask, bw)

@@ -1,0 +1,87 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid = (batch*heads, n_chunks); the chunk axis is the innermost (sequential
+on TPU) dimension, so the inter-chunk recurrent state lives in f32 VMEM
+scratch and is carried across grid steps — intra-chunk work is Q x Q
+MXU matmuls, the state pass costs one [N,P] multiply-add per chunk.
+
+Layout: inputs are pre-broadcast per head outside the kernel:
+  x  [BH, S, P]    dt [BH, S, 1]    A [BH, 1, 1]
+  B  [BH, S, N]    C  [BH, S, N]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref,
+                *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)              # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)            # [Q, 1]
+    a = a_ref[0, 0, 0]                            # scalar A (negative)
+    bmat = b_ref[0].astype(jnp.float32)           # [Q, N]
+    cmat = c_ref[0].astype(jnp.float32)           # [Q, N]
+
+    dA = dt * a                                   # [Q, 1]
+    seg = jnp.cumsum(dA, axis=0)                  # [Q, 1]
+    # intra-chunk decay L[i,j] = exp(seg_i - seg_j) for i >= j
+    rel = seg - seg.T                             # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(rel), 0.0)
+    scores = (cmat @ bmat.T) * decay * dt.T       # [Q, Q] (dt_j on columns)
+    y = scores @ x                                # diagonal block
+
+    state = state_ref[...]                        # [N, P]
+    y += (cmat * jnp.exp(seg)) @ state            # carried-in state term
+
+    seg_last = seg[chunk - 1, 0]
+    w = jnp.exp(seg_last - seg) * dt              # [Q, 1]
+    state_ref[...] = jnp.exp(seg_last) * state + bmat.T @ (x * w)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, chunk: int = DEFAULT_CHUNK,
+             interpret: bool = False):
+    """x [b,S,H,P], dt [b,S,H], A [H], B/C [b,S,G,N] -> y [b,S,H,P]."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, s, 1)
+    af = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h, 1, 1)
+    bb = jnp.broadcast_to(B, (b, s, h, n)) if B.shape[2] == 1 else B
+    cc = jnp.broadcast_to(C, (b, s, h, n)) if C.shape[2] == 1 else C
+    bf = bb.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    cf = cc.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(b * h, s // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bh, ci: (bh, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ci: (bh, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+    return out.reshape(b, h, s, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); 512 placeholder CPU devices stand in for 2 TPU v5e
+pods.  For each combination this driver:
+
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. assembles ShapeDtypeStruct input specs (no allocation),
+  3. jit-lowers the right step (train / prefill / decode) with explicit
+     NamedShardings from repro.launch.sharding,
+  4. compiles, records memory_analysis / cost_analysis / collective bytes,
+  5. writes a JSON artifact for the roofline report.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --all                 # the full 10x4 table
+  python -m repro.launch.dryrun --all --multi-pod     # 512-chip variant
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALIASES, ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding
+from repro.models import api
+from repro.roofline.hlo import collective_stats
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/artifacts/dryrun")
+
+# long_500k needs sub-quadratic attention: attention archs get a sliding
+# window; whisper (enc-dec, quadratic cross-attn over the encoder) is the
+# one documented skip.
+LONG_WINDOW = 8192
+SKIPS = {("whisper_tiny", "long_500k"):
+         "enc-dec: 500k-frame cross-attention is inherently quadratic in "
+         "encoder length; windowed cross-attn would change the model "
+         "(documented in DESIGN.md §6)"}
+
+
+def probe_depths(cfg) -> tuple[int, int]:
+    """Two shallow depths (same structure) for the cost extrapolation.
+
+    XLA's cost_analysis does not multiply a while-loop body by its trip
+    count, so scanned layer stacks are invisible.  We therefore compile two
+    FULLY-UNROLLED shallow variants and extrapolate linearly per layer:
+        cost(L) ~= cost(a) + (cost(b) - cost(a)) / (b - a) * (L - a).
+    """
+    if cfg.first_k_dense:                       # deepseek-v2: 1 dense + moe
+        return cfg.first_k_dense + 2, cfg.first_k_dense + 4
+    if cfg.arch_type == "hybrid" and cfg.shared_attn_every:
+        return cfg.shared_attn_every, 2 * cfg.shared_attn_every
+    return 2, 4
+
+
+def shape_knobs(cfg, shape_name: str, multi_pod: bool,
+                overrides: dict | None = None):
+    """Per-shape launcher configuration (baseline values)."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    upd: dict = {"dp_axes": dp}
+    if shape_name == "long_500k" and cfg.arch_type not in ("ssm", "hybrid"):
+        upd["sliding_window"] = LONG_WINDOW
+    if overrides:
+        upd.update(overrides)
+    return dataclasses.replace(cfg, **upd)
+
+
+def input_specs(cfg, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    spec = INPUT_SHAPES[shape_name]
+    b, s = spec["global_batch"], spec["seq_len"]
+    if spec["kind"] == "train":
+        return {"batch": api.train_batch_specs(cfg, b, s)}
+    if spec["kind"] == "prefill":
+        return {"batch": api.prefill_batch_specs(cfg, b, s)}
+    # decode: one token against a seq_len cache
+    cache = jax.eval_shape(functools.partial(api.init_cache, cfg, b, s))
+    return {"cache": cache,
+            "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _logits_spec(mesh, b):
+    dp = mesh_lib.data_axes(mesh)
+    dp_size = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in dp:
+        dp_size *= sizes[a]
+    return P(dp if b % dp_size == 0 else None, "model")
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool = False,
+              overrides: dict | None = None, verbose: bool = True,
+              probe: bool = False) -> dict:
+    arch_id = ALIASES.get(arch, arch)
+    if (arch_id, shape_name) in SKIPS:
+        return {"arch": arch_id, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "skipped",
+                "reason": SKIPS[(arch_id, shape_name)]}
+
+    t0 = time.time()
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    cfg = shape_knobs(get_config(arch_id), shape_name, multi_pod, overrides)
+    spec = INPUT_SHAPES[shape_name]
+    b = spec["global_batch"]
+
+    params_shape = jax.eval_shape(
+        functools.partial(api.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    p_specs = sharding.param_pspecs(cfg, params_shape, mesh)
+    p_ns = _ns(mesh, p_specs)
+
+    specs = input_specs(cfg, shape_name)
+    kind = spec["kind"]
+
+    with mesh:
+        if kind == "train":
+            b_ns = _ns(mesh, sharding.batch_pspecs(cfg, specs["batch"], mesh))
+            metrics_ns = jax.tree.map(
+                lambda _: NamedSharding(mesh, P()),
+                {"loss": 0.0, "nll": 0.0, "aux": 0.0})
+            fn = lambda params, batch: api.sgd_train_step(params, cfg, batch)
+            lowered = jax.jit(fn, in_shardings=(p_ns, b_ns),
+                              out_shardings=(p_ns, metrics_ns)).lower(
+                params_shape, specs["batch"])
+        elif kind == "prefill":
+            b_ns = _ns(mesh, sharding.batch_pspecs(cfg, specs["batch"], mesh))
+            out_ns = NamedSharding(mesh, _logits_spec(mesh, b))
+            fn = lambda params, batch: api.prefill_fn(params, cfg, batch)
+            lowered = jax.jit(fn, in_shardings=(p_ns, b_ns),
+                              out_shardings=out_ns).lower(
+                params_shape, specs["batch"])
+        else:  # decode
+            seq_shard = b == 1
+            c_specs = sharding.cache_pspecs(cfg, specs["cache"], mesh,
+                                            seq_shard=seq_shard)
+            c_ns = _ns(mesh, c_specs)
+            batch_axes = _logits_spec(mesh, b)[0]
+            tok_ns = NamedSharding(mesh, P(batch_axes, None))
+            pos_ns = NamedSharding(mesh, P())
+            out_ns = (NamedSharding(mesh, _logits_spec(mesh, b)), c_ns)
+            fn = lambda params, cache, token, pos: api.decode_step(
+                params, cfg, cache, token, pos)
+            # donate the cache: decode updates it in place (no double buffer)
+            lowered = jax.jit(fn, in_shardings=(p_ns, c_ns, tok_ns, pos_ns),
+                              out_shardings=out_ns,
+                              donate_argnums=(1,)).lower(
+                params_shape, specs["cache"], specs["token"], specs["pos"])
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_stats(compiled.as_text())
+    record = {
+        "arch": arch_id, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "cost": {k: float(v) for k, v in (cost or {}).items()
+                 if isinstance(v, (int, float))},
+        "collectives": coll,
+    }
+    if probe:
+        a, d_b = probe_depths(cfg)
+        probes = {}
+        for depth in (a, d_b):
+            ov = dict(overrides or {})
+            ov.update(n_layers=depth, scan_unroll=64)
+            if cfg.encoder_decoder:
+                ov["n_enc_layers"] = depth
+            sub = lower_one(arch, shape_name, multi_pod=multi_pod,
+                            overrides=ov, verbose=False, probe=False)
+            probes[str(depth)] = {"cost": sub["cost"],
+                                  "collective_bytes":
+                                      sub["collectives"]["total_bytes"]}
+        record["depth_probe"] = {"a": a, "b": d_b, "probes": probes,
+                                 "n_layers": cfg.n_layers}
+    if verbose:
+        print(f"[dryrun] {arch_id:20s} {shape_name:12s} "
+              f"{'2x16x16' if multi_pod else '16x16':8s} "
+              f"compile={record['compile_seconds']:7.1f}s "
+              f"flops={record['cost'].get('flops', 0):.3e} "
+              f"coll={coll['total_bytes']:.3e}B"
+              + (" +probe" if probe else ""))
+    return record
+
+
+def save_record(record: dict) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    tag = "mp" if record["multi_pod"] else "sp"
+    if record.get("optimized"):
+        tag += "_opt"
+    path = os.path.join(
+        ARTIFACT_DIR, f"{record['arch']}_{record['shape']}_{tag}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="add unrolled depth-probe compiles (roofline)")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply §Perf tuned overrides (launch/tuned.py)")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    failures = 0
+    for a, s in combos:
+        overrides = None
+        if args.optimized:
+            from repro.launch.tuned import overrides_for
+            overrides = overrides_for(ALIASES.get(a, a), s) or None
+        try:
+            rec = lower_one(a, s, multi_pod=args.multi_pod,
+                            probe=args.probe, overrides=overrides)
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            rec = {"arch": ALIASES.get(a, a), "shape": s,
+                   "multi_pod": args.multi_pod, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        rec["optimized"] = bool(args.optimized)
+        save_record(rec)
+    print(f"[dryrun] done: {len(combos) - failures}/{len(combos)} ok")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

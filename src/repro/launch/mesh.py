@@ -1,0 +1,40 @@
+"""Production mesh construction (TPU v5e pods; placeholder CPU in dry-run).
+
+single pod : (16, 16)      axes ("data", "model")        = 256 chips
+multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"(dryrun.py sets this automatically)")
+    import numpy as np
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """The axes that shard the batch (pod+data on the multi-pod mesh)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def smoke_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over however many real devices exist (tests)."""
+    import numpy as np
+    devices = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devices, ("data", "model"))

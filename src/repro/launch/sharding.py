@@ -1,0 +1,163 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per mesh.
+
+Scheme (Megatron-style tensor parallel over the "model" axis, batch over
+"pod"+"data"):
+  * embeddings              [V, d]        -> (model, None)   (vocab padded)
+  * attn wq/wk/wv           [d, H*dh]     -> (None, model)   column-parallel
+  * attn wo                 [H*dh, d]     -> (model, None)   row-parallel
+  * mlp gate/up             [d, ff]       -> (None, model)
+  * mlp down                [ff, d]       -> (model, None)
+  * MoE experts             [E, d, f]     -> (model, None, None)  expert-par
+  * MoE router              [d, E]        -> replicated
+  * MLA wq_b / wkv_b        [r, H*x]      -> (None, model)
+  * SSM block weights                     -> replicated (head-split is a
+        documented perf-iteration; Mamba archs are <6 GB so they fit)
+  * norms / scalars                       -> replicated
+Stacked ("layers/...") leaves get a leading None for the scan axis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+_SSM_LEAVES = {"in_proj", "conv_w", "conv_b", "A_log", "D", "dt_bias",
+               "out_proj"}
+
+
+def _rule(path: tuple, shape: tuple, model_size: int) -> P:
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    leaf = names[-1]
+    parents = set(names[:-1])
+
+    def ok(dim):           # a dim can only shard if divisible
+        return dim % model_size == 0
+
+    trailing: tuple
+    if leaf == "table":
+        trailing = ("model", None) if ok(shape[-2]) else (None, None)
+    elif leaf == "patch_proj" or leaf == "frontend_proj":
+        trailing = (None, "model") if ok(shape[-1]) else (None, None)
+    elif "ssm" in parents and leaf in _SSM_LEAVES:
+        trailing = tuple(None for _ in shape)
+    elif leaf in ("wq", "wk", "wv", "wq_b", "wkv_b"):
+        trailing = (None, "model") if ok(shape[-1]) else (None, None)
+    elif leaf in ("wo",):
+        trailing = ("model", None) if ok(shape[-2]) else (None, None)
+    elif leaf in ("wq_a", "wkv_a", "router"):
+        trailing = (None, None)
+    elif leaf in ("gate", "up") and "moe" in parents and len(shape) >= 3:
+        e = shape[-3]
+        trailing = (("model", None, None) if e % model_size == 0
+                    else (None, None, None))
+    elif leaf == "down" and "moe" in parents and len(shape) >= 3:
+        e = shape[-3]
+        trailing = (("model", None, None) if e % model_size == 0
+                    else (None, None, None))
+    elif leaf in ("gate", "up"):
+        trailing = (None, "model") if ok(shape[-1]) else (None, None)
+    elif leaf == "down":
+        trailing = ("model", None) if ok(shape[-2]) else (None, None)
+    else:   # norms, biases, conv, scalars
+        trailing = tuple(None for _ in shape)
+
+    lead = len(shape) - len(trailing)
+    assert lead >= 0, (names, shape, trailing)
+    return P(*((None,) * lead + tuple(trailing)))
+
+
+def param_pspecs(cfg: ModelConfig, params_shape: PyTree,
+                 mesh: jax.sharding.Mesh) -> PyTree:
+    """PartitionSpec tree matching an eval_shape'd params tree."""
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _rule(path, leaf.shape, model_size), params_shape)
+
+
+def batch_pspecs(cfg: ModelConfig, batch_shape: PyTree,
+                 mesh: jax.sharding.Mesh) -> PyTree:
+    """Batch tensors shard their leading (batch) dim over pod+data."""
+    from repro.launch.mesh import data_axes
+    dp = data_axes(mesh)
+    dp_size = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in dp:
+        dp_size *= sizes[a]
+
+    def spec(leaf):
+        b = leaf.shape[0]
+        lead = dp if b % dp_size == 0 else None
+        return P(*((lead,) + (None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map(spec, batch_shape)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shape: PyTree,
+                 mesh: jax.sharding.Mesh,
+                 seq_shard: bool = False) -> PyTree:
+    """Decode-cache sharding.
+
+    Batch dim shards over pod+data when divisible.  The SEQUENCE axis of
+    attention KV caches shards per cfg.cache_seq_shard:
+      none     — replicated over "model" (naive baseline)
+      model    — sharded over the tensor axis (flash-decoding style)
+      dp_model — over data+model (long_500k: batch=1 frees the data axes)
+      auto     — dp-sharded seq when batch==1 (legacy baseline behaviour)
+    """
+    from repro.launch.mesh import data_axes
+    dp = data_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_size = 1
+    for a in dp:
+        dp_size *= sizes[a]
+
+    mode = cfg.cache_seq_shard
+    if mode == "auto":
+        seq_axes = dp if seq_shard else None
+    elif mode == "model":
+        seq_axes = ("model",)
+    elif mode == "dp_model":
+        seq_axes = tuple(dp) + ("model",)
+    else:
+        seq_axes = None
+    seq_div = 1
+    for a in (seq_axes or ()):
+        seq_div *= sizes[a]
+
+    # batch/seq dims counted from the END so the optional leading layer axis
+    # never matters: k/v [.., B, S, KV, D], ckv [.., B, S, R],
+    # kpe [.., B, S, 1, rope], conv [.., B, w-1, ch], state [.., B, H, N, P],
+    # memory [B, S, d].
+    dims_from_end = {"k": (4, 3), "v": (4, 3), "ckv": (3, 2),
+                     "kpe": (4, 3), "conv": (3, None), "state": (4, None),
+                     "memory": (3, 2)}
+
+    def spec(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p)))
+                 for p in path]
+        leaf_name = names[-1]
+        shp = leaf.shape
+        nd = len(shp)
+        b_from_end, s_from_end = dims_from_end[leaf_name]
+        batch_dim = nd - b_from_end
+        out = [None] * nd
+        seq_used: tuple = ()
+        if (seq_axes and s_from_end is not None and leaf_name != "memory"
+                and shp[nd - s_from_end] % seq_div == 0):
+            out[nd - s_from_end] = seq_axes
+            seq_used = seq_axes
+        dp_free = [a for a in dp if a not in seq_used]
+        dp_free_size = 1
+        for a in dp_free:
+            dp_free_size *= sizes[a]
+        if dp_free and shp[batch_dim] % dp_free_size == 0 \
+                and shp[batch_dim] > 1:
+            out[batch_dim] = tuple(dp_free)
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)

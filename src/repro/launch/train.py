@@ -1,0 +1,66 @@
+"""LM training driver (any assigned arch, reduced or full).
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 50
+    (full-size configs are for the TPU mesh; on CPU use --reduced)
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import jax
+
+from repro import optim
+from repro.checkpoint import save_pytree
+from repro.configs import ALIASES, ARCH_IDS, get_config
+from repro.data import token_batches
+from repro.models import api
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b",
+                    choices=sorted(ALIASES) + ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full-size", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    sched = optim.cosine_warmup_schedule(args.lr, 10, args.steps)
+    opt = optim.adamw(sched, weight_decay=0.01)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: api.loss_fn(p, cfg, batch), has_aux=True)(params)
+        grads = optim.clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state, loss
+
+    from repro.models.lm import n_params
+    print(f"arch={cfg.name} params={n_params(params):,} "
+          f"uniform nll={math.log(cfg.vocab):.3f}")
+    t0 = time.time()
+    for i, batch in enumerate(token_batches(
+            1, cfg.vocab, args.batch, args.seq, args.steps, top=8)):
+        params, opt_state, loss = step(params, opt_state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(loss):.3f} "
+                  f"({time.time() - t0:.0f}s)")
+    if args.ckpt:
+        save_pytree(args.ckpt, params, step=args.steps)
+        print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

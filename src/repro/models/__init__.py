@@ -1,0 +1,1 @@
+"""Model zoo: the paper's FL CNN + the 10 assigned transformer/SSM archs."""

@@ -1,0 +1,136 @@
+"""Uniform model API across all assigned architectures.
+
+Dispatches decoder-only (lm.py) vs encoder-decoder (encdec.py) and builds
+batches / ShapeDtypeStruct specs for each assignment input shape.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    if cfg.encoder_decoder:
+        return encdec.init_params(key, cfg)
+    return lm.init_params(key, cfg)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    if cfg.encoder_decoder:
+        return encdec.loss_fn(params, cfg, batch)
+    return lm.loss_fn(params, cfg, batch)
+
+
+def prefill_fn(params, cfg: ModelConfig, batch):
+    if cfg.encoder_decoder:
+        memory = encdec.encode(params, cfg, batch["audio_embeds"])
+        logits = encdec.decode_train(params, cfg, memory, batch["tokens"])
+        return logits[:, -1]
+    return lm.prefill(params, cfg, batch)
+
+
+def init_cache(cfg: ModelConfig, b: int, s: int) -> PyTree:
+    if cfg.encoder_decoder:
+        return encdec.init_cache(cfg, b, s, s_enc=s)
+    return lm.init_cache(cfg, b, s)
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    if cfg.encoder_decoder:
+        return encdec.decode_step(params, cfg, cache, token, pos)
+    return lm.decode_step(params, cfg, cache, token, pos)
+
+
+# ---------------------------------------------------------------- batches --
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Length of the TEXT part of a training batch for this arch."""
+    if cfg.encoder_decoder:
+        return max(seq_len // cfg.dec_ratio, 8)
+    if cfg.frontend == "vision":
+        return max(seq_len - cfg.n_patches, 8)
+    return seq_len
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq_len: int) -> PyTree:
+    """ShapeDtypeStructs for one training batch (dry-run, no allocation)."""
+    t = _text_len(cfg, seq_len)
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, t + 1), jnp.int32)}
+    if cfg.encoder_decoder:
+        specs["audio_embeds"] = jax.ShapeDtypeStruct(
+            (batch, seq_len, cfg.frontend_dim), jnp.bfloat16)
+    if cfg.frontend == "vision":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.frontend_dim), jnp.bfloat16)
+    return specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, batch: int, seq_len: int) -> PyTree:
+    t = _text_len(cfg, seq_len)
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, t), jnp.int32)}
+    if cfg.encoder_decoder:
+        specs["audio_embeds"] = jax.ShapeDtypeStruct(
+            (batch, seq_len, cfg.frontend_dim), jnp.bfloat16)
+    if cfg.frontend == "vision":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.frontend_dim), jnp.bfloat16)
+    return specs
+
+
+def make_train_batch(key, cfg: ModelConfig, batch: int,
+                     seq_len: int) -> PyTree:
+    """Concrete random batch (smoke tests, examples)."""
+    t = _text_len(cfg, seq_len)
+    k1, k2 = jax.random.split(key)
+    out = {"tokens": jax.random.randint(k1, (batch, t + 1), 0, cfg.vocab)}
+    if cfg.encoder_decoder:
+        out["audio_embeds"] = jax.random.normal(
+            k2, (batch, seq_len, cfg.frontend_dim), jnp.float32
+        ).astype(cfg.param_dtype)
+    if cfg.frontend == "vision":
+        out["patch_embeds"] = jax.random.normal(
+            k2, (batch, cfg.n_patches, cfg.frontend_dim), jnp.float32
+        ).astype(cfg.param_dtype)
+    return out
+
+
+def sgd_train_step(params, cfg: ModelConfig, batch, lr: float = 1e-2):
+    """Paper-faithful local step: plain SGD (FL clients run SGD, lr 0.01).
+
+    cfg.grad_accum > 1 scans microbatches and accumulates f32 grads —
+    the standard memory lever when the global batch doesn't fit.
+    """
+    grad_fn = jax.value_and_grad(lambda p, b: loss_fn(p, cfg, b),
+                                 has_aux=True)
+    if cfg.grad_accum <= 1:
+        (loss, (nll, aux)), grads = grad_fn(params, batch)
+    else:
+        a = cfg.grad_accum
+
+        def resplit(x):
+            assert x.shape[0] % a == 0, (x.shape, a)
+            return x.reshape((a, x.shape[0] // a) + x.shape[1:])
+
+        micro = jax.tree.map(resplit, batch)
+
+        def acc_body(carry, mb):
+            g_sum, l_sum = carry
+            (l, _), g = grad_fn(params, mb)
+            g_sum = jax.tree.map(
+                lambda s, x: s + x.astype(jnp.float32), g_sum, g)
+            return (g_sum, l_sum + l), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g_sum, l_sum), _ = jax.lax.scan(acc_body, (g0, 0.0), micro)
+        grads = jax.tree.map(lambda g: g / a, g_sum)
+        loss = nll = l_sum / a
+        aux = jnp.zeros((), jnp.float32)
+    new_params = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype),
+                              params, grads)
+    return new_params, {"loss": loss, "nll": nll, "aux": aux}

@@ -1,0 +1,133 @@
+"""GQA attention (RoPE, optional qk-norm, causal / cross / decode modes).
+
+The einsum formulation keeps the KV-head axis explicit so GSPMD can shard
+heads over the ``model`` mesh axis; on TPU the inner product dispatches to
+the Pallas flash kernel (repro.kernels.flash_attention) — on CPU (dry-run &
+tests) it lowers the pure-jnp reference, which is the same math.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers
+from repro.models.layers import apply_mrope, apply_rope, dense_init, rope_freqs
+
+
+def attn_init(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    dh, h, kv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"wq": dense_init(k1, d, h * dh, cfg.param_dtype),
+         "wk": dense_init(k2, d, kv * dh, cfg.param_dtype),
+         "wv": dense_init(k3, d, kv * dh, cfg.param_dtype),
+         "wo": dense_init(k4, h * dh, d, cfg.param_dtype)}
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((dh,), cfg.param_dtype)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    """x: [B, S, d] -> q [B,S,H,D], k/v [B,S,KV,D] with RoPE applied."""
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = (x @ params["wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (x @ params["wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"])
+        k = layers.rms_norm(k, params["k_norm"])
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg, dh)
+        k = apply_mrope(k, positions, cfg, dh)
+    elif cfg.use_rope:
+        freqs = rope_freqs(cfg, dh)
+        q = apply_rope(q, positions, freqs)
+        k = apply_rope(k, positions, freqs)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, dh):
+    """[B,S,H,D] x [B,T,KV,D] -> [B,S,H,D]; H grouped onto KV heads."""
+    b, s, h, _ = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+def self_attention(params, cfg: ModelConfig, x, positions,
+                   causal: bool = True):
+    """Full-sequence self-attention (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    else:
+        mask = jnp.ones((s, s), dtype=bool)
+    if cfg.sliding_window and causal:
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        mask = mask & (i - j < cfg.sliding_window)
+    out = _sdpa(q, k, v, mask[None, None, None], cfg.head_dim)
+    return out.reshape(b, s, -1) @ params["wo"]
+
+
+def decode_attention(params, cfg: ModelConfig, x, cache_k, cache_v, pos):
+    """One-token decode against a preallocated KV cache.
+
+    x: [B, 1, d]; cache_k/v: [B, S, KV, D]; pos: scalar int (current index).
+    Returns (out [B, 1, d], new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    s_cache = cache_k.shape[1]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions, (3, b, 1))
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, pos, axis=1)
+    if cfg.sliding_window and cfg.sliding_window < s_cache:
+        # Sub-quadratic long-context decode: slice only the attended window
+        # out of the cache instead of masking the full sequence.
+        w = cfg.sliding_window
+        start = jnp.clip(pos - w + 1, 0, s_cache - w)
+        k_att = jax.lax.dynamic_slice_in_dim(cache_k, start, w, axis=1)
+        v_att = jax.lax.dynamic_slice_in_dim(cache_v, start, w, axis=1)
+        valid = (start + jnp.arange(w)) <= pos
+    else:
+        k_att, v_att = cache_k, cache_v
+        valid = jnp.arange(s_cache) <= pos
+    out = _sdpa(q, k_att, v_att, valid[None, None, None, None, :],
+                cfg.head_dim)
+    return out.reshape(b, 1, -1) @ params["wo"], cache_k, cache_v
+
+
+# ------------------------------------------------------- cross-attention --
+def cross_attn_init(key, cfg: ModelConfig):
+    return attn_init(key, cfg)
+
+
+def cross_attention(params, cfg: ModelConfig, x, memory):
+    """Decoder cross-attention over encoder memory (no RoPE, bidirectional)."""
+    b, s, _ = x.shape
+    t = memory.shape[1]
+    dh = cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = (memory @ params["wk"]).reshape(b, t, cfg.n_kv_heads, dh)
+    v = (memory @ params["wv"]).reshape(b, t, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"])
+        k = layers.rms_norm(k, params["k_norm"])
+    mask = jnp.ones((s, t), dtype=bool)[None, None, None]
+    out = _sdpa(q, k, v, mask, dh)
+    return out.reshape(b, s, -1) @ params["wo"]

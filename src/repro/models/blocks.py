@@ -1,0 +1,120 @@
+"""Residual blocks: dense (attn+mlp), moe (attn+moe), ssm (mamba2).
+
+Each block kind exposes init / apply / decode with a uniform signature so
+the LM assembly can scan over stacked per-layer params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mla, moe, ssm
+from repro.models.config import ModelConfig
+
+
+# ------------------------------------------------------------------ dense --
+def dense_block_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    k1, k2 = jax.random.split(key)
+    attn_p = (mla.mla_init(k1, cfg) if cfg.attention == "mla"
+              else attention.attn_init(k1, cfg))
+    return {"norm1": layers.norm_init(cfg, cfg.d_model),
+            "attn": attn_p,
+            "norm2": layers.norm_init(cfg, cfg.d_model),
+            "mlp": layers.mlp_init(k2, cfg, cfg.d_model,
+                                   d_ff or cfg.d_ff)}
+
+
+def dense_block_apply(params, cfg: ModelConfig, x, positions):
+    h = layers.norm_apply(cfg, params["norm1"], x)
+    if cfg.attention == "mla":
+        h = mla.mla_self_attention(params["attn"], cfg, h, positions)
+    else:
+        h = attention.self_attention(params["attn"], cfg, h, positions)
+    x = x + h
+    h = layers.norm_apply(cfg, params["norm2"], x)
+    x = x + layers.mlp_apply(cfg, params["mlp"], h)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def dense_block_decode(params, cfg: ModelConfig, x, cache, pos):
+    h = layers.norm_apply(cfg, params["norm1"], x)
+    if cfg.attention == "mla":
+        h, ckv, kpe = mla.mla_decode_attention(
+            params["attn"], cfg, h, cache["ckv"], cache["kpe"], pos)
+        new_cache = {"ckv": ckv, "kpe": kpe}
+    else:
+        h, ck, cv = attention.decode_attention(
+            params["attn"], cfg, h, cache["k"], cache["v"], pos)
+        new_cache = {"k": ck, "v": cv}
+    x = x + h
+    h = layers.norm_apply(cfg, params["norm2"], x)
+    x = x + layers.mlp_apply(cfg, params["mlp"], h)
+    return x, new_cache
+
+
+# -------------------------------------------------------------------- moe --
+def moe_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    attn_p = (mla.mla_init(k1, cfg) if cfg.attention == "mla"
+              else attention.attn_init(k1, cfg))
+    return {"norm1": layers.norm_init(cfg, cfg.d_model),
+            "attn": attn_p,
+            "norm2": layers.norm_init(cfg, cfg.d_model),
+            "moe": moe.moe_init(k2, cfg)}
+
+
+def moe_block_apply(params, cfg: ModelConfig, x, positions):
+    h = layers.norm_apply(cfg, params["norm1"], x)
+    if cfg.attention == "mla":
+        h = mla.mla_self_attention(params["attn"], cfg, h, positions)
+    else:
+        h = attention.self_attention(params["attn"], cfg, h, positions)
+    x = x + h
+    h = layers.norm_apply(cfg, params["norm2"], x)
+    y, aux = moe.moe_apply(params["moe"], cfg, h)
+    return x + y, aux
+
+
+def moe_block_decode(params, cfg: ModelConfig, x, cache, pos):
+    h = layers.norm_apply(cfg, params["norm1"], x)
+    if cfg.attention == "mla":
+        h, ckv, kpe = mla.mla_decode_attention(
+            params["attn"], cfg, h, cache["ckv"], cache["kpe"], pos)
+        new_cache = {"ckv": ckv, "kpe": kpe}
+    else:
+        h, ck, cv = attention.decode_attention(
+            params["attn"], cfg, h, cache["k"], cache["v"], pos)
+        new_cache = {"k": ck, "v": cv}
+    x = x + h
+    h = layers.norm_apply(cfg, params["norm2"], x)
+    y, _ = moe.moe_apply(params["moe"], cfg, h)
+    return x + y, new_cache
+
+
+# -------------------------------------------------------------------- ssm --
+def ssm_block_init(key, cfg: ModelConfig):
+    return {"norm": layers.norm_init(cfg, cfg.d_model),
+            "ssm": ssm.ssm_init(key, cfg)}
+
+
+def ssm_block_apply(params, cfg: ModelConfig, x, positions):
+    del positions
+    h = layers.norm_apply(cfg, params["norm"], x)
+    return x + ssm.ssm_forward(params["ssm"], cfg, h), \
+        jnp.zeros((), jnp.float32)
+
+
+def ssm_block_decode(params, cfg: ModelConfig, x, cache, pos):
+    del pos
+    h = layers.norm_apply(cfg, params["norm"], x)
+    y, conv_s, ssm_s = ssm.ssm_decode(params["ssm"], cfg, h,
+                                      cache["conv"], cache["state"])
+    return x + y, {"conv": conv_s, "state": ssm_s}
+
+
+BLOCK_INIT = {"dense": dense_block_init, "moe": moe_block_init,
+              "ssm": ssm_block_init}
+BLOCK_APPLY = {"dense": dense_block_apply, "moe": moe_block_apply,
+               "ssm": ssm_block_apply}
+BLOCK_DECODE = {"dense": dense_block_decode, "moe": moe_block_decode,
+                "ssm": ssm_block_decode}

@@ -1,0 +1,112 @@
+"""The paper's FL classification model: a small CNN, pure JAX.
+
+conv3x3(c1) -> relu -> maxpool2 -> conv3x3(c2) -> relu -> maxpool2
+-> dense(h) -> relu -> dense(10)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    height: int = 28
+    width: int = 28
+    channels: int = 1
+    # Default sizes picked for the 1-core CPU container; the paper only says
+    # "a CNN".  ``paper_scale()`` gives the conventional 16/32/64 variant.
+    c1: int = 8
+    c2: int = 16
+    hidden: int = 32
+    n_classes: int = 10
+
+    @property
+    def flat_dim(self) -> int:
+        return (self.height // 4) * (self.width // 4) * self.c2
+
+    @staticmethod
+    def paper_scale(height=28, width=28, channels=1) -> "CNNConfig":
+        return CNNConfig(height=height, width=width, channels=channels,
+                         c1=16, c2=32, hidden=64)
+
+
+def init(key: jax.Array, cfg: CNNConfig) -> PyTree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def he(k, shape, fan_in):
+        return jax.random.normal(k, shape) * jnp.sqrt(2.0 / fan_in)
+
+    return {
+        "conv1": {"w": he(k1, (3, 3, cfg.channels, cfg.c1), 9 * cfg.channels),
+                  "b": jnp.zeros((cfg.c1,))},
+        "conv2": {"w": he(k2, (3, 3, cfg.c1, cfg.c2), 9 * cfg.c1),
+                  "b": jnp.zeros((cfg.c2,))},
+        "fc1": {"w": he(k3, (cfg.flat_dim, cfg.hidden), cfg.flat_dim),
+                "b": jnp.zeros((cfg.hidden,))},
+        "fc2": {"w": he(k4, (cfg.hidden, cfg.n_classes), cfg.hidden),
+                "b": jnp.zeros((cfg.n_classes,))},
+    }
+
+
+def _conv(x, w, b):
+    """3x3 SAME conv via im2col + matmul.
+
+    Patch extraction is weight-free, so under a client-vmap (every client
+    carries its own weights after the first local step) it stays ONE fused
+    op and the contraction is a batched matmul — instead of the grouped
+    convolution XLA would otherwise emit, which is ~10x slower on CPU and
+    maps poorly to the TPU MXU.
+    """
+    kh, kw, cin, cout = w.shape
+    h, wd = x.shape[1], x.shape[2]
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    # Explicit shifted slices instead of conv_general_dilated_patches: the
+    # transpose (backward) of a slice is a pad, whereas the patches op
+    # differentiates into a scatter that is pathologically slow on CPU.
+    slices = [xp[:, i:i + h, j:j + wd, :]
+              for i in range(kh) for j in range(kw)]
+    patches = jnp.concatenate(slices, axis=-1)          # order (kh, kw, cin)
+    w_mat = w.reshape(kh * kw * cin, cout)
+    return patches @ w_mat + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply(params: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, H, W, C] -> logits [B, 10]."""
+    h = jax.nn.relu(_conv(x, params["conv1"]["w"], params["conv1"]["b"]))
+    h = _maxpool2(h)
+    h = jax.nn.relu(_conv(h, params["conv2"]["w"], params["conv2"]["b"]))
+    h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def loss_fn(params: PyTree, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logits = apply(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(params: PyTree, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(jnp.argmax(apply(params, x), axis=-1) == y)
+
+
+def n_params(params: PyTree) -> int:
+    return sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+
+
+def model_mbit(params: PyTree, bits_per_param: int = 32) -> float:
+    """Uplink payload S for the latency model (Eq. 5)."""
+    return n_params(params) * bits_per_param / 1e6

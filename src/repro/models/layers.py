@@ -1,0 +1,135 @@
+"""Shared neural building blocks: norms, MLPs, embeddings, RoPE / M-RoPE.
+
+Convention: every layer is (init(key, cfg, ...) -> params dict,
+apply(params, x, ...) -> y).  Stacked-layer weights carry a leading [L] axis
+and are consumed by ``lax.scan`` so HLO size is depth-independent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# -------------------------------------------------------------------- norm --
+def norm_init(cfg: ModelConfig, d: int):
+    if cfg.norm == "nonparametric_ln":
+        return {}                                   # OLMo: no scale, no bias
+    return {"scale": jnp.ones((d,), cfg.param_dtype)}
+
+
+def norm_apply(cfg: ModelConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "nonparametric_ln":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        return ((xf - mu) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + 1e-6)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) *
+            scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- MLP --
+def mlp_init(key, cfg: ModelConfig, d: int, d_ff: int):
+    if cfg.mlp == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"gate": dense_init(k1, d, d_ff, cfg.param_dtype),
+                "up": dense_init(k2, d, d_ff, cfg.param_dtype),
+                "down": dense_init(k3, d_ff, d, cfg.param_dtype)}
+    k1, k2 = jax.random.split(key)
+    return {"up": dense_init(k1, d, d_ff, cfg.param_dtype),
+            "down": dense_init(k2, d_ff, d, cfg.param_dtype)}
+
+
+def mlp_apply(cfg: ModelConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    else:
+        h = jax.nn.gelu(x @ params["up"])
+    return h @ params["down"]
+
+
+# -------------------------------------------------------------- embeddings --
+def embed_init(key, cfg: ModelConfig):
+    scale = cfg.d_model ** -0.5
+    tbl = jax.random.normal(key, (cfg.padded_vocab, cfg.d_model)) * scale
+    return {"table": tbl.astype(cfg.param_dtype)}
+
+
+def embed_apply(params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["table"][tokens]
+
+
+def unembed_logits(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Tied unembedding on the PADDED vocab; pad ids masked to -inf-ish."""
+    logits = x @ params["table"].T                       # [..., padded_vocab]
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, jnp.asarray(-1e9, logits.dtype), logits)
+    return logits
+
+
+# -------------------------------------------------------------------- RoPE --
+def rope_freqs(cfg: ModelConfig, dim: int) -> jnp.ndarray:
+    half = dim // 2
+    return cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               freqs: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable); rotate pairs."""
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, cfg: ModelConfig,
+                dim: int) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: rotary dims split into (t, h, w) sections, each
+    rotated by its own position stream.
+
+    x: [B, S, H, D]; positions3: [3, B, S] (temporal, height, width ids).
+    """
+    half = dim // 2
+    sec = cfg.mrope_sections
+    assert sum(sec) == half, (sec, half)
+    freqs = rope_freqs(cfg, dim)                          # [half]
+    # per-dim position id: dims in section j use positions3[j] (static map)
+    import numpy as np
+    sec_id = jnp.asarray(np.repeat(np.arange(3), np.asarray(sec)))  # [half]
+    pos = positions3[sec_id]                              # [half, B, S]
+    angles = jnp.transpose(pos, (1, 2, 0)).astype(jnp.float32) * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- loss --
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token NLL in f32; labels [B, T] int32, logits [B, T, V]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,295 @@
+"""Decoder-only LM assembly for dense / MoE / SSM / hybrid / VLM archs.
+
+All per-layer weights are stacked with a leading [L] axis and consumed by
+``lax.scan`` — HLO size and compile time are depth-independent, which is
+what makes 95-layer dry-runs tractable and is the idiomatic TPU form.
+
+Zamba2-style hybrids scan GROUPS of ``shared_attn_every`` Mamba2 layers and
+apply the single SHARED attention block between groups (one set of weights,
+reused — the Zamba trick).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks, layers
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def _scan(cfg: ModelConfig, body, carry, xs):
+    """lax.scan honouring cfg.scan_unroll (clamped to the stack length)."""
+    length = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(body, carry, xs,
+                        unroll=max(1, min(cfg.scan_unroll, length)))
+
+
+# ------------------------------------------------------------------- init --
+def _stacked_init(key, n: int, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    ks = jax.random.split(key, 6)
+    params: dict = {"embed": layers.embed_init(ks[0], cfg),
+                    "final_norm": layers.norm_init(cfg, cfg.d_model)}
+    kinds = cfg.layer_kinds()
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    main_kind = kinds[-1]
+    params["layers"] = _stacked_init(
+        ks[1], n_scan, lambda k: blocks.BLOCK_INIT[main_kind](k, cfg))
+    if cfg.first_k_dense:
+        params["first_dense"] = [
+            blocks.dense_block_init(jax.random.fold_in(ks[2], i), cfg,
+                                    d_ff=cfg.d_ff_dense or cfg.d_ff)
+            for i in range(cfg.first_k_dense)]
+    if cfg.arch_type == "hybrid":
+        params["shared"] = blocks.dense_block_init(ks[3], cfg)
+    if cfg.frontend == "vision":
+        params["patch_proj"] = layers.dense_init(
+            ks[4], cfg.frontend_dim, cfg.d_model, cfg.param_dtype)
+    return params
+
+
+def n_params(params: PyTree) -> int:
+    return sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+
+
+# -------------------------------------------------------------- positions --
+def grid_side(cfg: ModelConfig) -> int:
+    side = int(round(cfg.n_patches ** 0.5))
+    assert side * side == cfg.n_patches, "n_patches must be square"
+    return side
+
+
+def build_positions(cfg: ModelConfig, b: int, s: int) -> jnp.ndarray:
+    """[B,S] (plain RoPE) or [3,B,S] (M-RoPE with a patch-grid prefix)."""
+    if not cfg.mrope:
+        return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    side = grid_side(cfg)
+    npch = cfg.n_patches
+    t_img = jnp.zeros((npch,), jnp.int32)
+    h_img = jnp.repeat(jnp.arange(side, dtype=jnp.int32), side)
+    w_img = jnp.tile(jnp.arange(side, dtype=jnp.int32), side)
+    n_text = s - npch
+    text = side + jnp.arange(n_text, dtype=jnp.int32)
+    pos3 = jnp.stack([jnp.concatenate([t_img, text]),
+                      jnp.concatenate([h_img, text]),
+                      jnp.concatenate([w_img, text])])      # [3, S]
+    return jnp.broadcast_to(pos3[:, None, :], (3, b, s))
+
+
+# ---------------------------------------------------------------- forward --
+def _embed_sequence(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    """Token (+ patch) embedding -> [B, S, d]."""
+    # callers pass {"tokens": [B, T+1]}: inputs = tokens[:, :-1]
+    text_in = batch["tokens"][:, :-1]
+    x = layers.embed_apply(params["embed"], text_in)
+    if cfg.frontend == "vision":
+        patches = batch["patch_embeds"].astype(cfg.param_dtype) \
+            @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def _run_layers(params, cfg: ModelConfig, x, positions):
+    """Scan the layer stack (plus hybrid shared-attn insertions)."""
+    kinds = cfg.layer_kinds()
+    main_kind = kinds[-1]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for p_dense in params.get("first_dense", []):
+        x, aux = blocks.dense_block_apply(p_dense, cfg, x, positions)
+        aux_total = aux_total + aux
+
+    apply_fn = blocks.BLOCK_APPLY[main_kind]
+
+    def block(layer_params, h):
+        if cfg.act_seq_shard:
+            # sequence-parallel residual stream: batch over data axes,
+            # sequence over the tensor axis — the layer-boundary residual
+            # is what remat stores, so this divides the live-activation
+            # footprint by the model-axis size.
+            h = jax.lax.with_sharding_constraint(
+                h, jax.sharding.PartitionSpec(cfg.dp_axes, "model", None))
+        return apply_fn(layer_params, cfg, h, positions)
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    def body(carry, layer_params):
+        h, aux_sum = carry
+        h, aux = block(layer_params, h)
+        return (h, aux_sum + aux), None
+
+    if cfg.arch_type == "hybrid" and cfg.shared_attn_every:
+        every = cfg.shared_attn_every
+        n_scan = cfg.n_layers
+        n_groups, tail = divmod(n_scan, every)
+        grouped = jax.tree.map(
+            lambda w: w[: n_groups * every].reshape(
+                (n_groups, every) + w.shape[1:]), params["layers"])
+        tail_p = jax.tree.map(lambda w: w[n_scan - tail:], params["layers"])
+
+        def group_body(carry, gparams):
+            (h, aux_sum), _ = _scan(cfg, body, carry, gparams)
+            h, aux = blocks.dense_block_apply(params["shared"], cfg, h,
+                                              positions)
+            return (h, aux_sum + aux), None
+
+        (x, aux_total), _ = _scan(cfg, group_body, (x, aux_total), grouped)
+        if tail:
+            (x, aux_total), _ = _scan(cfg, body, (x, aux_total), tail_p)
+    else:
+        (x, aux_total), _ = _scan(cfg, body, (x, aux_total),
+                                  params["layers"])
+    return x, aux_total
+
+
+def forward(params, cfg: ModelConfig, batch) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """batch {"tokens": [B, T+1], ["patch_embeds"]} -> (logits [B,S,V], aux)."""
+    x = _embed_sequence(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = build_positions(cfg, b, s)
+    x, aux = _run_layers(params, cfg, x, positions)
+    x = layers.norm_apply(cfg, params["final_norm"], x)
+    logits = layers.unembed_logits(params["embed"], x, cfg)
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["tokens"][:, 1:]
+    if cfg.frontend == "vision":
+        # only text positions carry loss; logits include the patch prefix
+        n_text = labels.shape[1]
+        logits = logits[:, -n_text:]
+    nll = layers.cross_entropy(logits, labels.astype(jnp.int32))
+    return nll + aux, (nll, aux)
+
+
+# ------------------------------------------------------------------ cache --
+def init_cache(cfg: ModelConfig, b: int, s: int) -> PyTree:
+    """Preallocated decode cache for seq capacity ``s``."""
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    kinds = cfg.layer_kinds()
+    main_kind = kinds[-1]
+    dt = cfg.param_dtype
+
+    def attn_cache(lead):
+        if cfg.attention == "mla":
+            return {"ckv": jnp.zeros(lead + (b, s, cfg.kv_lora_rank), dt),
+                    "kpe": jnp.zeros(lead + (b, s, 1, cfg.qk_rope_head_dim),
+                                     dt)}
+        return {"k": jnp.zeros(lead + (b, s, cfg.n_kv_heads, cfg.head_dim),
+                               dt),
+                "v": jnp.zeros(lead + (b, s, cfg.n_kv_heads, cfg.head_dim),
+                               dt)}
+
+    def ssm_cache(lead):
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        return {"conv": jnp.zeros(lead + (b, cfg.ssm_conv_width - 1, conv_ch),
+                                  dt),
+                "state": jnp.zeros(lead + (b, cfg.ssm_heads, cfg.ssm_state,
+                                           cfg.ssm_head_dim), jnp.float32)}
+
+    cache: dict = {}
+    if main_kind == "ssm":
+        cache["layers"] = ssm_cache((cfg.n_layers,))
+        if cfg.arch_type == "hybrid" and cfg.shared_attn_every:
+            n_groups = cfg.n_layers // cfg.shared_attn_every
+            cache["shared"] = attn_cache((n_groups,))
+    else:
+        cache["layers"] = attn_cache((n_scan,))
+    if cfg.first_k_dense:
+        cache["first_dense"] = [attn_cache(())
+                                for _ in range(cfg.first_k_dense)]
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: PyTree, token: jnp.ndarray,
+                pos: jnp.ndarray):
+    """One decode step.  token [B,1] int32; pos scalar int32.
+
+    Returns (logits [B, V], new_cache).
+    """
+    x = layers.embed_apply(params["embed"], token)
+    kinds = cfg.layer_kinds()
+    main_kind = kinds[-1]
+    decode_fn = blocks.BLOCK_DECODE[main_kind]
+    new_cache: dict = {}
+
+    if cfg.first_k_dense:
+        new_fd = []
+        for p_dense, c in zip(params["first_dense"], cache["first_dense"]):
+            x, c2 = blocks.dense_block_decode(p_dense, cfg, x, c, pos)
+            new_fd.append(c2)
+        new_cache["first_dense"] = new_fd
+
+    def body(h, inp):
+        layer_params, layer_cache = inp
+        h, c2 = decode_fn(layer_params, cfg, h, layer_cache, pos)
+        return h, c2
+
+    if cfg.arch_type == "hybrid" and cfg.shared_attn_every:
+        every = cfg.shared_attn_every
+        n_groups, tail = divmod(cfg.n_layers, every)
+        grouped_p = jax.tree.map(
+            lambda w: w[: n_groups * every].reshape(
+                (n_groups, every) + w.shape[1:]), params["layers"])
+        grouped_c = jax.tree.map(
+            lambda w: w[: n_groups * every].reshape(
+                (n_groups, every) + w.shape[1:]), cache["layers"])
+        tail_p = jax.tree.map(lambda w: w[cfg.n_layers - tail:],
+                              params["layers"])
+        tail_c = jax.tree.map(lambda w: w[cfg.n_layers - tail:],
+                              cache["layers"])
+
+        def group_body(h, inp):
+            gparams, gcache, shared_c = inp
+            h, new_gc = _scan(cfg, body, h, (gparams, gcache))
+            h, new_shared = blocks.dense_block_decode(params["shared"], cfg,
+                                                      h, shared_c, pos)
+            return h, (new_gc, new_shared)
+
+        x, (new_gc, new_shared) = _scan(
+            cfg, group_body, x, (grouped_p, grouped_c, cache["shared"]))
+        new_lc = jax.tree.map(
+            lambda g: g.reshape((n_groups * every,) + g.shape[2:]), new_gc)
+        if tail:
+            x, new_tail = _scan(cfg, body, x, (tail_p, tail_c))
+            new_lc = jax.tree.map(
+                lambda a, t: jnp.concatenate([a, t], axis=0), new_lc,
+                new_tail)
+        new_cache["layers"] = new_lc
+        new_cache["shared"] = new_shared
+    else:
+        x, new_lc = _scan(cfg, body, x, (params["layers"],
+                                 cache["layers"]))
+        new_cache["layers"] = new_lc
+
+    x = layers.norm_apply(cfg, params["final_norm"], x)
+    logits = layers.unembed_logits(params["embed"], x[:, 0], cfg)
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Prefill forward: logits for the whole prompt (compute profile of
+    inference-prefill; the serving example fills its cache by decode over
+    the prompt for small models)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens)
+    if cfg.frontend == "vision":
+        patches = batch["patch_embeds"].astype(cfg.param_dtype) \
+            @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+        s = x.shape[1]
+    positions = build_positions(cfg, b, s)
+    x, _ = _run_layers(params, cfg, x, positions)
+    x = layers.norm_apply(cfg, params["final_norm"], x)
+    return layers.unembed_logits(params["embed"], x[:, -1], cfg)

@@ -1,0 +1,123 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed into a rank-``kv_lora_rank`` latent c_kv plus a shared
+rotary key k_pe; the decode cache stores ONLY (c_kv, k_pe) — that is the
+paper's memory win, and exactly what we cache here.
+
+Shapes (per layer):
+  wq_a  [d, q_lora]        wq_b [q_lora, H*(nope+rope)]
+  wkv_a [d, kv_lora+rope]  wkv_b [kv_lora, H*(nope+v)]
+  wo    [H*v, d]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm, rope_freqs
+
+
+def mla_init(key, cfg: ModelConfig):
+    h = cfg.n_heads
+    nope, rope, v = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], cfg.d_model, cfg.q_lora_rank,
+                           cfg.param_dtype),
+        "q_norm": jnp.ones((cfg.q_lora_rank,), cfg.param_dtype),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, h * (nope + rope),
+                           cfg.param_dtype),
+        "wkv_a": dense_init(ks[2], cfg.d_model, cfg.kv_lora_rank + rope,
+                            cfg.param_dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), cfg.param_dtype),
+        "wkv_b": dense_init(ks[3], cfg.kv_lora_rank, h * (nope + v),
+                            cfg.param_dtype),
+        "wo": dense_init(ks[4], h * v, cfg.d_model, cfg.param_dtype),
+    }
+
+
+def _queries(params, cfg: ModelConfig, x, positions):
+    b, s, _ = x.shape
+    h, nope, rope = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = rms_norm(x @ params["wq_a"], params["q_norm"]) @ params["wq_b"]
+    q = q.reshape(b, s, h, nope + rope)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, positions, rope_freqs(cfg, rope))
+    return q_nope, q_pe
+
+
+def _latents(params, cfg: ModelConfig, x, positions):
+    """x -> (c_kv [B,S,R], k_pe [B,S,1,rope]) — the decode cache contents."""
+    kv_a = x @ params["wkv_a"]
+    c_kv = rms_norm(kv_a[..., :cfg.kv_lora_rank], params["kv_norm"])
+    k_pe = kv_a[..., None, cfg.kv_lora_rank:]
+    k_pe = apply_rope(k_pe, positions, rope_freqs(cfg, cfg.qk_rope_head_dim))
+    return c_kv, k_pe
+
+
+def _attend(params, cfg: ModelConfig, q_nope, q_pe, c_kv, k_pe, mask):
+    """Latent-space attention: scores from (q_nope . W_uk c) + (q_pe . k_pe).
+
+    We fold wkv_b's key half into the query ("absorbed" formulation) so the
+    cache never needs expanding to per-head keys — the decode-time FLOPs and
+    bytes stay proportional to kv_lora_rank, as in the paper.
+    """
+    b, s, h, nope = q_nope.shape
+    rope, v = cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    wkv_b = params["wkv_b"].reshape(r, h, nope + v)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+    # absorb: q_lat [B,S,H,R] = q_nope . w_uk^T
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv) +
+              jnp.einsum("bshn,btkn->bhst", q_pe,
+                         jnp.broadcast_to(k_pe, k_pe.shape))
+              ).astype(jnp.float32)
+    scores = scores / jnp.sqrt(nope + rope).astype(jnp.float32)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv)
+    out = jnp.einsum("bshr,rhv->bshv", out_lat, w_uv)
+    return out.reshape(b, s, h * v) @ params["wo"]
+
+
+def mla_self_attention(params, cfg: ModelConfig, x, positions,
+                       causal: bool = True):
+    b, s, _ = x.shape
+    q_nope, q_pe = _queries(params, cfg, x, positions)
+    c_kv, k_pe = _latents(params, cfg, x, positions)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool)) if causal else \
+        jnp.ones((s, s), dtype=bool)
+    if cfg.sliding_window and causal:
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        mask = mask & (i - j < cfg.sliding_window)
+    return _attend(params, cfg, q_nope, q_pe, c_kv, k_pe,
+                   mask[None, None])
+
+
+def mla_decode_attention(params, cfg: ModelConfig, x, cache_ckv, cache_kpe,
+                         pos):
+    """x: [B,1,d]; cache_ckv: [B,S,R]; cache_kpe: [B,S,1,rope]."""
+    b = x.shape[0]
+    s_cache = cache_ckv.shape[1]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_pe = _queries(params, cfg, x, positions)
+    c_new, kpe_new = _latents(params, cfg, x, positions)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_new, pos,
+                                                    axis=1)
+    cache_kpe = jax.lax.dynamic_update_slice_in_dim(cache_kpe, kpe_new, pos,
+                                                    axis=1)
+    if cfg.sliding_window and cfg.sliding_window < s_cache:
+        w = cfg.sliding_window
+        start = jnp.clip(pos - w + 1, 0, s_cache - w)
+        ckv = jax.lax.dynamic_slice_in_dim(cache_ckv, start, w, axis=1)
+        kpe = jax.lax.dynamic_slice_in_dim(cache_kpe, start, w, axis=1)
+        valid = (start + jnp.arange(w)) <= pos
+    else:
+        ckv, kpe = cache_ckv, cache_kpe
+        valid = jnp.arange(s_cache) <= pos
+    out = _attend(params, cfg, q_nope, q_pe, ckv, kpe,
+                  valid[None, None, None, :])
+    return out, cache_ckv, cache_kpe

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts layer with grouped capacity-based einsum dispatch.
+
+TPU-native design (Mesh-TensorFlow / MaxText lineage): tokens are routed in
+GROUPS of ``moe_group_size`` so the dispatch/combine one-hots stay
+[G, Tg, E, C] with C = Tg*k/E*cf — bounded transient memory — and the expert
+FFN is a batched einsum whose expert axis shards over the ``model`` mesh
+axis (GSPMD inserts the all-to-alls).  Supports top-k routing, capacity
+dropping, shared experts (DeepSeek-V2) and the standard load-balance aux
+loss (Shazeer et al.; coefficient cfg.router_aux_coef).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+def moe_init(key, cfg: ModelConfig):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    scale = (2.0 / (d + f)) ** 0.5
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "gate": (jax.random.normal(ks[1], (e, d, f)) * scale
+                 ).astype(cfg.param_dtype),
+        "up": (jax.random.normal(ks[2], (e, d, f)) * scale
+               ).astype(cfg.param_dtype),
+        "down": (jax.random.normal(ks[3], (e, f, d)) * scale
+                 ).astype(cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        from repro.models.layers import mlp_init
+        p["shared"] = mlp_init(ks[4], cfg, d,
+                               cfg.n_shared_experts * cfg.d_ff_expert)
+    return p
+
+
+def _capacity(cfg: ModelConfig, tg: int) -> int:
+    c = int(tg * cfg.moe_top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return min(max(c, cfg.moe_top_k), tg)
+
+
+def moe_apply(params, cfg: ModelConfig, x: jnp.ndarray):
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    t = b * s
+    tg = min(cfg.moe_group_size, t)
+    g = t // tg
+    xg = x.reshape(g, tg, d)
+
+    logits = (xg.astype(jnp.float32) @ params["router"])       # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                     # [G,Tg,k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (fraction-of-tokens * mean-prob per expert)
+    me = jnp.mean(probs, axis=(0, 1))                          # [E]
+    onehot_top1 = jax.nn.one_hot(top_i[..., 0], e)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+
+    cap = _capacity(cfg, tg)
+    # slot position of each (token, choice) within its expert, by priority
+    sel = jax.nn.one_hot(top_i, e, dtype=jnp.int32)            # [G,Tg,k,E]
+    sel_flat = sel.reshape(g, tg * k, e)
+    pos = jnp.cumsum(sel_flat, axis=1) - 1                     # [G,Tg*k,E]
+    pos = pos.reshape(g, tg, k, e)
+    slot = jnp.sum(pos * sel, axis=-1)                         # [G,Tg,k]
+    keep = slot < cap
+
+    if cfg.moe_dispatch == "gather":
+        # Gather/scatter dispatch: never materializes the [G,Tg,E,C]
+        # one-hots — indices are [G,E,C] ints, data moves once.
+        gi = jnp.arange(g, dtype=jnp.int32)[:, None, None]     # [G,1,1]
+        ti = jnp.broadcast_to(jnp.arange(tg, dtype=jnp.int32)[None, :, None],
+                              (g, tg, k))
+        safe_slot = jnp.where(keep, slot, cap)                 # cap = dropped
+        token_idx = jnp.full((g, e, cap), tg, jnp.int32)       # tg = padding
+        token_idx = token_idx.at[
+            jnp.broadcast_to(gi, (g, tg, k)), top_i, safe_slot
+        ].set(ti, mode="drop")                                 # [G,E,C]
+        xg_pad = jnp.concatenate(
+            [xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)      # pad row
+        xin = jnp.take_along_axis(
+            xg_pad[:, :, None, :],
+            token_idx.reshape(g, e * cap)[:, :, None, None], axis=1
+        ).reshape(g, e, cap, d)                                # [G,E,C,d]
+    else:
+        # dispatch [G,Tg,E,C] one-hot einsum (Mesh-TF lineage)
+        slot_oh = jax.nn.one_hot(jnp.where(keep, slot, cap), cap,
+                                 dtype=cfg.param_dtype)        # [G,Tg,k,C]
+        exp_oh = jax.nn.one_hot(top_i, e, dtype=cfg.param_dtype)
+        dispatch = jnp.einsum(
+            "gtke,gtkc->gtec", exp_oh,
+            slot_oh * keep[..., None].astype(cfg.param_dtype))
+        xin = jnp.einsum("gtec,gtd->gecd", dispatch, xg)       # [G,E,C,d]
+
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, params["gate"]))
+         * jnp.einsum("gecd,edf->gecf", xin, params["up"]))
+    xout = jnp.einsum("gecf,efd->gecd", h, params["down"])     # [G,E,C,d]
+
+    if cfg.moe_dispatch == "gather":
+        # combine: gather each (token, choice)'s expert output and blend
+        flat = xout.reshape(g, e * cap, d)
+        idx = (top_i * cap + jnp.minimum(slot, cap - 1))       # [G,Tg,k]
+        vals = jnp.take_along_axis(
+            flat[:, :, None, :], idx.reshape(g, tg * k)[:, :, None, None],
+            axis=1).reshape(g, tg, k, d)
+        w = (top_p * keep).astype(vals.dtype)                  # [G,Tg,k]
+        y = jnp.einsum("gtkd,gtk->gtd", vals, w)
+    else:
+        combine = jnp.einsum("gtke,gtkc,gtk->gtec", exp_oh, slot_oh,
+                             (top_p * keep).astype(cfg.param_dtype))
+        y = jnp.einsum("gtec,gecd->gtd", combine, xout)
+
+    if cfg.n_shared_experts:
+        from repro.models.layers import mlp_apply
+        y = y + mlp_apply(cfg, params["shared"], xg)
+    return y.reshape(b, s, d), aux

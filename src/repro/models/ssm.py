@@ -1,0 +1,183 @@
+"""Mamba2 block via SSD — state-space duality (arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk attention-like
+matmuls (MXU-friendly, Q x Q blocks) + an inter-chunk sequential state pass
+(lax.scan over chunks).  Decode is the O(1) recurrent update on the
+[B, H, P, N] state.  On TPU the intra-chunk part dispatches to the Pallas
+``ssd_scan`` kernel; the jnp path below is the oracle and the dry-run graph.
+
+Per-layer params:
+  in_proj [d, 2*d_inner + 2*G*N + H]   (z | x | B | C | dt)
+  conv_w  [w, d_inner + 2*G*N]  conv_b [d_inner + 2*G*N]
+  A_log [H]  D [H]  dt_bias [H]  norm [d_inner]  out_proj [d_inner, d]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+NGROUPS = 1  # B/C shared across heads (Mamba2 default ngroups=1)
+
+
+def ssm_init(key, cfg: ModelConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * NGROUPS * n
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (h,)) *
+                 (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * NGROUPS * n + h,
+                              cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch))
+                   * 0.1).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.param_dtype),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "norm": jnp.ones((di,), cfg.param_dtype),
+        "out_proj": dense_init(ks[3], di, d, cfg.param_dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * NGROUPS * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(cfg: ModelConfig, xbc, conv_w, conv_b):
+    """Depthwise causal conv over the sequence (width w), via shifted adds."""
+    w = cfg.ssm_conv_width
+    out = jnp.zeros_like(xbc)
+    for i in range(w):
+        shift = w - 1 - i
+        shifted = jnp.pad(xbc, ((0, 0), (shift, 0), (0, 0)))[:, :xbc.shape[1]]
+        out = out + shifted * conv_w[i]
+    return jax.nn.silu(out + conv_b)
+
+
+def _gated_norm(y, z, scale):
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + 1e-6) *
+            scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """The SSD scan: x [B,S,H,P], dt [B,S,H], A [H], B/C [B,S,G,N].
+
+    Returns y [B,S,H,P].  f32 state math throughout.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = chunk
+    nc = s // q
+    assert s % q == 0, (s, q)
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, q, -1, n)   # [b,nc,q,G,n]
+    Cf = C.astype(jnp.float32).reshape(b, nc, q, -1, n)
+    Bf = jnp.broadcast_to(Bf, (b, nc, q, h, n)) if Bf.shape[3] == 1 else Bf
+    Cf = jnp.broadcast_to(Cf, (b, nc, q, h, n)) if Cf.shape[3] == 1 else Cf
+
+    dA = dtf * A                                            # [b,nc,q,h]
+    seg = jnp.cumsum(dA, axis=2)                            # running log-decay
+    # intra-chunk ("diagonal block"): attention-like causal matmul
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]     # [b,nc,qi,qj,h]
+    causal = jnp.tril(jnp.ones((q, q), dtype=bool))[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cf, Bf) * decay
+    y_diag = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dtf, xf)
+
+    # per-chunk input state contribution
+    tail = seg[:, :, -1:, :] - seg                          # decay to chunk end
+    contrib = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp",
+                         Bf * jnp.exp(tail)[..., None], dtf, xf)
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                 # [b,nc,h]
+
+    # inter-chunk sequential state pass
+    def body(state, inp):
+        contrib_c, decay_c = inp
+        out_state = state
+        new_state = state * decay_c[..., None, None] + contrib_c
+        return new_state, out_state
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(contrib, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # [b,nc,h,n,p]
+
+    # off-diagonal: contribution of carried-in state to each position
+    y_off = jnp.einsum("bcihn,bchnp->bcihp",
+                       Cf * jnp.exp(seg)[..., None], prev_states)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y
+
+
+def ssm_forward(params, cfg: ModelConfig, x):
+    """Full-sequence Mamba2 block: x [B,S,d] -> y [B,S,d]."""
+    b, s, _ = x.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xbc, dt = _split_proj(cfg, x @ params["in_proj"])
+    xbc = _causal_conv(cfg, xbc, params["conv_w"], params["conv_b"])
+    di = cfg.d_inner
+    xs = xbc[..., :di].reshape(b, s, h, p)
+    Bm = xbc[..., di:di + NGROUPS * n].reshape(b, s, NGROUPS, n)
+    Cm = xbc[..., di + NGROUPS * n:].reshape(b, s, NGROUPS, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    # pad the sequence to a chunk multiple (tail padding is causal-safe:
+    # padded x is zero so it contributes nothing to states or outputs)
+    q = cfg.ssm_chunk
+    pad = (-s) % q
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y = ssd_chunked(xs, dt, A, Bm, Cm, q)[:, :s]
+    xs = xs[:, :s]
+    y = y + params["D"][:, None] * xs.astype(jnp.float32)
+    y = _gated_norm(y.reshape(b, s, di).astype(x.dtype), z, params["norm"])
+    return y @ params["out_proj"]
+
+
+def ssm_decode(params, cfg: ModelConfig, x, conv_state, ssm_state):
+    """One-token recurrent step.
+
+    x: [B,1,d]; conv_state: [B, w-1, conv_ch]; ssm_state: [B,H,N,P].
+    Returns (y [B,1,d], new_conv_state, new_ssm_state).
+    """
+    b = x.shape[0]
+    h, p, n, di = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.d_inner
+    z, xbc, dt = _split_proj(cfg, x[:, 0] @ params["in_proj"])  # [B, .]
+    # causal conv via stored last w-1 inputs
+    hist = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # [B,w,ch]
+    conv_out = jnp.einsum("bwc,wc->bc", hist, params["conv_w"]) \
+        + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv_state = hist[:, 1:]
+
+    xs = conv_out[..., :di].reshape(b, h, p)
+    Bm = conv_out[..., di:di + NGROUPS * n].reshape(b, NGROUPS, n)
+    Cm = conv_out[..., di + NGROUPS * n:].reshape(b, NGROUPS, n)
+    Bm = jnp.broadcast_to(Bm, (b, h, n)) if NGROUPS == 1 else Bm
+    Cm = jnp.broadcast_to(Cm, (b, h, n)) if NGROUPS == 1 else Cm
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                      # [B,H]
+    xf = xs.astype(jnp.float32)
+    new_state = (ssm_state * dA[..., None, None] +
+                 jnp.einsum("bhn,bh,bhp->bhnp", Bm.astype(jnp.float32),
+                            dt, xf))
+    y = jnp.einsum("bhn,bhnp->bhp", Cm.astype(jnp.float32), new_state)
+    y = y + params["D"][:, None] * xf
+    y = _gated_norm(y.reshape(b, di).astype(x.dtype), z, params["norm"])
+    return (y @ params["out_proj"])[:, None], new_conv_state, new_state

@@ -1,0 +1,7 @@
+"""Pure-JAX optimizers (optax-style API, built from scratch — no optax)."""
+from repro.optim.optimizers import (Optimizer, adamw, sgd,
+                                    clip_by_global_norm, apply_updates,
+                                    cosine_warmup_schedule)
+
+__all__ = ["Optimizer", "adamw", "sgd", "clip_by_global_norm",
+           "apply_updates", "cosine_warmup_schedule"]

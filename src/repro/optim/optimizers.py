@@ -1,0 +1,137 @@
+"""Optimizers as pure pytree transforms.
+
+API mirrors optax (init/update returning (updates, new_state)) so the training
+loops stay conventional, but everything is implemented here from first
+principles — the container ships no optax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _zeros_like_tree(params: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: x * scale, tree)
+
+
+# ------------------------------------------------------------------- SGD ---
+class SGDState(NamedTuple):
+    momentum: PyTree
+    count: jnp.ndarray
+
+
+def sgd(lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+        momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """SGD with optional (Nesterov) momentum.  Paper uses lr=0.01, plain."""
+
+    def lr_at(count):
+        return lr(count) if callable(lr) else jnp.asarray(lr)
+
+    def init(params):
+        return SGDState(momentum=_zeros_like_tree(params),
+                        count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        if momentum == 0.0:
+            new_m = state.momentum
+            direction = grads
+        else:
+            new_m = jax.tree.map(lambda m, g: momentum * m + g,
+                                 state.momentum, grads)
+            if nesterov:
+                direction = jax.tree.map(lambda m, g: momentum * m + g,
+                                         new_m, grads)
+            else:
+                direction = new_m
+        step = lr_at(state.count)
+        updates = jax.tree.map(lambda d: -step * d, direction)
+        return updates, SGDState(momentum=new_m, count=state.count + 1)
+
+    return Optimizer(init=init, update=update)
+
+
+# ----------------------------------------------------------------- AdamW ---
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jnp.ndarray
+
+
+def adamw(lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    """AdamW with bias correction; optimizer state kept in f32."""
+
+    def lr_at(count):
+        return lr(count) if callable(lr) else jnp.asarray(lr)
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(mu=jax.tree.map(f32, params),
+                          nu=jax.tree.map(f32, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        count = state.count + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state.nu, g32)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        step = lr_at(state.count)
+
+        def upd(m, v, p):
+            mhat = m / c1
+            vhat = v / c2
+            u = -step * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init=init, update=update)
+
+
+# -------------------------------------------------------------- schedules --
+def cosine_warmup_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int,
+                           final_frac: float = 0.1) -> Callable:
+    def sched(count):
+        count = count.astype(jnp.float32)
+        warm = peak_lr * count / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((count - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(count < warmup_steps, warm, peak_lr * cos)
+
+    return sched

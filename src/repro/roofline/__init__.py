@@ -1,0 +1,1 @@
+"""Roofline analysis: cost/memory/collective terms from compiled dry-runs."""

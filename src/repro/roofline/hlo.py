@@ -1,0 +1,51 @@
+"""Parse optimized (post-SPMD) HLO text for collective traffic.
+
+``compiled.as_text()`` is the per-partition module, so shapes are per-device.
+Optimized HLO prints operands as bare value references (no inline types), so
+we measure each collective by its RESULT shape — the standard wire-traffic
+proxy (all-gather result == bytes assembled per device; all-reduce result ==
+bytes reduced; all-to-all result == bytes exchanged).  Async pairs are
+counted once (``-start`` carries the shape; ``-done`` is skipped).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<result>.*?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """{op: {"count": int, "result_bytes": int}} + "total_bytes"."""
+    stats: dict = defaultdict(lambda: {"count": 0, "result_bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        nbytes = sum(_shape_bytes(t, d)
+                     for t, d in _SHAPE_RE.findall(m.group("result")))
+        op = m.group("op")
+        stats[op]["count"] += 1
+        stats[op]["result_bytes"] += nbytes
+    out = {k: dict(v) for k, v in stats.items()}
+    out["total_bytes"] = sum(v["result_bytes"] for v in stats.values())
+    return out

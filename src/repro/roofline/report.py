@@ -1,0 +1,199 @@
+"""Roofline report: three terms per (arch x shape x mesh) from dry-run
+artifacts.
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth
+  collective = collective_result_bytes_per_device / ICI_link_bandwidth
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  cost_analysis() on the SPMD module is per-device, so no extra chip
+division is needed; MODEL_FLOPS (6*N*D, activated params for MoE) is global
+and gets divided by the chip count for the usefulness ratio.
+"""
+from __future__ import annotations
+
+import functools
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/artifacts/dryrun")
+
+
+@functools.lru_cache(maxsize=None)
+def _param_counts(arch_id: str) -> tuple[int, int]:
+    """(total_params, activated_params) excluding the embedding table."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import api
+    cfg = get_config(arch_id)
+    shapes = jax.eval_shape(functools.partial(api.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    total = 0
+    active = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        names = [str(getattr(p, "key", getattr(p, "name", p)))
+                 for p in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if "embed" in names:        # 6ND convention: matmul params only
+            continue
+        total += n
+        if "moe" in names and names[-1] in ("gate", "up", "down"):
+            active += n * cfg.moe_top_k // max(cfg.n_experts, 1)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(arch_id: str, shape: dict, kind: str) -> float:
+    """Global 6*N*D (training) / 2*N*D (inference fwd), MoE uses N_active."""
+    total, active = _param_counts(arch_id)
+    if kind == "train":
+        tokens = shape["global_batch"] * shape["seq_len"]
+        return 6.0 * active * tokens
+    if kind == "prefill":
+        tokens = shape["global_batch"] * shape["seq_len"]
+        return 2.0 * active * tokens
+    tokens = shape["global_batch"]          # one new token per sequence
+    return 2.0 * active * tokens
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    hlo_flops: float = 0.0
+    hlo_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+    temp_gb: float = 0.0
+    arg_gb: float = 0.0
+    note: str = ""
+
+
+def load_records(multi_pod: bool | None = False,
+                 optimized: bool | None = False) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if multi_pod is not None and r.get("multi_pod") != multi_pod:
+            continue
+        if optimized is not None and bool(r.get("optimized")) != optimized:
+            continue
+        recs.append(r)
+    return recs
+
+
+def analyse(rec: dict) -> RooflineRow:
+    from repro.configs import INPUT_SHAPES
+    row = RooflineRow(arch=rec["arch"], shape=rec["shape"],
+                      mesh=rec.get("mesh", "16x16"),
+                      status=rec["status"])
+    if rec["status"] != "ok":
+        row.note = rec.get("reason", rec.get("error", ""))[:90]
+        return row
+    n_chips = 512 if rec["multi_pod"] else 256
+    cost = rec["cost"]
+    flops = cost.get("flops", 0.0)
+    hbm_bytes = cost.get("bytes accessed", 0.0)
+    coll = rec["collectives"]["total_bytes"]
+    probe = rec.get("depth_probe")
+    if probe:
+        # XLA cost_analysis doesn't multiply scan bodies by trip count;
+        # reconstruct full-depth cost from the two unrolled shallow probes.
+        a, b, L = probe["a"], probe["b"], probe["n_layers"]
+        pa, pb = probe["probes"][str(a)], probe["probes"][str(b)]
+
+        def extrap(fa, fb):
+            return fa + (fb - fa) / (b - a) * (L - a)
+
+        flops = extrap(pa["cost"].get("flops", 0.0),
+                       pb["cost"].get("flops", 0.0))
+        hbm_bytes = extrap(pa["cost"].get("bytes accessed", 0.0),
+                           pb["cost"].get("bytes accessed", 0.0))
+        coll = extrap(pa["collective_bytes"], pb["collective_bytes"])
+        row.note = "depth-extrapolated"
+    row.hlo_flops = flops
+    row.hlo_bytes = hbm_bytes
+    row.coll_bytes = coll
+    row.compute_s = flops / PEAK_FLOPS
+    row.memory_s = hbm_bytes / HBM_BW
+    row.collective_s = coll / ICI_BW
+    terms = {"compute": row.compute_s, "memory": row.memory_s,
+             "collective": row.collective_s}
+    row.dominant = max(terms, key=terms.get)
+    shape = INPUT_SHAPES[rec["shape"]]
+    row.model_flops = model_flops(rec["arch"], shape, rec["kind"])
+    per_dev_model = row.model_flops / n_chips
+    row.useful_ratio = per_dev_model / flops if flops else 0.0
+    row.temp_gb = rec["memory"]["temp_bytes"] / 1e9
+    row.arg_gb = rec["memory"]["argument_bytes"] / 1e9
+    return row
+
+
+def markdown_table(rows: list[RooflineRow]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | coll s | "
+           "dominant | useful (6ND/HLO) | temp GB/dev | note |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r.status != "ok":
+            lines.append(f"| {r.arch} | {r.shape} | {r.mesh} | - | - | - | "
+                         f"{r.status} | - | - | {r.note} |")
+            continue
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | {r.dominant} | "
+            f"{r.useful_ratio:.2f} | {r.temp_gb:.1f} | {r.note} |")
+    return "\n".join(lines)
+
+
+def compare_table() -> str:
+    """Baseline vs --optimized side-by-side on the dominant term."""
+    base = {(r.arch, r.shape): r
+            for r in map(analyse, load_records(optimized=False))}
+    opt = {(r.arch, r.shape): r
+           for r in map(analyse, load_records(optimized=True))}
+    lines = ["| arch | shape | baseline dom term | optimized dom term | "
+             "speedup |", "|---|---|---|---|---|"]
+    for key in sorted(opt):
+        b, o = base.get(key), opt[key]
+        if not b or b.status != "ok" or o.status != "ok":
+            continue
+        bd = max(b.compute_s, b.memory_s, b.collective_s)
+        od = max(o.compute_s, o.memory_s, o.collective_s)
+        lines.append(f"| {key[0]} | {key[1]} | {bd:.3e} ({b.dominant}) | "
+                     f"{od:.3e} ({o.dominant}) | {bd / od:.1f}x |")
+    return "\n".join(lines)
+
+
+def main():
+    import sys
+    if "--compare" in sys.argv:
+        print(compare_table())
+        return
+    optimized = "--optimized" in sys.argv
+    rows = [analyse(r)
+            for r in load_records(multi_pod=False, optimized=optimized)]
+    print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Pytest configuration.
+
+NOTE: no XLA device-count forcing here — smoke tests and benches must see
+the single real CPU device; only launch/dryrun.py forces 512 placeholders
+(in its own process, before jax init).
+"""
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running end-to-end simulation test")

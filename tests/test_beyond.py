@@ -1,0 +1,108 @@
+"""Beyond-paper evaluation: DAGSA optimality gap + shadowing realism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import WirelessConfig, channel, dagsa, mobility
+from repro.core.bruteforce import optimal_schedule
+from repro.core.dagsa_jit import dagsa_schedule_jit
+from repro.core.types import SchedulingProblem
+
+
+def small_problem(seed, n=8, m=2, min_part=4):
+    rng = np.random.default_rng(seed)
+    snr = jnp.asarray(rng.lognormal(2.0, 1.5, (n, m)), jnp.float32)
+    coeff = 0.5 / jnp.log2(1.0 + snr)
+    tcomp = jnp.asarray(rng.uniform(0.1, 0.11, n), jnp.float32)
+    return SchedulingProblem(
+        snr=snr, tcomp=tcomp, bs_bw=jnp.ones((m,), jnp.float32),
+        coeff=coeff, necessary=jnp.zeros(n, dtype=bool),
+        min_participants=min_part)
+
+
+def test_dagsa_optimality_gap_small_instances():
+    """DAGSA vs the exact optimum (N=8, M=2).
+
+    Raw gap vs the latency-minimal optimum is ~19% BUT DAGSA schedules
+    MORE users than the minimum (its threshold-fill deliberately trades
+    latency for participation — §III-B intuition 2).  At EQUAL
+    participation the mean gap is ~4.5%: near-optimal.  Both facts are
+    asserted; EXPERIMENTS.md reports them.
+    """
+    import dataclasses
+    raw_gaps, eq_gaps = [], []
+    for seed in range(8):
+        prob = small_problem(seed)
+        res = dagsa.dagsa_schedule(prob, seed=seed)
+        t_dagsa = float(res.t_round)
+        t_opt, a_opt = optimal_schedule(prob)
+        assert t_dagsa >= t_opt - 1e-6      # optimum really is a lower bound
+        assert int(res.selected.sum()) >= a_opt.any(axis=1).sum()
+        raw_gaps.append(t_dagsa / t_opt - 1.0)
+        prob_eq = dataclasses.replace(
+            prob, min_participants=int(res.selected.sum()))
+        t_opt_eq, _ = optimal_schedule(prob_eq)
+        eq_gaps.append(t_dagsa / t_opt_eq - 1.0)
+    assert np.mean(raw_gaps) < 0.30, f"raw gap {np.mean(raw_gaps):.3f}"
+    assert np.mean(eq_gaps) < 0.10, f"equal-part gap {np.mean(eq_gaps):.3f}"
+
+
+def test_jit_dagsa_optimality_gap():
+    gaps = []
+    for seed in range(8):
+        prob = small_problem(seed)
+        t_opt, _ = optimal_schedule(prob)
+        t_jit = float(dagsa_schedule_jit(
+            prob, jax.random.PRNGKey(seed)).t_round)
+        assert t_jit >= t_opt - 1e-6
+        gaps.append(t_jit / t_opt - 1.0)
+    assert np.mean(gaps) < 0.35   # raw gap; includes extra participation
+
+
+def test_bruteforce_respects_constraints():
+    prob = small_problem(0, n=6, m=2, min_part=3)
+    t_opt, assign = optimal_schedule(prob)
+    assert assign.sum(axis=1).max() <= 1
+    assert assign.any(axis=1).sum() >= 3
+    assert np.isfinite(t_opt) and t_opt > 0
+
+
+def test_bruteforce_rejects_huge():
+    prob = small_problem(0, n=30, m=8)
+    with pytest.raises(ValueError):
+        optimal_schedule(prob)
+
+
+# ------------------------------------------------------------- shadowing --
+def test_shadowing_consistency_for_static_users():
+    """Static user, same key -> identical shadowing (geometry-stuck)."""
+    cfg = WirelessConfig()
+    key = jax.random.PRNGKey(0)
+    st = mobility.init_positions_grid_bs(key, cfg)
+    s1 = channel.sample_shadowing(key, st.user_pos, st.bs_pos, cfg)
+    s2 = channel.sample_shadowing(key, st.user_pos, st.bs_pos, cfg)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_shadowing_decorrelates_with_distance():
+    cfg = WirelessConfig()
+    key = jax.random.PRNGKey(1)
+    st = mobility.init_positions_grid_bs(key, cfg)
+    s0 = channel.sample_shadowing(key, st.user_pos, st.bs_pos, cfg)
+    near = channel.sample_shadowing(key, st.user_pos + 5.0, st.bs_pos, cfg)
+    far = channel.sample_shadowing(key, st.user_pos + 500.0, st.bs_pos, cfg)
+    d_near = float(jnp.mean(jnp.abs(near - s0)))
+    d_far = float(jnp.mean(jnp.abs(far - s0)))
+    assert d_near < d_far
+
+
+def test_shadowing_statistics():
+    """~N(0, sigma^2) marginally."""
+    cfg = WirelessConfig(n_users=500)
+    key = jax.random.PRNGKey(2)
+    st = mobility.init_positions(key, cfg)
+    s = np.asarray(channel.sample_shadowing(key, st.user_pos, st.bs_pos,
+                                            cfg, sigma_db=8.0))
+    assert abs(s.mean()) < 1.5
+    assert 5.0 < s.std() < 11.0

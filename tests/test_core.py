@@ -1,0 +1,193 @@
+"""Unit + property tests for the paper's control plane (core/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ParticipationState, WirelessConfig, schedule)
+from repro.core import bandwidth, channel, dagsa, latency, mobility
+from repro.core.scheduler import FEDCS_HIGH_S, FEDCS_LOW_S
+
+CFG = WirelessConfig()
+
+
+def make_problem(seed=0, cfg=CFG, round_idx=0, counts=None):
+    key = jax.random.PRNGKey(seed)
+    k0, k1 = jax.random.split(key)
+    state = mobility.init_positions_grid_bs(k0, cfg)
+    if counts is None:
+        counts = jnp.zeros((cfg.n_users,))
+    return channel.make_problem(k1, state, cfg, counts, round_idx)
+
+
+# ---------------------------------------------------------------- mobility --
+def test_mobility_stays_in_bounds():
+    cfg = CFG
+    key = jax.random.PRNGKey(1)
+    state = mobility.init_positions(key, cfg)
+    traj = mobility.trajectory(key, state, cfg, 200)
+    assert float(traj.min()) >= 0.0
+    assert float(traj.max()) <= cfg.area_m
+
+
+def test_mobility_step_distance():
+    """Each round's displacement is exactly v*dt (before reflection)."""
+    cfg = WirelessConfig(speed_mps=20.0, round_duration_s=1.0, area_m=1e7)
+    key = jax.random.PRNGKey(2)
+    state = mobility.init_positions(key, cfg)
+    # Park users mid-area, far from the huge boundary, so nothing reflects.
+    state = mobility.MobilityState(
+        user_pos=jnp.full_like(state.user_pos, 5e6), bs_pos=state.bs_pos)
+    nxt = mobility.step(key, state, cfg)
+    d = jnp.linalg.norm(nxt.user_pos - state.user_pos, axis=-1)
+    # float32 position resolution at 5e6 m is ~0.5 m -> loose tolerance.
+    np.testing.assert_allclose(np.asarray(d), 20.0, rtol=3e-2)
+
+
+@given(x=st.floats(-1e5, 1e5), length=st.floats(10.0, 1e4))
+@settings(max_examples=50, deadline=None)
+def test_reflection_in_bounds(x, length):
+    r = float(mobility._reflect(jnp.asarray(x), length))
+    assert -1e-3 <= r <= length + 1e-3
+
+
+def test_rd_uniform_distribution():
+    """RD keeps users ~uniform: mean position stays near the centre."""
+    cfg = CFG
+    key = jax.random.PRNGKey(3)
+    state = mobility.init_positions(key, cfg)
+    traj = mobility.trajectory(key, state, cfg, 500)
+    mean = np.asarray(traj[-100:].mean(axis=(0, 1)))
+    np.testing.assert_allclose(mean, cfg.area_m / 2, atol=cfg.area_m * 0.15)
+
+
+# ----------------------------------------------------------------- channel --
+def test_path_loss_reference_value():
+    # At D = 1 km the model gives exactly 128.1 dB.
+    np.testing.assert_allclose(float(channel.path_loss_db(jnp.asarray(1000.0))),
+                               128.1, rtol=1e-6)
+
+
+def test_snr_decreases_with_distance():
+    d = jnp.asarray([10.0, 100.0, 1000.0])
+    s = channel.mean_snr(d, CFG)
+    assert float(s[0]) > float(s[1]) > float(s[2])
+
+
+# --------------------------------------------------------- bandwidth (KKT) --
+@given(n=st.integers(1, 16), seed=st.integers(0, 2**16), bw=st.floats(0.2, 4.0))
+@settings(max_examples=60, deadline=None)
+def test_bandwidth_kkt_invariants(n, seed, bw):
+    """Eq. (11)/(12): budget exactly consumed; every user finishes at t*."""
+    rng = np.random.default_rng(seed)
+    coeff = jnp.asarray(rng.uniform(0.01, 5.0, n), dtype=jnp.float32)
+    tcomp = jnp.asarray(rng.uniform(0.05, 0.3, n), dtype=jnp.float32)
+    mask = jnp.ones((n,), dtype=bool)
+    t, bi = bandwidth.allocate(coeff, tcomp, mask, jnp.float32(bw))
+    assert float(t) > float(tcomp.max())
+    np.testing.assert_allclose(float(bi.sum()), bw, rtol=1e-3)
+    finish = tcomp + coeff / bi
+    np.testing.assert_allclose(np.asarray(finish), float(t), rtol=1e-3)
+
+
+def test_bandwidth_empty_bs():
+    t, bi = bandwidth.allocate(jnp.ones(4), jnp.ones(4) * 0.1,
+                               jnp.zeros(4, dtype=bool), jnp.float32(1.0))
+    assert float(t) == 0.0 and float(bi.sum()) == 0.0
+
+
+def test_numpy_mirror_matches_jax():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        n = int(rng.integers(1, 30))
+        coeff = rng.uniform(0.01, 10.0, n)
+        tcomp = rng.uniform(0.05, 0.3, n)
+        mask = rng.random(n) < 0.7
+        if not mask.any():
+            mask[0] = True
+        bw = float(rng.uniform(0.3, 3.0))
+        t_np = dagsa._bs_time_np(coeff, tcomp, mask, bw)
+        t_jx = float(bandwidth.bs_time(jnp.asarray(coeff, dtype=jnp.float32),
+                                       jnp.asarray(tcomp, dtype=jnp.float32),
+                                       jnp.asarray(mask), jnp.float32(bw)))
+        np.testing.assert_allclose(t_np, t_jx, rtol=2e-3)
+
+
+def test_optimal_beats_uniform():
+    """Optimal allocation (Eq. 12) never loses to an even split."""
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        n = int(rng.integers(2, 20))
+        coeff = jnp.asarray(rng.uniform(0.01, 5.0, n), dtype=jnp.float32)
+        tcomp = jnp.asarray(rng.uniform(0.05, 0.3, n), dtype=jnp.float32)
+        mask = jnp.ones((n,), dtype=bool)
+        t_opt, _ = bandwidth.allocate(coeff, tcomp, mask, jnp.float32(1.0))
+        t_uni = bandwidth.uniform_time(coeff, tcomp, mask, jnp.float32(1.0))
+        assert float(t_opt) <= float(t_uni) + 1e-4
+
+
+# -------------------------------------------------------------- schedulers --
+@pytest.mark.parametrize("name", ["dagsa", "rs", "ub", "fedcs_low",
+                                  "fedcs_high", "sa"])
+def test_scheduler_basic_invariants(name):
+    prob = make_problem(seed=0)
+    res = schedule(name, prob, CFG, jax.random.PRNGKey(5))
+    assign = np.asarray(res.assign)
+    # each user talks to at most one BS (Eq. 8d)
+    assert (assign.sum(axis=1) <= 1).all()
+    # selected <-> assigned
+    np.testing.assert_array_equal(np.asarray(res.selected),
+                                  assign.any(axis=1))
+    # per-BS bandwidth budget respected (Eq. 8f)
+    bw_per_bs = (np.asarray(res.bw)[:, None] * assign).sum(axis=0)
+    assert (bw_per_bs <= np.asarray(prob.bs_bw) + 1e-3).all()
+    # t_round consistent with first-principles latency recomputation
+    np.testing.assert_allclose(float(latency.round_latency(prob, res)),
+                               float(res.t_round), rtol=1e-3)
+
+
+def test_dagsa_meets_participation_constraint():
+    prob = make_problem(seed=1)
+    res = dagsa.dagsa_schedule(prob)
+    assert int(res.selected.sum()) >= prob.min_participants  # Eq. (8h)
+
+
+def test_dagsa_includes_necessary_users():
+    """Eq. (8g): users behind on participation are always scheduled."""
+    counts = jnp.zeros((CFG.n_users,))
+    prob = make_problem(seed=2, round_idx=10, counts=counts)
+    assert bool(prob.necessary.all())
+    res = dagsa.dagsa_schedule(prob)
+    assert bool(res.selected.all())
+
+
+def test_dagsa_beats_baselines_on_latency():
+    """Core paper claim at fixed participation: DAGSA's round latency is
+    below RS/UB (same participation rate) on average."""
+    lat = {n: [] for n in ["dagsa", "rs", "ub"]}
+    for seed in range(10):
+        prob = make_problem(seed=seed)
+        for n in lat:
+            res = schedule(n, prob, CFG, jax.random.PRNGKey(seed), seed=seed)
+            lat[n].append(float(res.t_round))
+    assert np.mean(lat["dagsa"]) < np.mean(lat["rs"])
+    assert np.mean(lat["dagsa"]) < np.mean(lat["ub"])
+
+
+def test_fedcs_respects_threshold():
+    for thr in (FEDCS_LOW_S, FEDCS_HIGH_S):
+        prob = make_problem(seed=3)
+        from repro.core import baselines
+        res = baselines.fedcs_schedule(prob, thr)
+        assert float(res.t_round) <= thr + 1e-3
+
+
+def test_participation_state_update():
+    st_ = ParticipationState.init(CFG.n_users)
+    prob = make_problem(seed=4)
+    res = schedule("dagsa", prob, CFG, jax.random.PRNGKey(0))
+    st2 = st_.update(res)
+    assert st2.round_idx == 1
+    np.testing.assert_allclose(np.asarray(st2.counts),
+                               np.asarray(res.selected, dtype=np.float32))

@@ -1,0 +1,117 @@
+"""Distribution-layer tests that run on ONE device (the real CPU).
+
+The full 256/512-device dry-run is exercised by ``repro.launch.dryrun``
+(separate process — device count is locked at jax init); here we verify the
+machinery on a 1x1 mesh: sharding-rule construction, lowering, compiling,
+and the HLO collective parser.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import sharding
+from repro.launch.mesh import smoke_mesh
+from repro.models import api
+from repro.roofline.hlo import collective_stats
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _lower(arch: str):
+    cfg = get_config(arch).reduced()
+    mesh = smoke_mesh(1, 1)
+    params_shape = jax.eval_shape(
+        functools.partial(api.init_params, cfg=cfg), KEY)
+    p_specs = sharding.param_pspecs(cfg, params_shape, mesh)
+    p_ns = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+    batch = api.train_batch_specs(cfg, 4, 64)
+    b_ns = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        sharding.batch_pspecs(cfg, batch, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+    fn = lambda p, b: api.sgd_train_step(p, cfg, b)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=(p_ns, b_ns)).lower(
+            params_shape, batch)
+        compiled = lowered.compile()
+    return compiled
+
+
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "qwen3_moe_30b_a3b",
+                                  "mamba2_2_7b", "whisper_tiny"])
+def test_lower_compile_smoke_mesh(arch):
+    compiled = _lower(arch)
+    cost = compiled.cost_analysis()
+    assert cost.get("flops", 0) > 0
+    mem = compiled.memory_analysis()
+    assert mem.argument_size_in_bytes > 0
+
+
+def test_param_pspec_rules():
+    cfg = get_config("qwen3_32b")
+    mesh = smoke_mesh(1, 1)
+    params_shape = jax.eval_shape(
+        functools.partial(api.init_params, cfg=cfg), KEY)
+    specs = sharding.param_pspecs(cfg, params_shape, mesh)
+    # model axis of the smoke mesh is size 1 -> everything shardable
+    assert specs["embed"]["table"] == P("model", None)
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", None)
+    assert specs["layers"]["mlp"]["down"] == P(None, "model", None)
+    assert specs["final_norm"]["scale"] == P(None)
+
+
+def test_param_pspec_moe_expert_parallel():
+    cfg = get_config("qwen3_moe_30b_a3b")
+    mesh = smoke_mesh(1, 1)
+    params_shape = jax.eval_shape(
+        functools.partial(api.init_params, cfg=cfg), KEY)
+    specs = sharding.param_pspecs(cfg, params_shape, mesh)
+    assert specs["layers"]["moe"]["gate"] == P(None, "model", None, None)
+    assert specs["layers"]["moe"]["router"] == P(None, None, None)
+
+
+def test_cache_pspec_seq_shard():
+    cfg = get_config("qwen3_32b")
+    mesh = smoke_mesh(1, 1)
+    cache_shape = jax.eval_shape(
+        functools.partial(api.init_cache, cfg, 1, 1024))
+    specs = sharding.cache_pspecs(cfg, cache_shape, mesh, seq_shard=True)
+    assert specs["layers"]["k"] == P(None, None, ("data",), None, None)
+
+
+def test_collective_parser_on_synthetic_hlo():
+    hlo = """
+  %ag = f32[16,1024]{1,0} all-gather(%x), replica_groups=[2,2]<=[4]
+  %ar.1 = bf16[4096]{0} all-reduce(%y), to_apply=%add
+  %done = f32[8]{0} all-reduce-done(%start)
+  %st = (f32[128]{0}, f32[128]{0}) all-reduce-start(%z), to_apply=%add
+  %a2a = f32[32,64]{1,0} all-to-all(%w), dimensions={0}
+"""
+    stats = collective_stats(hlo)
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["result_bytes"] == 16 * 1024 * 4
+    assert stats["all-reduce"]["count"] == 2          # sync + start, not done
+    assert stats["all-reduce"]["result_bytes"] == 4096 * 2 + 2 * 128 * 4
+    assert stats["all-to-all"]["result_bytes"] == 32 * 64 * 4
+    assert stats["total_bytes"] > 0
+
+
+def test_grad_accum_matches_full_batch():
+    """grad_accum=2 must equal the full-batch SGD step (linear grads)."""
+    import dataclasses
+    cfg = get_config("olmo_1b").reduced()
+    params = api.init_params(KEY, cfg)
+    batch = api.make_train_batch(KEY, cfg, batch=4, seq_len=32)
+    p_full, m_full = api.sgd_train_step(params, cfg, batch)
+    cfg2 = dataclasses.replace(cfg, grad_accum=2)
+    p_acc, m_acc = api.sgd_train_step(params, cfg2, batch)
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_acc)):
+        np.testing.assert_allclose(np.asarray(a, dtype=np.float32),
+                                   np.asarray(b, dtype=np.float32),
+                                   rtol=2e-3, atol=2e-5)

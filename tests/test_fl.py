@@ -1,0 +1,84 @@
+"""FL substrate tests: partitioner, FedAvg, round engine behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_dataset
+from repro.fl import FLConfig, FLSimulation, shard_partition
+from repro.fl import server as fl_server
+from repro.fl.rounds import accuracy_at_budget
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -------------------------------------------------------------- partition --
+def test_partition_shapes_and_disjoint():
+    ds = make_dataset("mnist", n_train=1000, n_test=100)
+    idx = shard_partition(KEY, ds.y_train, n_users=50, shards_per_user=2)
+    assert idx.shape == (50, 20)
+    flat = np.asarray(idx).ravel()
+    assert len(set(flat.tolist())) == len(flat)       # no sample reused
+
+
+def test_partition_non_iid():
+    """Paper split: each client sees at most ~2-3 labels (shard pathology)."""
+    ds = make_dataset("mnist", n_train=2000, n_test=100)
+    idx = shard_partition(KEY, ds.y_train, n_users=50, shards_per_user=2)
+    labels = np.asarray(ds.y_train)[np.asarray(idx)]
+    per_client = [len(set(row.tolist())) for row in labels]
+    assert np.mean(per_client) <= 3.0
+    assert max(per_client) <= 4
+
+
+# ----------------------------------------------------------------- fedavg --
+def test_fedavg_weighted_mean():
+    g = {"w": jnp.zeros((3,))}
+    clients = {"w": jnp.stack([jnp.ones(3) * 1, jnp.ones(3) * 2,
+                               jnp.ones(3) * 4])}
+    sel = jnp.asarray([True, False, True])
+    sizes = jnp.asarray([1.0, 1.0, 3.0])
+    out = fl_server.fedavg(g, clients, sel, sizes)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               (1 * 1 + 4 * 3) / 4.0)
+
+
+def test_fedavg_empty_selection_keeps_global():
+    g = {"w": jnp.full((3,), 7.0)}
+    clients = {"w": jnp.ones((2, 3))}
+    out = fl_server.fedavg(g, clients, jnp.zeros(2, dtype=bool),
+                           jnp.ones(2))
+    np.testing.assert_allclose(np.asarray(out["w"]), 7.0)
+
+
+# ------------------------------------------------------------ round engine --
+@pytest.mark.slow
+def test_fl_simulation_learns_and_accounts_latency():
+    cfg = FLConfig(dataset="mnist", scheduler="dagsa", n_train=1000,
+                   n_test=300, batch_size=20, eval_every=1, seed=0)
+    sim = FLSimulation(cfg)
+    recs = sim.run(6)
+    # learning happened
+    assert recs[-1].test_acc > recs[0].test_acc + 0.1
+    assert recs[-1].test_acc > 0.3
+    # wall clock is the cumulative sum of round latencies
+    np.testing.assert_allclose(recs[-1].wall_clock,
+                               sum(r.t_round for r in recs), rtol=1e-5)
+    # participation constraint held every round (Eq. 8h)
+    for r in recs:
+        assert r.n_selected >= int(np.ceil(cfg.wireless.rho2
+                                           * cfg.wireless.n_users))
+    assert accuracy_at_budget(recs, 1e9) == max(r.test_acc for r in recs)
+
+
+@pytest.mark.slow
+def test_fl_dagsa_faster_clock_than_select_all():
+    """Same number of rounds => DAGSA's simulated clock must be shorter."""
+    clocks = {}
+    for name in ("dagsa", "sa"):
+        cfg = FLConfig(dataset="mnist", scheduler=name, n_train=500,
+                       n_test=100, batch_size=10, eval_every=0, seed=1)
+        sim = FLSimulation(cfg)
+        recs = sim.run(4)
+        clocks[name] = recs[-1].wall_clock
+    assert clocks["dagsa"] < clocks["sa"]

@@ -1,0 +1,131 @@
+"""Pallas kernel validation: interpret-mode sweeps vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bandwidth_solve import bandwidth_solve
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.PRNGKey(7)
+
+
+# --------------------------------------------------------- flash attention --
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (1, 256, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 512, 4, 1, 128),    # MQA, d=128
+    (1, 128, 2, 2, 128),    # single kv block
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, s, h, kv, d, dtype, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d)).astype(dtype)
+    got = flash_attention(q, k, v, causal=causal, q_block=128, kv_block=128,
+                          interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_cross_shape():
+    """kv longer than q (prefill-with-prefix shape)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64))
+    k = jax.random.normal(ks[1], (1, 512, 4, 64))
+    v = jax.random.normal(ks[2], (1, 512, 4, 64))
+    got = flash_attention(q, k, v, causal=False, interpret=True,
+                          q_block=128, kv_block=128)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------- ssd scan --
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 256, 4, 64, 16, 64),
+    (1, 128, 2, 32, 8, 32),
+    (1, 512, 3, 64, 64, 128),
+    (1, 128, 1, 128, 128, 128),   # mamba2-2.7b head shape
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    got = ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    want = ref.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ssd_scan_state_continuity():
+    """Chunk boundaries must be invisible: chunk=32 equals chunk=128."""
+    ks = jax.random.split(KEY, 5)
+    b, s, h, p, n = 1, 256, 2, 32, 16
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    y32 = ssd_scan(x, dt, A, B, C, chunk=32, interpret=True)
+    y128 = ssd_scan(x, dt, A, B, C, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y128),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------ rmsnorm --
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 128), (3, 7, 256), (1000, 512)])
+def test_rmsnorm_sweep(shape, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, shape).astype(dtype)
+    scale = (1.0 + 0.1 * jax.random.normal(k2, shape[-1:])).astype(dtype)
+    got = rmsnorm(x, scale, interpret=True)
+    want = ref.rmsnorm(x, scale)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------- bandwidth solve --
+@given(k=st.integers(1, 24), u=st.integers(1, 32), seed=st.integers(0, 999))
+@settings(max_examples=20, deadline=None)
+def test_bandwidth_solve_property(k, u, seed):
+    rng = np.random.default_rng(seed)
+    coeff = jnp.asarray(rng.uniform(0.01, 5.0, (k, u)), jnp.float32)
+    tcomp = jnp.asarray(rng.uniform(0.05, 0.3, (k, u)), jnp.float32)
+    mask = jnp.asarray(rng.random((k, u)) < 0.7)
+    bw = jnp.asarray(rng.uniform(0.3, 3.0, (k,)), jnp.float32)
+    got = bandwidth_solve(coeff, tcomp, mask, bw, interpret=True)
+    want = ref.bandwidth_solve(coeff, tcomp, mask, bw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=1e-5)
+
+
+def test_bandwidth_solve_satisfies_kkt():
+    """Kernel roots actually satisfy Eq. (11): demand(t*) == budget."""
+    rng = np.random.default_rng(3)
+    k, u = 16, 50
+    coeff = jnp.asarray(rng.uniform(0.05, 2.0, (k, u)), jnp.float32)
+    tcomp = jnp.asarray(rng.uniform(0.05, 0.15, (k, u)), jnp.float32)
+    mask = jnp.ones((k, u), dtype=bool)
+    bw = jnp.asarray(rng.uniform(0.5, 2.0, (k,)), jnp.float32)
+    t = bandwidth_solve(coeff, tcomp, mask, bw, interpret=True)
+    demand = jnp.sum(coeff / (t[:, None] - tcomp), axis=1)
+    np.testing.assert_allclose(np.asarray(demand), np.asarray(bw), rtol=1e-3)

@@ -1,0 +1,232 @@
+"""Model-zoo correctness: SSD oracle, decode/forward consistency, MLA, MoE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import api, lm, moe as moe_mod, ssm
+from repro.models.config import ModelConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------ SSD oracle --
+def naive_ssm(x, dt, A, B, C):
+    """Sequential O(S) recurrence: the ground truth for ssd_chunked."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Bx = jnp.broadcast_to(B, (b, s, h, n)).astype(jnp.float32)
+    Cx = jnp.broadcast_to(C, (b, s, h, n)).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    state = jnp.zeros((b, h, n, p), jnp.float32)
+    ys = []
+    for t in range(s):
+        dA = jnp.exp(dtf[:, t] * A)                     # [b,h]
+        inp = jnp.einsum("bhn,bh,bhp->bhnp", Bx[:, t], dtf[:, t], xf[:, t])
+        state = state * dA[..., None, None] + inp
+        ys.append(jnp.einsum("bhn,bhnp->bhp", Cx[:, t], state))
+    return jnp.stack(ys, axis=1)
+
+
+@pytest.mark.parametrize("s,chunk", [(32, 8), (64, 16), (64, 64)])
+def test_ssd_chunked_matches_naive(s, chunk):
+    b, h, p, n = 2, 3, 8, 4
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    got = ssm.ssd_chunked(x, dt, A, B, C, chunk)
+    want = naive_ssm(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_decode_matches_forward():
+    """Recurrent decode steps reproduce the chunked forward outputs."""
+    cfg = get_config("mamba2_2_7b").reduced()
+    params = api.init_params(KEY, cfg)
+    s = 32
+    batch = api.make_train_batch(KEY, cfg, batch=2, seq_len=s)
+    logits_fwd, _ = lm.forward(params, cfg, batch)
+
+    cache = api.init_cache(cfg, 2, s)
+    toks = batch["tokens"]
+    outs = []
+    for t in range(s):
+        logit, cache = api.decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                       jnp.int32(t))
+        outs.append(logit)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(logits_fwd, dtype=np.float32),
+                               rtol=5e-3, atol=5e-3)
+
+
+# --------------------------------------------- decode == forward (cached) --
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "olmo_1b", "deepseek_67b",
+                                  "qwen3_moe_30b_a3b", "deepseek_v2_236b",
+                                  "zamba2_1_2b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced forward logits == sequential cached decode logits.
+
+    MoE archs run with a no-drop capacity factor: capacity-based token
+    dropping legitimately differs between full-sequence routing groups and
+    single-token decode groups, so equality only holds without drops.
+    """
+    import dataclasses
+    cfg = get_config(arch).reduced()
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    params = api.init_params(KEY, cfg)
+    s = 16
+    batch = api.make_train_batch(KEY, cfg, batch=2, seq_len=s)
+    logits_fwd, _ = lm.forward(params, cfg, batch)
+
+    cache = api.init_cache(cfg, 2, s)
+    toks = batch["tokens"]
+    outs = []
+    for t in range(s):
+        logit, cache = api.decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                       jnp.int32(t))
+        outs.append(logit)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(logits_fwd, dtype=np.float32),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_whisper_decode_matches_forward():
+    cfg = get_config("whisper_tiny").reduced()
+    params = api.init_params(KEY, cfg)
+    s = 32
+    batch = api.make_train_batch(KEY, cfg, batch=2, seq_len=s)
+    from repro.models import encdec
+    memory = encdec.encode(params, cfg, batch["audio_embeds"])
+    toks_in = batch["tokens"][:, :-1]
+    logits_fwd = encdec.decode_train(params, cfg, memory, toks_in)
+
+    t_dec = toks_in.shape[1]
+    cache = encdec.init_cache(cfg, 2, t_dec, s_enc=s)
+    cache = dict(cache, memory=memory)
+    outs = []
+    for t in range(t_dec):
+        logit, cache = encdec.decode_step(params, cfg, cache,
+                                          toks_in[:, t:t + 1], jnp.int32(t))
+        outs.append(logit)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(logits_fwd, dtype=np.float32),
+                               rtol=5e-3, atol=5e-3)
+
+
+# --------------------------------------------------------------------- MLA --
+def test_mla_absorbed_matches_materialized():
+    """The absorbed latent attention equals explicitly materialized K/V."""
+    from repro.models import mla
+    cfg = get_config("deepseek_v2_236b").reduced()
+    params = mla.mla_init(KEY, cfg)
+    b, s = 2, 12
+    x = jax.random.normal(KEY, (b, s, cfg.d_model), dtype=cfg.param_dtype)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    got = mla.mla_self_attention(params, cfg, x, pos)
+
+    # materialized reference
+    h, nope, rope, v = (cfg.n_heads, cfg.qk_nope_head_dim,
+                        cfg.qk_rope_head_dim, cfg.v_head_dim)
+    r = cfg.kv_lora_rank
+    q_nope, q_pe = mla._queries(params, cfg, x, pos)
+    c_kv, k_pe = mla._latents(params, cfg, x, pos)
+    wkv_b = params["wkv_b"].reshape(r, h, nope + v)
+    k_nope = jnp.einsum("btr,rhn->bthn", c_kv, wkv_b[..., :nope])
+    v_full = jnp.einsum("btr,rhv->bthv", c_kv, wkv_b[..., nope:])
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe, (b, s, h, rope))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    scores = jnp.einsum("bshd,bthd->bhst", q_full, k_full) \
+        .astype(jnp.float32) / np.sqrt(nope + rope)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))[None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_full.dtype)
+    out = jnp.einsum("bhst,bthv->bshv", probs, v_full)
+    want = out.reshape(b, s, h * v) @ params["wo"]
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------- MoE --
+def test_moe_no_drop_reconstructs_gates():
+    """With ample capacity, sum of combine weights per token == 1."""
+    cfg = get_config("qwen3_moe_30b_a3b").reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = moe_mod.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model), dtype=cfg.param_dtype)
+    y, aux = moe_mod.moe_apply(params, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux))
+    assert np.isfinite(np.asarray(y, dtype=np.float32)).all()
+
+
+def test_moe_capacity_drops_tokens():
+    """Tiny capacity factor must not crash and must still be finite."""
+    cfg = get_config("qwen3_moe_30b_a3b").reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, capacity_factor=0.1)
+    params = moe_mod.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model), dtype=cfg.param_dtype)
+    y, _ = moe_mod.moe_apply(params, cfg, x)
+    assert np.isfinite(np.asarray(y, dtype=np.float32)).all()
+
+
+# --------------------------------------------------------- per-arch smoke --
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke(arch):
+    """Reduced variant: one forward + one SGD step + one decode, no NaNs."""
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    params = api.init_params(KEY, cfg)
+    batch = api.make_train_batch(KEY, cfg, batch=2, seq_len=64)
+    loss, _ = api.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    p2, metrics = api.sgd_train_step(params, cfg, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # one more step must change the loss (training is actually happening)
+    loss2, _ = api.loss_fn(p2, cfg, batch)
+    assert float(loss2) != float(loss)
+
+    cache = api.init_cache(cfg, 2, 64)
+    logits, _ = api.decode_step(p2, cfg, cache,
+                                jnp.zeros((2, 1), jnp.int32), jnp.int32(0))
+    assert logits.shape[0] == 2
+    real = np.asarray(logits, dtype=np.float32)[:, :cfg.vocab]
+    assert np.isfinite(real).all()
+
+
+def test_sliding_window_decode_matches_full_when_window_covers():
+    """window >= seq: sliced-window decode equals full-cache decode."""
+    import dataclasses
+    cfg = get_config("qwen3_0_6b").reduced()
+    cfg_win = dataclasses.replace(cfg, sliding_window=64)
+    params = api.init_params(KEY, cfg)
+    s = 16
+    batch = api.make_train_batch(KEY, cfg, batch=1, seq_len=s)
+    toks = batch["tokens"]
+
+    def run(c):
+        cache = api.init_cache(c, 1, s)
+        outs = []
+        for t in range(s):
+            logit, cache = api.decode_step(params, c, cache,
+                                           toks[:, t:t + 1], jnp.int32(t))
+            outs.append(logit)
+        return jnp.stack(outs, 1)
+
+    np.testing.assert_allclose(np.asarray(run(cfg), dtype=np.float32),
+                               np.asarray(run(cfg_win), dtype=np.float32),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,94 @@
+"""Hypothesis property tests for system-level invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import WirelessConfig, bandwidth, channel, mobility
+from repro.core.baselines import fedcs_schedule, sa_schedule
+from repro.core.types import SchedulingProblem
+from repro.fl.partition import shard_partition
+
+
+def _mk_problem(seed, n, m, bw):
+    rng = np.random.default_rng(seed)
+    snr = jnp.asarray(rng.lognormal(2.0, 2.0, (n, m)), jnp.float32)
+    coeff = 0.5 / jnp.log2(1.0 + snr)
+    tcomp = jnp.asarray(rng.uniform(0.1, 0.11, n), jnp.float32)
+    return SchedulingProblem(
+        snr=snr, tcomp=tcomp, bs_bw=jnp.full((m,), bw, jnp.float32),
+        coeff=coeff, necessary=jnp.zeros(n, dtype=bool),
+        min_participants=max(1, n // 2))
+
+
+# -- Eq.(11): t* is monotone — more users or less bandwidth never helps ----
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 12))
+@settings(max_examples=40, deadline=None)
+def test_bs_time_monotone_in_users(seed, n):
+    rng = np.random.default_rng(seed)
+    coeff = jnp.asarray(rng.uniform(0.05, 2.0, n), jnp.float32)
+    tcomp = jnp.asarray(rng.uniform(0.05, 0.2, n), jnp.float32)
+    sub = jnp.arange(n) < (n - 1)
+    full = jnp.ones(n, dtype=bool)
+    t_sub = float(bandwidth.bs_time(coeff, tcomp, sub, jnp.float32(1.0)))
+    t_full = float(bandwidth.bs_time(coeff, tcomp, full, jnp.float32(1.0)))
+    assert t_full >= t_sub - 1e-5
+
+
+@given(seed=st.integers(0, 10_000), bw1=st.floats(0.3, 2.0),
+       bw2=st.floats(0.3, 2.0))
+@settings(max_examples=40, deadline=None)
+def test_bs_time_monotone_in_bandwidth(seed, bw1, bw2):
+    rng = np.random.default_rng(seed)
+    coeff = jnp.asarray(rng.uniform(0.05, 2.0, 6), jnp.float32)
+    tcomp = jnp.asarray(rng.uniform(0.05, 0.2, 6), jnp.float32)
+    mask = jnp.ones(6, dtype=bool)
+    lo, hi = sorted((bw1, bw2))
+    t_lo = float(bandwidth.bs_time(coeff, tcomp, mask, jnp.float32(lo)))
+    t_hi = float(bandwidth.bs_time(coeff, tcomp, mask, jnp.float32(hi)))
+    assert t_hi <= t_lo + 1e-5
+
+
+# -- FedCS threshold monotonicity: higher threshold admits more users ------
+@given(seed=st.integers(0, 5_000))
+@settings(max_examples=25, deadline=None)
+def test_fedcs_threshold_monotone(seed):
+    prob = _mk_problem(seed, n=20, m=4, bw=1.0)
+    lo = fedcs_schedule(prob, 0.4)
+    hi = fedcs_schedule(prob, 1.2)
+    assert int(hi.selected.sum()) >= int(lo.selected.sum())
+
+
+# -- SA schedules everyone, whatever the draw ------------------------------
+@given(seed=st.integers(0, 5_000), n=st.integers(4, 30))
+@settings(max_examples=25, deadline=None)
+def test_sa_selects_all(seed, n):
+    prob = _mk_problem(seed, n=n, m=3, bw=1.0)
+    res = sa_schedule(prob)
+    assert int(res.selected.sum()) == n
+
+
+# -- partitioner: equal client sizes, full coverage of used samples --------
+@given(seed=st.integers(0, 1_000), users=st.sampled_from([10, 20, 50]),
+       spu=st.sampled_from([1, 2, 4]))
+@settings(max_examples=20, deadline=None)
+def test_partition_properties(seed, users, spu):
+    key = jax.random.PRNGKey(seed)
+    labels = jax.random.randint(key, (1000,), 0, 10)
+    idx = shard_partition(key, labels, users, spu)
+    assert idx.shape[0] == users
+    flat = np.asarray(idx).ravel()
+    assert len(set(flat.tolist())) == len(flat)
+
+
+# -- mobility: reflection preserves uniformity statistics ------------------
+@given(seed=st.integers(0, 1_000), v=st.floats(1.0, 200.0))
+@settings(max_examples=15, deadline=None)
+def test_mobility_bounds_any_speed(seed, v):
+    cfg = WirelessConfig(speed_mps=v)
+    key = jax.random.PRNGKey(seed)
+    st_ = mobility.init_positions(key, cfg)
+    for i in range(5):
+        st_ = mobility.step(jax.random.fold_in(key, i), st_, cfg)
+    pos = np.asarray(st_.user_pos)
+    assert (pos >= 0).all() and (pos <= cfg.area_m).all()

@@ -1,0 +1,56 @@
+"""Roofline report unit tests: extrapolation math, param counts, tuned cfg."""
+import numpy as np
+import pytest
+
+from repro.launch.tuned import overrides_for
+from repro.roofline import report
+
+
+def test_depth_extrapolation_math():
+    rec = {
+        "arch": "olmo_1b", "shape": "train_4k", "multi_pod": False,
+        "status": "ok", "mesh": "16x16", "kind": "train",
+        "cost": {"flops": 1.0, "bytes accessed": 1.0},
+        "collectives": {"total_bytes": 1},
+        "memory": {"temp_bytes": 0, "argument_bytes": 0},
+        "depth_probe": {
+            "a": 2, "b": 4, "n_layers": 16,
+            "probes": {
+                "2": {"cost": {"flops": 10.0, "bytes accessed": 100.0},
+                      "collective_bytes": 1000.0},
+                "4": {"cost": {"flops": 14.0, "bytes accessed": 140.0},
+                      "collective_bytes": 1400.0},
+            }},
+    }
+    row = report.analyse(rec)
+    # per-layer = (14-10)/2 = 2 -> f(16) = 10 + 2*14 = 38
+    np.testing.assert_allclose(row.hlo_flops, 38.0)
+    np.testing.assert_allclose(row.hlo_bytes, 380.0)
+    np.testing.assert_allclose(row.coll_bytes, 3800.0)
+    assert row.dominant in ("compute", "memory", "collective")
+
+
+def test_param_counts_moe_activation_fraction():
+    total, active = report._param_counts("qwen3_moe_30b_a3b")
+    # 128 experts top-8: expert params activate at 8/128 = 1/16
+    assert active < total
+    assert active / total < 0.30           # mostly-expert model
+    t2, a2 = report._param_counts("qwen3_32b")
+    assert t2 == a2                        # dense: everything active
+
+
+def test_model_flops_kinds():
+    shape = {"global_batch": 4, "seq_len": 128}
+    tr = report.model_flops("olmo_1b", shape, "train")
+    pf = report.model_flops("olmo_1b", shape, "prefill")
+    dc = report.model_flops("olmo_1b", shape, "decode")
+    assert tr == 3 * pf                    # 6ND vs 2ND
+    assert dc == pf / 128                  # one token vs seq_len
+
+
+def test_tuned_overrides_compose():
+    o = overrides_for("qwen3_moe_30b_a3b", "train_4k")
+    assert o["act_seq_shard"] is True and o["moe_group_size"] == 256
+    o2 = overrides_for("qwen3_32b", "decode_32k")
+    assert o2 == {"cache_seq_shard": "model"}
+    assert overrides_for("mamba2_2_7b", "prefill_32k") == {}

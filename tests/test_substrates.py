@@ -1,0 +1,124 @@
+"""Substrate tests: optimizers, checkpointing, data pipeline."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import load_pytree, save_pytree
+from repro.data import make_dataset, token_batches
+from repro.data.tokens import markov_chain, sample_stream
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -------------------------------------------------------------- optimizers --
+def _quadratic_min(opt, steps=200):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"x": jnp.zeros(3)}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.sum((p["x"] - target) ** 2))(params)
+        updates, state = opt.update(grads, state, params)
+        return optim.apply_updates(params, updates), state
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    return float(jnp.max(jnp.abs(params["x"] - target)))
+
+
+def test_sgd_converges():
+    assert _quadratic_min(optim.sgd(0.1)) < 1e-3
+
+
+def test_sgd_momentum_converges():
+    assert _quadratic_min(optim.sgd(0.05, momentum=0.9)) < 1e-3
+
+
+def test_adamw_converges():
+    assert _quadratic_min(optim.adamw(0.1), steps=400) < 1e-2
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones(4) * 10, "b": jnp.ones(9) * 10}
+    clipped = optim.clip_by_global_norm(tree, 1.0)
+    norm = float(optim.optimizers.global_norm(clipped))
+    np.testing.assert_allclose(norm, 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    s = optim.cosine_warmup_schedule(1.0, 10, 100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(s(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(s(jnp.asarray(100))) < 0.15
+
+
+# ------------------------------------------------------------- checkpoint --
+def test_checkpoint_roundtrip_nested_bf16():
+    tree = {"layers": {"w": jnp.ones((3, 4), jnp.bfloat16) * 1.5,
+                       "b": jnp.arange(5, dtype=jnp.float32)},
+            "steps": [jnp.asarray(3), jnp.asarray([1.0, 2.0])]}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save_pytree(path, tree, step=7)
+        out = load_pytree(path, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, dtype=np.float32),
+                                          np.asarray(b, dtype=np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"w": jnp.ones((3,))}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "c.npz")
+        save_pytree(path, tree)
+        with pytest.raises(ValueError):
+            load_pytree(path, {"w": jnp.ones((4,))})
+
+
+# -------------------------------------------------------------------- data --
+def test_dataset_shapes_and_classes():
+    ds = make_dataset("cifar10", n_train=500, n_test=100)
+    assert ds.x_train.shape == (500, 32, 32, 3)
+    assert set(np.asarray(ds.y_train).tolist()) == set(range(10))
+
+
+def test_dataset_difficulty_ordering():
+    """Same-class samples must be closer than cross-class (learnable)."""
+    ds = make_dataset("mnist", n_train=400, n_test=50)
+    x = np.asarray(ds.x_train).reshape(400, -1)
+    y = np.asarray(ds.y_train)
+    within, across = [], []
+    for c in range(3):
+        xc = x[y == c][:10]
+        xo = x[y != c][:10]
+        within.append(np.linalg.norm(xc[0] - xc[1:], axis=1).mean())
+        across.append(np.linalg.norm(xc[0] - xo, axis=1).mean())
+    assert np.mean(within) < np.mean(across)
+
+
+def test_token_stream_learnable_structure():
+    """Markov stream: successor entropy is far below uniform."""
+    succ, logits = markov_chain(0, vocab=64, top=8)
+    toks = np.asarray(sample_stream(KEY, succ, logits, length=4000))
+    # empirical bigram counts
+    from collections import Counter, defaultdict
+    succ = defaultdict(Counter)
+    for a, b in zip(toks[:-1], toks[1:]):
+        succ[int(a)][int(b)] += 1
+    # each token has at most `top` successors
+    max_succ = max(len(c) for c in succ.values())
+    assert max_succ <= 8
+
+
+def test_token_batches_shapes():
+    batches = list(token_batches(0, vocab=128, batch=2, seq_len=16,
+                                 n_batches=3))
+    assert len(batches) == 3
+    assert batches[0]["tokens"].shape == (2, 17)
