@@ -1,0 +1,162 @@
+"""Fleet-scale scheduling throughput: batched DAGSA-X vs the seed loop.
+
+The north-star workload: Monte-Carlo sweeps over thousands of simulated
+cells, each needing one DAGSA schedule per round.  Reports schedules/sec
+for
+
+  * ``seed_loop``  — faithful replica of the seed's per-problem
+    ``dagsa_schedule_jit`` (bisection-60, candidate set evaluated twice per
+    greedy step — once in ``cond``, once in ``body``), called in a Python
+    loop over the fleet;
+  * ``loop``       — current per-problem path (safeguarded Newton +
+    warm-started single-eval greedy), same Python loop;
+  * ``batch``      — ``dagsa_schedule_batch`` (one vmapped call);
+  * ``batch_pallas`` (smallest fleet only off-TPU) — batched path with the
+    per-step candidate solves routed through the Pallas kernel.
+
+Derived column: speedup over ``seed_loop`` at the same fleet size.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import WirelessConfig, bandwidth, channel, mobility
+from repro.core.dagsa_jit import (dagsa_schedule_batch, dagsa_schedule_jit,
+                                  stack_problems)
+
+CFG = WirelessConfig()
+
+
+# -- seed replica (PR-1 baseline): double-eval greedy + bisection-60 --------
+def _seed_bs_times_with_candidate(coeff, tcomp, assign, bs_bw, cand):
+    def per_bs(c_k, mask_k, bw_k, i_k):
+        trial = mask_k.at[i_k].set(True)
+        return bandwidth.bs_time(c_k, tcomp, trial, bw_k,
+                                 method="bisect", iters=60)
+
+    return jax.vmap(per_bs, in_axes=(1, 1, 0, 0))(coeff, assign, bs_bw, cand)
+
+
+@partial(jax.jit, static_argnames=("min_participants",))
+def _seed_schedule(snr, coeff, tcomp, bs_bw, necessary, min_participants,
+                   key):
+    n, m = snr.shape
+    best_bs = jnp.argmax(snr, axis=1)
+    assign0 = jax.nn.one_hot(best_bs, m, dtype=bool) & necessary[:, None]
+    remaining0 = ~necessary
+    t_bs0 = jax.vmap(
+        partial(bandwidth.bs_time, method="bisect", iters=60),
+        in_axes=(1, None, 1, 0))(coeff, tcomp, assign0, bs_bw)
+    t_star0 = jnp.max(t_bs0)
+
+    def n_selected(assign):
+        return jnp.sum(assign.any(axis=1))
+
+    def body(state):
+        assign, remaining, t_star, key = state
+        masked_snr = jnp.where(remaining[:, None], snr, -jnp.inf)
+        cand = jnp.argmax(masked_snr, axis=0)
+        has_cand = jnp.any(remaining)
+        t_with = _seed_bs_times_with_candidate(coeff, tcomp, assign, bs_bw,
+                                               cand)
+        feasible = (t_with <= t_star) & has_cand
+        any_feasible = jnp.any(feasible)
+        cand_snr = snr[cand, jnp.arange(m)]
+        k_greedy = jnp.argmax(jnp.where(feasible, cand_snr, -jnp.inf))
+        key, krand = jax.random.split(key)
+        k_forced = jax.random.randint(krand, (), 0, m)
+        need_more = n_selected(assign) < min_participants
+        k_star = jnp.where(any_feasible, k_greedy, k_forced)
+        i_star = cand[k_star]
+        do_add = has_cand & (any_feasible | need_more)
+        new_assign = jnp.where(do_add, assign.at[i_star, k_star].set(True),
+                               assign)
+        new_remaining = jnp.where(do_add, remaining.at[i_star].set(False),
+                                  remaining)
+        raised = jnp.maximum(t_star, t_with[k_star])
+        new_t_star = jnp.where(do_add & ~any_feasible, raised, t_star)
+        return new_assign, new_remaining, new_t_star, key
+
+    def cond(state):
+        assign, remaining, t_star, key = state
+        masked_snr = jnp.where(remaining[:, None], snr, -jnp.inf)
+        cand = jnp.argmax(masked_snr, axis=0)
+        t_with = _seed_bs_times_with_candidate(coeff, tcomp, assign, bs_bw,
+                                               cand)
+        any_feasible = jnp.any((t_with <= t_star) & jnp.any(remaining))
+        need_more = n_selected(assign) < min_participants
+        return jnp.any(remaining) & (any_feasible | need_more)
+
+    assign, *_ = jax.lax.while_loop(cond, body,
+                                    (assign0, remaining0, t_star0, key))
+    t_k, _ = bandwidth.solve_all(coeff, tcomp, assign, bs_bw,
+                                 method="bisect", iters=60)
+    return assign, jnp.max(t_k)
+
+
+def _make_problems(fleet: int):
+    key = jax.random.PRNGKey(0)
+    probs = []
+    for s in range(fleet):
+        k0, k1 = jax.random.split(jax.random.fold_in(key, s))
+        st = mobility.init_positions_grid_bs(k0, CFG)
+        probs.append(channel.make_problem(k1, st, CFG,
+                                          jnp.zeros((CFG.n_users,)), 0))
+    return probs, stack_problems(probs)
+
+
+def _rate(fn, fleet: int, reps: int) -> float:
+    fn()                                        # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return fleet / ((time.perf_counter() - t0) / reps)
+
+
+def run(quick: bool = True) -> None:
+    fleets = [64, 512] if quick else [64, 512, 4096]
+    reps = 2 if quick else 3
+    for fleet in fleets:
+        probs, stacked = _make_problems(fleet)
+        keys = jax.random.split(jax.random.PRNGKey(1), fleet)
+
+        def seed_loop():
+            outs = [_seed_schedule(p.snr, p.coeff, p.tcomp, p.bs_bw,
+                                   p.necessary, int(p.min_participants), k)
+                    for p, k in zip(probs, keys)]
+            jax.block_until_ready(outs[-1][1])
+
+        def loop():
+            outs = [dagsa_schedule_jit(p, k) for p, k in zip(probs, keys)]
+            jax.block_until_ready(outs[-1].t_round)
+
+        def batch():
+            jax.block_until_ready(
+                dagsa_schedule_batch(stacked, keys).t_round)
+
+        r_seed = _rate(seed_loop, fleet, reps)
+        emit(f"fleet{fleet}_seed_loop", 1e6 / r_seed,
+             f"schedules_per_sec={r_seed:.1f} speedup=1.00x")
+        for name, fn in [("loop", loop), ("batch", batch)]:
+            r = _rate(fn, fleet, reps)
+            emit(f"fleet{fleet}_{name}", 1e6 / r,
+                 f"schedules_per_sec={r:.1f} speedup={r / r_seed:.2f}x")
+
+        if fleet == fleets[0]:
+            # pallas-kernel routing; interpret mode off-TPU (documented, slow
+            # on CPU — the flag exists to exercise the TPU code path).
+            def batch_pallas():
+                jax.block_until_ready(
+                    dagsa_schedule_batch(stacked, keys,
+                                         backend="pallas").t_round)
+
+            r = _rate(batch_pallas, fleet, 1)
+            emit(f"fleet{fleet}_batch_pallas", 1e6 / r,
+                 f"schedules_per_sec={r:.1f} speedup={r / r_seed:.2f}x "
+                 f"backend={jax.default_backend()}")

@@ -1,20 +1,49 @@
-"""Paper Fig. 2: FL accuracy under a time budget, per scheduling policy."""
+"""Paper Fig. 2: FL accuracy under a time budget, per scheduling policy.
+
+Also times the scheduling call itself (schedules/sec per policy) — the
+control-plane cost that fleet-scale sweeps pay every round, and the figure
+the Eq. (11) solver work shows up in.
+"""
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_fn
+from repro.core import WirelessConfig, channel, mobility, schedule
 from repro.fl import FLConfig, FLSimulation
 from repro.fl.rounds import accuracy_at_budget
 
+SCHEDULERS = ["dagsa", "rs", "ub", "fedcs_low", "fedcs_high", "sa"]
+
+
+def _bench_scheduler_calls(quick: bool) -> None:
+    """schedules/sec of the bare scheduling call, per policy."""
+    cfg = WirelessConfig()
+    key = jax.random.PRNGKey(0)
+    k0, k1 = jax.random.split(key)
+    state = mobility.init_positions_grid_bs(k0, cfg)
+    prob = channel.make_problem(k1, state, cfg,
+                                jnp.zeros((cfg.n_users,)), 0)
+    n = 5 if quick else 20
+    for name in SCHEDULERS + ["dagsa_jit"]:
+        def call():
+            res = schedule(name, prob, cfg, jax.random.PRNGKey(1), seed=1)
+            jax.block_until_ready(res.t_round)
+
+        us = time_fn(call, n=n, warmup=2)
+        emit(f"sched_call_{name}", us,
+             f"schedules_per_sec={1e6 / us:.1f}")
+
 
 def run(quick: bool = True) -> None:
+    _bench_scheduler_calls(quick)
     datasets = ["mnist"] if quick else ["mnist", "fashionmnist", "cifar10"]
     n_rounds = 14 if quick else 30
-    schedulers = ["dagsa", "rs", "ub", "fedcs_low", "fedcs_high", "sa"]
     for ds in datasets:
         results = {}
-        for name in schedulers:
+        for name in SCHEDULERS:
             cfg = FLConfig(dataset=ds, scheduler=name, n_train=1000,
                            n_test=500, batch_size=20, eval_every=1, seed=1)
             sim = FLSimulation(cfg)

@@ -17,6 +17,7 @@ BENCHES = [
     ("fig2", "benchmarks.bench_scheduling", "Fig.2 scheduling policies"),
     ("fig3", "benchmarks.bench_hetero_bw", "Fig.3 heterogeneous bandwidth"),
     ("fig4", "benchmarks.bench_mobility", "Fig.4 mobility sweep"),
+    ("fleet", "benchmarks.bench_fleet", "fleet-scale batched scheduling"),
     ("roofline", "benchmarks.bench_roofline", "dry-run roofline terms"),
 ]
 
@@ -24,6 +25,8 @@ BENCHES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="quick suite (the default; --full overrides)")
     ap.add_argument("--only", default=None,
                     choices=[b[0] for b in BENCHES] + [None])
     args = ap.parse_args()

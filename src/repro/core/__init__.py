@@ -2,9 +2,12 @@
 allocation for low-latency federated learning (DAGSA and baselines)."""
 from repro.core.types import (MobilityState, ScheduleResult,
                               SchedulingProblem, WirelessConfig)
-from repro.core.scheduler import (SCHEDULERS, ParticipationState, schedule)
+from repro.core.scheduler import (BATCH_SCHEDULERS, SCHEDULERS,
+                                  ParticipationState, schedule,
+                                  schedule_batch)
 
 __all__ = [
     "MobilityState", "ScheduleResult", "SchedulingProblem", "WirelessConfig",
-    "SCHEDULERS", "ParticipationState", "schedule",
+    "BATCH_SCHEDULERS", "SCHEDULERS", "ParticipationState", "schedule",
+    "schedule_batch",
 ]

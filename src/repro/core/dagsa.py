@@ -19,6 +19,16 @@ would contradict both):
      time, and go to 3.
   5. Final bandwidth split via Eq. (12) on every BS.
 
+Determinism: ONE ``numpy.random.Generator`` seeded from ``seed`` is created
+up front and threaded through every random choice (the step-1 shuffle and
+the step-4 BS draw); nothing else consumes entropy, so ``seed`` fully
+determines the schedule (asserted in tests).
+
+Performance: per-BS optimal times are cached and every candidate evaluation
+warm-starts the Eq. (11) solver with the BS's current t_k^* as the lower
+bracket (t_k^* is monotone nondecreasing in the scheduled set), which lets
+the safeguarded Newton iteration stop after a couple of steps.
+
 A fully-jittable variant lives in :mod:`repro.core.dagsa_jit` (beyond-paper:
 same decisions, lax control flow, vmappable across fleets of simulations).
 """
@@ -30,26 +40,51 @@ import jax.numpy as jnp
 from repro.core import bandwidth
 from repro.core.types import ScheduleResult, SchedulingProblem
 
-_BISECT_ITERS = 60
-
 
 def _bs_time_np(coeff: np.ndarray, tcomp: np.ndarray, mask: np.ndarray,
-                bw: float) -> float:
-    """Numpy mirror of bandwidth.bs_time (Eq. 11 bisection)."""
+                bw: float, method: str = "newton", iters: int | None = None,
+                lo_hint: float = 0.0, tol: float = 1e-9) -> float:
+    """Numpy mirror of bandwidth.bs_time (Eq. 11).
+
+    Safeguarded Newton by default (early exit at relative KKT tolerance
+    ``tol``); ``method="bisect"`` reproduces the seed's fixed 60-iteration
+    bisection bit-for-bit.  ``lo_hint`` tightens the lower bracket — pass
+    the BS's previous t_k^* when evaluating a superset of its users.
+    """
+    default = bandwidth.default_iters(method)   # rejects unknown methods
     if not mask.any():
         return 0.0
+    if iters is None:
+        iters = default
     c = coeff[mask]
     tc = tcomp[mask]
-    lo = float(tc.max())
-    hi = lo + float(c.sum()) / max(bw, 1e-12) + 1e-9
-    for _ in range(_BISECT_ITERS):
-        mid = 0.5 * (lo + hi)
-        demand = float(np.sum(c / np.maximum(mid - tc, 1e-12)))
-        if demand > bw:
-            lo = mid
+    tmax = float(tc.max())
+    hi = tmax + float(c.sum()) / max(bw, 1e-12) + 1e-9
+    lo = min(max(tmax, lo_hint), hi)
+    if method == "bisect":
+        for _ in range(iters):
+            mid = 0.5 * (lo + hi)
+            demand = float(np.sum(c / np.maximum(mid - tc, 1e-12)))
+            if demand > bw:
+                lo = mid
+            else:
+                hi = mid
+        return 0.5 * (lo + hi)
+    t = hi
+    for _ in range(iters):
+        r = 1.0 / np.maximum(t - tc, 1e-12)
+        inv = c * r
+        f = float(inv.sum()) - bw
+        if abs(f) <= tol * max(bw, 1e-12):
+            break
+        if f > 0:
+            lo = t
         else:
-            hi = mid
-    return 0.5 * (lo + hi)
+            hi = t
+        df = -float(np.sum(inv * r))
+        t_newton = t - f / min(df, -1e-12)
+        t = t_newton if lo < t_newton < hi else 0.5 * (lo + hi)
+    return t
 
 
 def dagsa_schedule(problem: SchedulingProblem,
@@ -61,18 +96,22 @@ def dagsa_schedule(problem: SchedulingProblem,
     bs_bw = np.asarray(problem.bs_bw, dtype=np.float64)
     necessary = np.asarray(problem.necessary, dtype=bool)
     n, m = snr.shape
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed)   # the ONLY entropy source below
 
     assign = np.zeros((n, m), dtype=bool)
     remaining = np.ones(n, dtype=bool)
+    t_bs = np.zeros(m)                  # cached per-BS optimal times t_k^*
 
     def bs_time(k: int) -> float:
-        return _bs_time_np(coeff[:, k], tcomp, assign[:, k], float(bs_bw[k]))
+        return _bs_time_np(coeff[:, k], tcomp, assign[:, k], float(bs_bw[k]),
+                           lo_hint=t_bs[k])
 
     def bs_time_with(k: int, i: int) -> float:
         trial = assign[:, k].copy()
         trial[i] = True
-        return _bs_time_np(coeff[:, k], tcomp, trial, float(bs_bw[k]))
+        # warm start: adding a user can only raise t_k^* (f is monotone).
+        return _bs_time_np(coeff[:, k], tcomp, trial, float(bs_bw[k]),
+                           lo_hint=t_bs[k])
 
     # -- Step 1: necessary users (Eq. 8g) to their best-channel BS ----------
     nec_idx = np.flatnonzero(necessary)
@@ -83,7 +122,9 @@ def dagsa_schedule(problem: SchedulingProblem,
         remaining[i] = False
 
     # -- Step 2: automated threshold ----------------------------------------
-    t_star = max((bs_time(k) for k in range(m)), default=0.0)
+    for k in range(m):
+        t_bs[k] = bs_time(k)
+    t_star = float(t_bs.max(initial=0.0))
 
     def fill_pass(t_star: float) -> None:
         """One greedy pass: each BS absorbs best-channel users under t*."""
@@ -91,10 +132,12 @@ def dagsa_schedule(problem: SchedulingProblem,
             while remaining.any():
                 cand = np.where(remaining, snr[:, k], -np.inf)
                 i = int(np.argmax(cand))
-                if bs_time_with(k, i) > t_star:
+                t_trial = bs_time_with(k, i)
+                if t_trial > t_star:
                     break
                 assign[i, k] = True
                 remaining[i] = False
+                t_bs[k] = t_trial          # reuse the accepted evaluation
 
     # -- Steps 3-4: fill, then raise the threshold until Eq. (8h) holds -----
     fill_pass(t_star)
@@ -103,9 +146,10 @@ def dagsa_schedule(problem: SchedulingProblem,
         k = int(rng.integers(m))
         cand = np.where(remaining, snr[:, k], -np.inf)
         i = int(np.argmax(cand))
+        t_bs[k] = bs_time_with(k, i)
         assign[i, k] = True
         remaining[i] = False
-        t_star = max(t_star, bs_time(k))
+        t_star = max(t_star, t_bs[k])
         fill_pass(t_star)
 
     # -- Step 5: final optimal bandwidth (Eq. 12) ----------------------------

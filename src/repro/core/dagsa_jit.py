@@ -10,10 +10,28 @@ Greedy order differs slightly from the listing (one (BS,user) addition per
 iteration instead of a per-BS inner while), which is an equally valid
 instance of the paper's "add a small number of users at a time" rule; tests
 assert constraint-equivalence and latency parity with the host version.
+
+Performance notes (the control-plane hot path):
+
+* The while-loop state carries the per-BS candidate evaluations, so the
+  ``cond``/``body`` pair computes ``_bs_times_with_candidate`` ONCE per
+  greedy step (the seed evaluated every candidate twice — once in ``cond``,
+  once in ``body``).
+* The state also carries the current per-BS optimal times ``t_bs``; since
+  t_k^* is monotone nondecreasing as users are added, each candidate solve
+  passes ``t_bs`` to Eq. (11) as a tighter lower bracket.  The compiled
+  solvers run a FIXED iteration budget, so this buys accuracy per
+  iteration rather than wall-clock — it is what makes a reduced ``iters``
+  knob safe, and it lets the host-numpy mirror (which does early-exit)
+  stop after a couple of Newton steps.
+* :func:`dagsa_schedule_batch` vmaps the whole greedy over a stacked fleet
+  of problems; ``backend="pallas"`` routes the per-step [M, N] candidate
+  solves through the :mod:`repro.kernels.bandwidth_solve` kernel.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -21,21 +39,46 @@ import jax.numpy as jnp
 from repro.core import bandwidth
 from repro.core.types import ScheduleResult, SchedulingProblem
 
+_BACKENDS = ("jax", "pallas")
 
-def _bs_times_with_candidate(coeff, tcomp, assign, bs_bw, cand):
-    """t_k* if BS k additionally got its candidate user cand[k]."""
 
-    def per_bs(c_k, mask_k, bw_k, i_k):
+def _bs_times_with_candidate(coeff, tcomp, assign, bs_bw, cand,
+                             t_bs=None, method="newton", iters=None,
+                             backend="jax", interpret=None):
+    """t_k* if BS k additionally got its candidate user cand[k].
+
+    ``t_bs`` ([M], optional) warm-starts each solve with the BS's current
+    optimal time as the lower bracket.  ``backend="pallas"`` solves all M
+    trial rows in one :func:`repro.kernels.bandwidth_solve` call.
+    """
+    m = bs_bw.shape[0]
+    if backend == "pallas":
+        from repro.kernels.bandwidth_solve import bandwidth_solve
+        trial = assign.T.at[jnp.arange(m), cand].set(True)     # [M, N]
+        tc = jnp.broadcast_to(tcomp[None, :], trial.shape)
+        return bandwidth_solve(coeff.T, tc, trial, bs_bw, method=method,
+                               iters=iters, lo=t_bs, interpret=interpret)
+    if backend != "jax":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"choose from {_BACKENDS}")
+
+    def per_bs(c_k, mask_k, bw_k, i_k, hint_k):
         trial = mask_k.at[i_k].set(True)
-        return bandwidth.bs_time(c_k, tcomp, trial, bw_k)
+        return bandwidth.bs_time(c_k, tcomp, trial, bw_k, method=method,
+                                 iters=iters, lo_hint=hint_k)
 
-    return jax.vmap(per_bs, in_axes=(1, 1, 0, 0))(coeff, assign, bs_bw,
-                                                  cand)
+    hints = jnp.zeros((m,), coeff.dtype) if t_bs is None else t_bs
+    return jax.vmap(per_bs, in_axes=(1, 1, 0, 0, 0))(coeff, assign, bs_bw,
+                                                     cand, hints)
 
 
-@partial(jax.jit, static_argnames=("min_participants",))
-def _schedule(snr, coeff, tcomp, bs_bw, necessary, min_participants, key):
+@partial(jax.jit, static_argnames=("min_participants", "method", "iters",
+                                   "backend", "interpret"))
+def _schedule(snr, coeff, tcomp, bs_bw, necessary, min_participants, key,
+              method="newton", iters=None, backend="jax", interpret=None):
     n, m = snr.shape
+    solve = partial(_bs_times_with_candidate, method=method, iters=iters,
+                    backend=backend, interpret=interpret)
 
     # -- step 1: necessary users to their best-channel BS ------------------
     best_bs = jnp.argmax(snr, axis=1)
@@ -43,20 +86,26 @@ def _schedule(snr, coeff, tcomp, bs_bw, necessary, min_participants, key):
                & necessary[:, None])
     remaining0 = ~necessary
 
-    t_bs0 = jax.vmap(bandwidth.bs_time, in_axes=(1, None, 1, 0))(
-        coeff, tcomp, assign0, bs_bw)
+    t_bs0 = jax.vmap(
+        partial(bandwidth.bs_time, method=method, iters=iters),
+        in_axes=(1, None, 1, 0))(coeff, tcomp, assign0, bs_bw)
     t_star0 = jnp.max(t_bs0)
 
     def n_selected(assign):
         return jnp.sum(assign.any(axis=1))
 
-    def body(state):
-        assign, remaining, t_star, key = state
-        # candidate user per BS = best-channel remaining user
+    def candidates(assign, remaining, t_bs):
+        """Best-channel remaining user per BS + its trial t_k^*."""
         masked_snr = jnp.where(remaining[:, None], snr, -jnp.inf)
         cand = jnp.argmax(masked_snr, axis=0)                 # [M]
+        t_with = solve(coeff, tcomp, assign, bs_bw, cand, t_bs=t_bs)
+        return cand, t_with
+
+    cand0, t_with0 = candidates(assign0, remaining0, t_bs0)
+
+    def body(state):
+        assign, remaining, t_star, t_bs, cand, t_with, key = state
         has_cand = jnp.any(remaining)
-        t_with = _bs_times_with_candidate(coeff, tcomp, assign, bs_bw, cand)
         feasible = (t_with <= t_star) & has_cand
         any_feasible = jnp.any(feasible)
 
@@ -77,31 +126,97 @@ def _schedule(snr, coeff, tcomp, bs_bw, necessary, min_participants, key):
                                assign)
         new_remaining = jnp.where(do_add, remaining.at[i_star].set(False),
                                   remaining)
+        # the accepted candidate evaluation IS the BS's new optimal time
+        new_t_bs = jnp.where(do_add, t_bs.at[k_star].set(t_with[k_star]),
+                             t_bs)
         raised = jnp.maximum(t_star, t_with[k_star])
         new_t_star = jnp.where(do_add & ~any_feasible, raised, t_star)
-        return new_assign, new_remaining, new_t_star, key
+        new_cand, new_t_with = candidates(new_assign, new_remaining,
+                                          new_t_bs)
+        return (new_assign, new_remaining, new_t_star, new_t_bs, new_cand,
+                new_t_with, key)
 
     def cond(state):
-        assign, remaining, t_star, key = state
-        masked_snr = jnp.where(remaining[:, None], snr, -jnp.inf)
-        cand = jnp.argmax(masked_snr, axis=0)
-        t_with = _bs_times_with_candidate(coeff, tcomp, assign, bs_bw, cand)
+        assign, remaining, t_star, t_bs, cand, t_with, key = state
         any_feasible = jnp.any((t_with <= t_star) & jnp.any(remaining))
         need_more = n_selected(assign) < min_participants
         return jnp.any(remaining) & (any_feasible | need_more)
 
-    assign, _, _, _ = jax.lax.while_loop(
-        cond, body, (assign0, remaining0, t_star0, key))
+    assign, *_ = jax.lax.while_loop(
+        cond, body,
+        (assign0, remaining0, t_star0, t_bs0, cand0, t_with0, key))
 
-    t_k, user_bw = bandwidth.solve_all(coeff, tcomp, assign, bs_bw)
+    t_k, user_bw = bandwidth.solve_all(coeff, tcomp, assign, bs_bw,
+                                       method=method, iters=iters)
     selected = assign.any(axis=1)
     return assign, selected, user_bw, t_k, jnp.max(t_k)
 
 
-def dagsa_schedule_jit(problem: SchedulingProblem,
-                       key: jax.Array) -> ScheduleResult:
+def dagsa_schedule_jit(problem: SchedulingProblem, key: jax.Array,
+                       method: str = "newton",
+                       iters: int | None = None) -> ScheduleResult:
     assign, selected, bw, t_k, t_round = _schedule(
         problem.snr, problem.coeff, problem.tcomp, problem.bs_bw,
-        problem.necessary, int(problem.min_participants), key)
+        problem.necessary, int(problem.min_participants), key,
+        method=method, iters=iters)
+    return ScheduleResult(assign=assign, selected=selected, bw=bw,
+                          bs_time=t_k, t_round=t_round)
+
+
+# --------------------------------------------------------------- batched --
+def stack_problems(problems: Sequence[SchedulingProblem]) -> SchedulingProblem:
+    """Stack a fleet of same-shape problems along a new leading axis.
+
+    ``min_participants`` must agree across the fleet (it is a static
+    argument of the compiled greedy).
+    """
+    mins = {int(p.min_participants) for p in problems}
+    if len(mins) != 1:
+        raise ValueError(f"fleet min_participants must agree, got {mins}")
+    return SchedulingProblem(
+        snr=jnp.stack([p.snr for p in problems]),
+        tcomp=jnp.stack([p.tcomp for p in problems]),
+        bs_bw=jnp.stack([p.bs_bw for p in problems]),
+        coeff=jnp.stack([p.coeff for p in problems]),
+        necessary=jnp.stack([p.necessary for p in problems]),
+        min_participants=mins.pop())
+
+
+@partial(jax.jit, static_argnames=("min_participants", "method", "iters",
+                                   "backend", "interpret"))
+def _schedule_batch(snr, coeff, tcomp, bs_bw, necessary, min_participants,
+                    keys, method="newton", iters=None, backend="jax",
+                    interpret=None):
+    fn = partial(_schedule, min_participants=min_participants, method=method,
+                 iters=iters, backend=backend, interpret=interpret)
+    return jax.vmap(lambda s, c, t, b, ne, k: fn(s, c, t, b, ne, key=k))(
+        snr, coeff, tcomp, bs_bw, necessary, keys)
+
+
+def dagsa_schedule_batch(problems, keys: jax.Array, method: str = "newton",
+                         iters: int | None = None, backend: str = "jax",
+                         interpret: bool | None = None) -> ScheduleResult:
+    """DAGSA-X over a whole fleet of cells in ONE compiled call.
+
+    Args:
+      problems: a stacked :class:`SchedulingProblem` (leading fleet axis on
+        every array field) or a sequence of same-shape problems.
+      keys: [F, 2] PRNG keys, one per problem (``jax.random.split``).
+      method/iters: Eq. (11) solver knobs (safeguarded Newton by default).
+      backend: "jax" (vmapped scalar solver) or "pallas" (per-step [M, N]
+        candidate solves through the ``bandwidth_solve`` kernel).
+      interpret: pallas interpret-mode override (auto: True off-TPU).
+
+    Returns:
+      ScheduleResult with a leading fleet axis on every field.  Decisions
+      are identical to calling :func:`dagsa_schedule_jit` per problem with
+      the same keys.
+    """
+    if not isinstance(problems, SchedulingProblem):
+        problems = stack_problems(problems)
+    assign, selected, bw, t_k, t_round = _schedule_batch(
+        problems.snr, problems.coeff, problems.tcomp, problems.bs_bw,
+        problems.necessary, int(problems.min_participants), keys,
+        method=method, iters=iters, backend=backend, interpret=interpret)
     return ScheduleResult(assign=assign, selected=selected, bw=bw,
                           bs_time=t_k, t_round=t_round)

@@ -10,7 +10,11 @@ import jax.numpy as jnp
 from repro.core import baselines, dagsa
 from repro.core.types import ScheduleResult, SchedulingProblem, WirelessConfig
 
-SCHEDULERS = ("dagsa", "rs", "ub", "fedcs_low", "fedcs_high", "sa")
+SCHEDULERS = ("dagsa", "dagsa_jit", "rs", "ub", "fedcs_low", "fedcs_high",
+              "sa")
+
+# Schedulers with a fleet-batched entry point (see schedule_batch).
+BATCH_SCHEDULERS = ("dagsa_jit",)
 
 # FedCS time thresholds from paper §IV.
 FEDCS_LOW_S = 0.6
@@ -53,3 +57,19 @@ def schedule(name: str, problem: SchedulingProblem, cfg: WirelessConfig,
     if name == "sa":
         return baselines.sa_schedule(problem)
     raise ValueError(f"unknown scheduler {name!r}; choose from {SCHEDULERS}")
+
+
+def schedule_batch(name: str, problems, keys: jax.Array,
+                   **kwargs) -> ScheduleResult:
+    """Schedule a whole fleet of same-shape problems in one compiled call.
+
+    ``problems`` is a stacked :class:`SchedulingProblem` (leading fleet axis)
+    or a sequence of problems; ``keys`` is [F, 2] PRNG keys.  Extra kwargs
+    (``method``, ``iters``, ``backend``) reach the batched implementation.
+    Decisions match the per-problem scheduler with the same keys.
+    """
+    if name == "dagsa_jit":
+        from repro.core import dagsa_jit
+        return dagsa_jit.dagsa_schedule_batch(problems, keys, **kwargs)
+    raise ValueError(f"unknown batch scheduler {name!r}; "
+                     f"choose from {BATCH_SCHEDULERS}")

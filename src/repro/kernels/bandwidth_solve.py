@@ -1,12 +1,20 @@
-"""Batched Eq. (11) bisection as a Pallas TPU kernel — the control plane's
+"""Batched Eq. (11) root-finder as a Pallas TPU kernel — the control plane's
 hot spot at fleet scale (BS x users x Monte-Carlo sweeps).
 
-Each program solves a block of BS rows: users live in lanes, the bisection
-state (lo, hi) lives in VREGs, and the fixed-iteration loop does one masked
-lane-reduction per step.  No data-dependent control flow -> trivially
-vmappable across thousands of simulated cells.
+Each program solves a block of BS rows: users live in lanes, the solver
+state (bracket + iterate) lives in VREGs, and the fixed-iteration loop does
+one masked lane-reduction per step.  No data-dependent control flow ->
+trivially vmappable across thousands of simulated cells.
 
-Layout: coeff/tcomp/mask [K, U] (U padded to the lane width), bw [K, 1].
+Two methods share the kernel skeleton (see repro.core.bandwidth for the
+derivation): "newton" (default) runs the safeguarded Newton iteration —
+tangent step clamped to the live bisection bracket, ~8 steps to float32
+tolerance — and "bisect" reproduces the seed's fixed 60-halving loop.  An
+optional ``lo`` row vector warm-starts the bracket (t_k^* is monotone
+nondecreasing in the scheduled set, so a greedy caller passes the previous
+per-BS time).
+
+Layout: coeff/tcomp/mask [K, U] (U padded to the lane width), bw/lo [K, 1].
 """
 from __future__ import annotations
 
@@ -16,63 +24,101 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.bandwidth import default_iters
+
 DEFAULT_ROW_BLOCK = 8
-ITERS = 60
 
 
-def _bw_kernel(c_ref, t_ref, m_ref, bw_ref, o_ref, *, iters: int):
+def _bw_kernel(c_ref, t_ref, m_ref, bw_ref, lo_ref, o_ref, *, iters: int,
+               method: str):
     c = c_ref[...].astype(jnp.float32)            # [R, U]
     tc = t_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)            # 1.0 selected / 0.0 not
     bw = bw_ref[...].astype(jnp.float32)          # [R, 1]
+    lo_hint = lo_ref[...].astype(jnp.float32)     # [R, 1]
 
     any_user = jnp.sum(m, axis=-1, keepdims=True) > 0
     csum = jnp.sum(c * m, axis=-1, keepdims=True)
     tmax = jnp.max(jnp.where(m > 0, tc, -jnp.inf), axis=-1, keepdims=True)
     tmax = jnp.where(any_user, tmax, 0.0)
-    lo = tmax
     hi = tmax + csum / jnp.maximum(bw, 1e-12) + 1e-9
+    lo = jnp.clip(lo_hint, tmax, hi)
 
-    def body(_, lohi):
-        lo, hi = lohi
-        mid = 0.5 * (lo + hi)
-        demand = jnp.sum(
-            jnp.where(m > 0, c / jnp.maximum(mid - tc, 1e-12), 0.0),
-            axis=-1, keepdims=True)
-        too_fast = demand > bw
-        return jnp.where(too_fast, mid, lo), jnp.where(too_fast, hi, mid)
+    def f_df(t):
+        # one divide per lane: demand term c*r, slope term -c*r^2
+        r = 1.0 / jnp.maximum(t - tc, 1e-12)
+        inv = jnp.where(m > 0, c * r, 0.0)
+        f = jnp.sum(inv, axis=-1, keepdims=True) - bw
+        df = -jnp.sum(inv * r, axis=-1, keepdims=True)
+        return f, df
 
-    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    t = 0.5 * (lo + hi)
+    if method == "bisect":
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            f, _ = f_df(mid)
+            too_fast = f > 0
+            return jnp.where(too_fast, mid, lo), jnp.where(too_fast, hi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+        t = 0.5 * (lo + hi)
+    else:
+        def body(_, state):
+            lo, hi, t = state
+            f, df = f_df(t)
+            below = f > 0                         # t left of the root
+            lo = jnp.where(below, t, lo)
+            hi = jnp.where(below, hi, t)
+            t_newton = t - f / jnp.minimum(df, -1e-12)
+            safe = (t_newton > lo) & (t_newton < hi)
+            t = jnp.where(safe, t_newton, 0.5 * (lo + hi))
+            return lo, hi, t
+
+        _, _, t = jax.lax.fori_loop(0, iters, body, (lo, hi, hi))
     o_ref[...] = jnp.where(any_user, t, 0.0).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("row_block", "iters",
+@functools.partial(jax.jit, static_argnames=("row_block", "iters", "method",
                                              "interpret"))
 def bandwidth_solve(coeff: jnp.ndarray, tcomp: jnp.ndarray,
                     mask: jnp.ndarray, bw: jnp.ndarray,
-                    row_block: int = DEFAULT_ROW_BLOCK, iters: int = ITERS,
-                    interpret: bool = False) -> jnp.ndarray:
-    """coeff/tcomp/mask [K, U]; bw [K] -> t* [K]."""
+                    lo: jnp.ndarray | None = None,
+                    row_block: int = DEFAULT_ROW_BLOCK,
+                    iters: int | None = None, method: str = "newton",
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """coeff/tcomp/mask [K, U]; bw (and optional warm-start lo) [K] -> t* [K].
+
+    ``interpret=None`` auto-enables interpret mode off-TPU so the same entry
+    point runs everywhere (CPU tests/benches vs real TPU lowering).
+    """
+    method_default = default_iters(method)   # rejects unknown methods
+    if iters is None:
+        iters = method_default
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     k, u = coeff.shape
     rb = min(row_block, k)
     pad = (-k) % rb
     mask_f = mask.astype(jnp.float32)
+    lo = jnp.zeros((k,), jnp.float32) if lo is None else lo
     if pad:
         coeff = jnp.pad(coeff, ((0, pad), (0, 0)))
         tcomp = jnp.pad(tcomp, ((0, pad), (0, 0)))
         mask_f = jnp.pad(mask_f, ((0, pad), (0, 0)))
         bw = jnp.pad(bw, ((0, pad),), constant_values=1.0)
+        lo = jnp.pad(lo, ((0, pad),))
     bw2 = bw.reshape(-1, 1)
+    lo2 = lo.reshape(-1, 1)
     out = pl.pallas_call(
-        functools.partial(_bw_kernel, iters=iters),
+        functools.partial(_bw_kernel, iters=iters, method=method),
         grid=((k + pad) // rb,),
         in_specs=[pl.BlockSpec((rb, u), lambda r: (r, 0)),
                   pl.BlockSpec((rb, u), lambda r: (r, 0)),
                   pl.BlockSpec((rb, u), lambda r: (r, 0)),
+                  pl.BlockSpec((rb, 1), lambda r: (r, 0)),
                   pl.BlockSpec((rb, 1), lambda r: (r, 0))],
         out_specs=pl.BlockSpec((rb, 1), lambda r: (r, 0)),
         out_shape=jax.ShapeDtypeStruct((k + pad, 1), jnp.float32),
         interpret=interpret,
-    )(coeff, tcomp, mask_f, bw2)
+    )(coeff, tcomp, mask_f, bw2, lo2)
     return out[:k, 0]

@@ -35,11 +35,15 @@ def ssd_scan(x, dt, A, B, C, chunk: int) -> jnp.ndarray:
     return ssd_chunked(x, dt, A, B, C, chunk)
 
 
-def bandwidth_solve(coeff, tcomp, mask, bw, iters: int = 60) -> jnp.ndarray:
-    """Batched Eq.(11) bisection oracle.
+def bandwidth_solve(coeff, tcomp, mask, bw, iters: int | None = None,
+                    method: str = "newton", lo=None) -> jnp.ndarray:
+    """Batched Eq.(11) root-finding oracle (safeguarded Newton or bisection).
 
-    coeff/tcomp/mask: [K, U]; bw: [K] -> t* [K].
+    coeff/tcomp/mask: [K, U]; bw (and optional warm-start lo): [K] -> t* [K].
     """
     from repro.core.bandwidth import bs_time
-    return jax.vmap(lambda c, t, m, b: bs_time(c, t, m, b, iters=iters))(
-        coeff, tcomp, mask, bw)
+    if lo is None:
+        lo = jnp.zeros_like(bw)
+    return jax.vmap(lambda c, t, m, b, l: bs_time(
+        c, t, m, b, iters=iters, method=method, lo_hint=l))(
+        coeff, tcomp, mask, bw, lo)

@@ -16,7 +16,7 @@ from repro.fl.rounds import accuracy_at_budget
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scheduler", default="dagsa",
-                    choices=list(SCHEDULERS) + ["dagsa_jit"])
+                    choices=list(SCHEDULERS))
     ap.add_argument("--dataset", default="mnist", choices=sorted(DATASETS))
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--speed", type=float, default=None)

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.core import WirelessConfig, bandwidth, channel, mobility
 from repro.core.baselines import fedcs_schedule, sa_schedule
