@@ -1,41 +1,46 @@
-"""Paper Fig. 4: effect of user speed on FL performance (DAGSA)."""
+"""Paper Fig. 4: mobility/scenario effects, via the batched scenario sweep.
+
+Runs the registered scenarios through ``repro.launch.sweep.run_sweep`` (one
+compiled wireless loop per shape bucket) and reports one record per
+scenario.  Each record is emitted twice:
+
+  * a CSV row (the harness contract ``name,us_per_call,derived``) whose
+    value column is the mean round latency in microseconds;
+  * a ``#json `` comment line carrying the machine-readable record.
+
+JSON record schema (a strict subset of the ``repro.launch.sweep`` schema):
+
+    {"scenario": str,          # registry name
+     "mobility": str,          # mobility model key
+     "speed_mps": float,       # scenario speed
+     "n_seeds": int, "n_rounds": int,
+     "t_round_mean_s": float,  # mean Eq. (3) round latency, seeds x rounds
+     "t_round_p95_s": float,   # 95th percentile, pooled seeds x rounds —
+                               #   mobility's primary effect is on the TAIL
+                               #   (stuck users forced in by fairness)
+     "min_part_rate": float}   # final-round min_i counts_i / rounds,
+                               #   the Eq. (8g) fairness monitor
+"""
 from __future__ import annotations
 
-import numpy as np
+import json
 
 from benchmarks.common import emit
-from repro.fl import FLConfig, FLSimulation
-from repro.fl.rounds import accuracy_at_budget
+from repro.core.scenario import SCENARIOS
+from repro.launch.sweep import run_sweep
+
+_SCHEMA_KEYS = ("scenario", "mobility", "speed_mps", "n_seeds", "n_rounds",
+                "t_round_mean_s", "t_round_p95_s", "min_part_rate")
 
 
 def run(quick: bool = True) -> None:
-    speeds = [0.0, 5.0, 20.0, 50.0] if quick else \
-        [0.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0]
+    names = ["static", "paper-default", "high-mobility", "waypoint"] \
+        if quick else list(SCENARIOS)
+    n_seeds = 2 if quick else 4
     n_rounds = 12 if quick else 30
-    seeds = [3, 4] if quick else [3, 4, 5]
-    # uniform (paper-literal) BS placement: static v=0 runs can draw bad
-    # geometry they can never escape — exactly the paper's Fig. 4 effect.
-    runs: dict = {}
-    for v in speeds:
-        runs[v] = []
-        for seed in seeds:
-            cfg = FLConfig(dataset="mnist", scheduler="dagsa", n_train=1000,
-                           n_test=500, batch_size=20, eval_every=1,
-                           speed_mps=v, seed=seed, bs_layout="uniform")
-            sim = FLSimulation(cfg)
-            runs[v].append(sim.run(n_rounds))
-    # one SHARED budget across all speeds (the paper's same-budget axis)
-    budget = 0.95 * min(recs[-1].wall_clock
-                        for rs in runs.values() for recs in rs)
-    for v in speeds:
-        lats = [np.mean([r.t_round for r in recs]) for recs in runs[v]]
-        p95s = [np.percentile([r.t_round for r in recs], 95)
-                for recs in runs[v]]
-        acc_b = np.mean([accuracy_at_budget(recs, budget)
-                         for recs in runs[v]])
-        # mobility's primary effect is on the latency TAIL (stuck users
-        # forced in by fairness); p95 is the sensitive statistic
-        emit(f"fig4_speed_{v:g}mps", np.mean(lats) * 1e6,
-             f"acc@{budget:.1f}s={acc_b:.3f} "
-             f"mean_t_round={np.mean(lats):.3f}s "
-             f"p95_t_round={np.mean(p95s):.3f}s")
+    for rec in run_sweep(names, n_seeds=n_seeds, n_rounds=n_rounds):
+        row = {k: rec[k] for k in _SCHEMA_KEYS}
+        emit(f"fig4_{rec['scenario']}", rec["t_round_mean_s"] * 1e6,
+             f"p95_t_round={rec['t_round_p95_s']:.3f}s "
+             f"min_part_rate={rec['min_part_rate']:.2f}")
+        print(f"#json {json.dumps(row)}")

@@ -1,30 +1,36 @@
 """Mobility study (paper Fig. 4): does user speed help FL?
 
-Sweeps the Random-Direction speed and reports accuracy reached within a
-fixed simulated time budget under DAGSA scheduling.
+Runs the same FL pipeline in three named scenarios from the registry
+(`repro.core.scenario`) and reports accuracy reached within a fixed
+simulated time budget under DAGSA scheduling.  For latency/fairness-only
+sweeps across ALL scenarios, use the batched engine instead:
+
+    PYTHONPATH=src python -m repro.launch.sweep --seeds 4
 
     PYTHONPATH=src python examples/fl_mobility_study.py
 """
+from repro.core.scenario import get_scenario
 from repro.fl import FLConfig, FLSimulation
 from repro.fl.rounds import accuracy_at_budget
 
-SPEEDS = [0.0, 5.0, 20.0, 50.0]
+SCENARIOS_TO_RUN = ["static", "paper-default", "high-mobility"]
 N_ROUNDS = 8
 BUDGET_S = 3.0
 
 
 def main() -> None:
-    print(f"{'speed m/s':>9} {'acc@'+str(BUDGET_S)+'s':>9} "
+    print(f"{'scenario':>14} {'speed m/s':>9} {'acc@'+str(BUDGET_S)+'s':>9} "
           f"{'mean t_round':>12}")
-    for v in SPEEDS:
+    for name in SCENARIOS_TO_RUN:
+        spec = get_scenario(name)
         cfg = FLConfig(dataset="mnist", scheduler="dagsa", n_train=1000,
                        n_test=500, batch_size=20, eval_every=1,
-                       speed_mps=v, seed=0)
+                       scenario=name, seed=0)
         sim = FLSimulation(cfg)
         recs = sim.run(N_ROUNDS)
         mean_t = sum(r.t_round for r in recs) / len(recs)
-        print(f"{v:9.1f} {accuracy_at_budget(recs, BUDGET_S):9.3f} "
-              f"{mean_t:12.3f}")
+        print(f"{name:>14} {spec.speed_mps:9.1f} "
+              f"{accuracy_at_budget(recs, BUDGET_S):9.3f} {mean_t:12.3f}")
 
 
 if __name__ == "__main__":

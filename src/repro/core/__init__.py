@@ -5,9 +5,14 @@ from repro.core.types import (MobilityState, ScheduleResult,
 from repro.core.scheduler import (BATCH_SCHEDULERS, SCHEDULERS,
                                   ParticipationState, schedule,
                                   schedule_batch)
+from repro.core.mobility import MOBILITY_MODELS, register_mobility_model
+from repro.core.scenario import (SCENARIOS, ScenarioSpec, get_scenario,
+                                 register_scenario)
 
 __all__ = [
     "MobilityState", "ScheduleResult", "SchedulingProblem", "WirelessConfig",
     "BATCH_SCHEDULERS", "SCHEDULERS", "ParticipationState", "schedule",
     "schedule_batch",
+    "MOBILITY_MODELS", "register_mobility_model",
+    "SCENARIOS", "ScenarioSpec", "get_scenario", "register_scenario",
 ]

@@ -84,14 +84,17 @@ def sample_tcomp(key: jax.Array, cfg: WirelessConfig) -> jnp.ndarray:
 
 def make_problem(key: jax.Array, state: MobilityState, cfg: WirelessConfig,
                  part_counts: jnp.ndarray, round_idx: int,
-                 bs_bw: jnp.ndarray | None = None) -> SchedulingProblem:
+                 bs_bw: jnp.ndarray | None = None,
+                 shadow_db: jnp.ndarray | None = None) -> SchedulingProblem:
     """Assemble one round's SchedulingProblem from the physical state.
 
     ``necessary`` implements Eq. (8g): user i must participate this round if
     its historical participation count would otherwise fall below rho1 * n.
+    ``shadow_db`` optionally stacks a [N, M] shadowing field (dB) on top of
+    the Rayleigh fading (scenario engine's ``shadowing`` option).
     """
     k_snr, k_tc = jax.random.split(key)
-    snr = sample_snr(k_snr, state.distances(), cfg)
+    snr = sample_snr(k_snr, state.distances(), cfg, shadow_db=shadow_db)
     tcomp = sample_tcomp(k_tc, cfg)
     coeff = bandwidth_time_coeff(snr, cfg)
     if bs_bw is None:

@@ -1,0 +1,161 @@
+"""Declarative wireless-FL scenarios: ``ScenarioSpec`` + named registry.
+
+The paper's headline result is that the *scenario* — mobility speed, BS
+layout, bandwidth heterogeneity — changes which scheduler wins (Fig. 3/4).
+A :class:`ScenarioSpec` captures one such world declaratively; the registry
+(``SCENARIOS``) names the built-ins so every "does X help under Y
+conditions" question is a one-line lookup:
+
+    from repro.core.scenario import get_scenario
+    spec = get_scenario("high-mobility")
+    cfg = spec.wireless()          # WirelessConfig with the overrides baked
+
+Specs are frozen dataclasses of plain hashable scalars, so they can be
+passed as *static* arguments to jitted functions; everything dynamic (the
+bandwidth draw, the shadowing field) is sampled from explicit keys.  The
+batched sweep (:mod:`repro.launch.sweep`) lowers a list of specs into
+per-scenario parameter arrays and runs them through ONE compiled wireless
+loop, bucketed only by array shape (n_users, n_bs).
+
+See docs/SCENARIOS.md for the authoring guide and the built-in table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mobility import MOBILITY_MODELS
+from repro.core.types import WirelessConfig
+
+BS_LAYOUTS = ("grid", "uniform")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One declarative mobility/channel world.
+
+    ``None`` for an optional field means "inherit the base WirelessConfig".
+    ``bw_min_mhz``/``bw_max_mhz`` set jointly enable the Fig. 3
+    heterogeneous-bandwidth draw B_k ~ U[min, max]; ``shadowing`` switches
+    on the spatially-correlated log-normal field of
+    :func:`repro.core.channel.sample_shadowing`.
+    """
+
+    name: str
+    description: str = ""
+    figure: str = ""                    # paper figure the scenario reproduces
+    # -- mobility ----------------------------------------------------------
+    mobility: str = "rd"                # key into MOBILITY_MODELS
+    speed_mps: float = 20.0
+    pause_s: float = 0.0                # waypoint pause time
+    gm_memory: float = 0.75             # gauss_markov AR(1) coefficient
+    # -- topology ----------------------------------------------------------
+    bs_layout: str = "grid"             # grid | uniform
+    n_bs: Optional[int] = None
+    # -- bandwidth / compute heterogeneity ---------------------------------
+    bw_min_mhz: Optional[float] = None  # both set -> B_k ~ U[min, max]
+    bw_max_mhz: Optional[float] = None
+    tcomp_min_s: Optional[float] = None
+    tcomp_max_s: Optional[float] = None
+    # -- fading ------------------------------------------------------------
+    shadowing: bool = False
+    shadow_sigma_db: float = 8.0
+
+    def __post_init__(self):
+        if self.mobility not in MOBILITY_MODELS:
+            raise ValueError(f"unknown mobility model {self.mobility!r}; "
+                             f"choose from {tuple(MOBILITY_MODELS)}")
+        if self.bs_layout not in BS_LAYOUTS:
+            raise ValueError(f"unknown bs_layout {self.bs_layout!r}; "
+                             f"choose from {BS_LAYOUTS}")
+        if (self.bw_min_mhz is None) != (self.bw_max_mhz is None):
+            raise ValueError("set bw_min_mhz and bw_max_mhz together")
+        if self.bw_min_mhz is not None and self.bw_max_mhz < self.bw_min_mhz:
+            raise ValueError("bw_max_mhz must be >= bw_min_mhz")
+        if not 0.0 <= self.gm_memory < 1.0:
+            raise ValueError("gm_memory must be in [0, 1)")
+        assert self.speed_mps >= 0.0 and self.pause_s >= 0.0
+
+    # ------------------------------------------------------------- derive --
+    def wireless(self, base: WirelessConfig | None = None) -> WirelessConfig:
+        """Base WirelessConfig with this scenario's static overrides baked."""
+        base = base or WirelessConfig()
+        over: dict = {"speed_mps": self.speed_mps}
+        if self.n_bs is not None:
+            over["n_bs"] = self.n_bs
+        if self.tcomp_min_s is not None:
+            over["tcomp_min_s"] = self.tcomp_min_s
+        if self.tcomp_max_s is not None:
+            over["tcomp_max_s"] = self.tcomp_max_s
+        return dataclasses.replace(base, **over)
+
+    def sample_bs_bw(self, key: jax.Array, cfg: WirelessConfig) -> jnp.ndarray:
+        """[M] per-BS bandwidth budget; uniform draw iff heterogeneous."""
+        if self.bw_min_mhz is None:
+            return jnp.full((cfg.n_bs,), cfg.bs_bandwidth_mhz)
+        return jax.random.uniform(key, (cfg.n_bs,), minval=self.bw_min_mhz,
+                                  maxval=self.bw_max_mhz)
+
+
+# ---------------------------------------------------------------- registry --
+SCENARIOS: dict[str, ScenarioSpec] = {}
+
+
+def register_scenario(spec: ScenarioSpec, overwrite: bool = False) -> ScenarioSpec:
+    """Add a spec to the registry (one-liner for custom scenarios)."""
+    if spec.name in SCENARIOS and not overwrite:
+        raise ValueError(f"scenario {spec.name!r} already registered")
+    SCENARIOS[spec.name] = spec
+    return spec
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; choose from "
+                         f"{tuple(SCENARIOS)}") from None
+
+
+# Built-ins.  `figure` names the paper plot whose regime the scenario probes.
+_BUILTINS = (
+    ScenarioSpec(
+        name="paper-default", figure="Fig. 2",
+        description="RD mobility at 20 m/s, grid BSs, homogeneous 1 MHz "
+                    "bandwidth — the paper's baseline world."),
+    ScenarioSpec(
+        name="static", figure="Fig. 4 (v=0)", mobility="static",
+        speed_mps=0.0, bs_layout="uniform",
+        description="No mobility: users can be stuck with bad geometry "
+                    "forever, the fairness-forced tail regime."),
+    ScenarioSpec(
+        name="high-mobility", figure="Fig. 4 (v=100)", speed_mps=100.0,
+        description="RD at 100 m/s: channel decorrelates every round, "
+                    "mobility acts as user diversity."),
+    ScenarioSpec(
+        name="hetero-bw", figure="Fig. 3", bw_min_mhz=0.5, bw_max_mhz=1.5,
+        description="Heterogeneous per-BS bandwidth B_k ~ U[0.5, 1.5] MHz."),
+    ScenarioSpec(
+        name="shadowed", figure="Fig. 4 mechanism", shadowing=True,
+        description="Spatially-correlated log-normal shadowing (8 dB): "
+                    "static users keep their shadowing draw, movers "
+                    "resample it."),
+    ScenarioSpec(
+        name="dense-bs", n_bs=16,
+        description="2x the paper's BS density: shorter links, scheduling "
+                    "pressure shifts from SNR to bandwidth."),
+    ScenarioSpec(
+        name="sparse-bs", n_bs=3, bs_layout="uniform",
+        description="Sparse coverage: long links dominate, the latency "
+                    "tail is geometry-bound."),
+    ScenarioSpec(
+        name="waypoint", mobility="waypoint", pause_s=2.0,
+        description="Random Waypoint with 2 s pauses: bursty mobility with "
+                    "center-biased stationary density."),
+)
+for _spec in _BUILTINS:
+    register_scenario(_spec)
+del _spec

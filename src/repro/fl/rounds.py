@@ -22,8 +22,9 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import (ParticipationState, WirelessConfig, channel,
-                        mobility, scheduler as sched)
+from repro.core import (MobilityState, ParticipationState, WirelessConfig,
+                        channel, mobility, scheduler as sched)
+from repro.core.scenario import get_scenario
 from repro.data import make_dataset
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
@@ -52,6 +53,10 @@ class FLConfig:
     bs_layout: str = "grid"         # grid | uniform (uniform = paper's
                                     # literal reading; grid avoids the
                                     # degenerate all-in-one-corner draw)
+    scenario: Optional[str] = None  # registry name (core.scenario); sets
+                                    # mobility model, layout, bandwidth and
+                                    # shadowing in one word.  Explicit
+                                    # speed_mps/hetero_bw flags still win.
 
 
 @dataclasses.dataclass
@@ -69,7 +74,18 @@ class FLSimulation:
 
     def __init__(self, cfg: FLConfig):
         self.cfg = cfg
-        w = cfg.wireless
+        spec = get_scenario(cfg.scenario) if cfg.scenario else None
+        w = spec.wireless(cfg.wireless) if spec else cfg.wireless
+        if cfg.speed_mps is not None:      # explicit CLI/config override wins
+            if spec and spec.mobility == "static" and cfg.speed_mps > 0.0:
+                raise ValueError(
+                    f"scenario {spec.name!r} uses the 'static' mobility "
+                    f"model, which ignores speed; speed_mps="
+                    f"{cfg.speed_mps} would silently do nothing — pick a "
+                    f"mobile scenario or drop the speed override")
+            w = dataclasses.replace(w, speed_mps=cfg.speed_mps)
+        self.scenario = spec
+        self.wireless = w                  # resolved wireless config
         key = jax.random.PRNGKey(cfg.seed)
         (k_data, k_part, k_pos, k_model, k_bw, self._key) = \
             jax.random.split(key, 6)
@@ -87,14 +103,27 @@ class FLSimulation:
         self.cnn_cfg = cfg.cnn or cnn.CNNConfig(height=h, width=wd, channels=c)
         self.params = cnn.init(k_model, self.cnn_cfg)
 
-        if cfg.bs_layout == "uniform":
+        layout = spec.bs_layout if spec else cfg.bs_layout
+        if layout == "uniform":
             self.mob = mobility.init_positions(k_pos, w)
         else:
             self.mob = mobility.init_positions_grid_bs(k_pos, w)
+        # mobility model + kinematic aux state (scenario engine); plain RD
+        # with an unused aux when no scenario is set.
+        self._mob_model = spec.mobility if spec else "rd"
+        self._mob_pause = spec.pause_s if spec else 0.0
+        self._mob_gm = spec.gm_memory if spec else 0.75
+        self._mob_aux = mobility.init_aux(jax.random.fold_in(k_pos, 1),
+                                          w.n_users, w)
+        self._shadow_sigma = (spec.shadow_sigma_db
+                              if spec and spec.shadowing else 0.0)
+        self._k_shadow = jax.random.fold_in(k_bw, 7)
         self.part = ParticipationState.init(w.n_users)
         if cfg.hetero_bw:
             self.bs_bw = jax.random.uniform(k_bw, (w.n_bs,), minval=0.5,
                                             maxval=1.5)
+        elif spec is not None:
+            self.bs_bw = spec.sample_bs_bw(k_bw, w)
         else:
             self.bs_bw = jnp.full((w.n_bs,), w.bs_bandwidth_mhz)
 
@@ -113,16 +142,23 @@ class FLSimulation:
         return [self.run_round() for _ in range(n_rounds)]
 
     def run_round(self) -> RoundRecord:
-        cfg, w = self.cfg, self.cfg.wireless
+        cfg, w = self.cfg, self.wireless
         self._key, k_mob, k_prob, k_sched, k_fleet = \
             jax.random.split(self._key, 5)
 
-        # 1. mobility
-        self.mob = mobility.step(k_mob, self.mob, w,
-                                 speed_mps=cfg.speed_mps)
-        # 2. observe channels
+        # 1. mobility (model chosen by the scenario; plain RD by default)
+        pos, self._mob_aux = mobility.step_named(
+            self._mob_model, k_mob, self.mob.user_pos, self._mob_aux, w,
+            pause_s=self._mob_pause, gm_memory=self._mob_gm)
+        self.mob = MobilityState(user_pos=pos, bs_pos=self.mob.bs_pos)
+        # 2. observe channels (shadowing field is consistent across rounds)
+        shadow_db = None
+        if self._shadow_sigma > 0.0:
+            shadow_db = self._shadow_sigma * channel.sample_shadowing(
+                self._k_shadow, pos, self.mob.bs_pos, w, sigma_db=1.0)
         prob = channel.make_problem(k_prob, self.mob, w, self.part.counts,
-                                    self.part.round_idx, bs_bw=self.bs_bw)
+                                    self.part.round_idx, bs_bw=self.bs_bw,
+                                    shadow_db=shadow_db)
         # 3. schedule
         res = sched.schedule(cfg.scheduler, prob, w, k_sched,
                              seed=cfg.seed * 100003 + self.round_idx)

@@ -2,11 +2,16 @@
 
     PYTHONPATH=src python -m repro.launch.fl_sim \
         --scheduler dagsa --dataset mnist --rounds 20 --speed 20
+
+    # same, in a named scenario (see repro.core.scenario / docs/SCENARIOS.md)
+    PYTHONPATH=src python -m repro.launch.fl_sim \
+        --scheduler dagsa --scenario high-mobility --rounds 20
 """
 from __future__ import annotations
 
 import argparse
 
+from repro.core.scenario import SCENARIOS
 from repro.core.scheduler import SCHEDULERS
 from repro.data.synthetic import DATASETS
 from repro.fl import FLConfig, FLSimulation
@@ -21,6 +26,9 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--speed", type=float, default=None)
     ap.add_argument("--hetero-bw", action="store_true")
+    ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
+                    help="named scenario: mobility model, BS layout, "
+                         "bandwidth and shadowing in one word")
     ap.add_argument("--n-train", type=int, default=1000)
     ap.add_argument("--batch-size", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
@@ -31,7 +39,7 @@ def main() -> None:
                    n_train=args.n_train, n_test=500,
                    batch_size=args.batch_size, eval_every=args.eval_every,
                    seed=args.seed, speed_mps=args.speed,
-                   hetero_bw=args.hetero_bw)
+                   hetero_bw=args.hetero_bw, scenario=args.scenario)
     sim = FLSimulation(cfg)
     print(f"{'round':>5} {'t_round':>8} {'clock':>8} {'users':>5} "
           f"{'acc':>6} {'min_fair':>8}")

@@ -1,0 +1,234 @@
+"""Fully-batched multi-scenario, multi-seed wireless sweep.
+
+One compiled loop runs (mobility step -> channel sample -> DAGSA-X
+schedule) as a ``lax.scan`` over rounds, vmapped over seeds x scenarios.
+Scenario differences (mobility model, speed, BS layout, bandwidth draw,
+shadowing, compute spread) are DATA — per-scenario parameter arrays feeding
+a ``lax.switch`` over the mobility registry — so adding a scenario never
+re-traces; only a different array *shape* (n_users, n_bs) opens a new
+compilation bucket.  Candidate bandwidth solves go through the same
+``repro.core.dagsa_jit._schedule`` greedy the fleet engine batches
+(``backend="pallas"`` routes them through the Pallas kernel).
+
+CLI (emits per-scenario JSON latency/fairness curves, schema below):
+
+    PYTHONPATH=src python -m repro.launch.sweep \
+        --scenarios paper-default,high-mobility --seeds 4 --rounds 10
+
+Record schema (one dict per scenario, JSON list on stdout / ``--out``):
+
+    {"scenario": str, "mobility": str, "speed_mps": float,
+     "n_seeds": int, "n_rounds": int,
+     "t_round_mean_s": float,          # mean Eq. (3) latency, seeds x rounds
+     "t_round_p95_s": float,           # 95th pct, pooled seeds x rounds
+     "participants_mean": float,       # mean selected users per round
+     "min_part_rate": float,           # final-round min_i counts_i / round,
+                                       #   the Eq. (8g) fairness monitor
+     "curves": {"t_round_s": [R], "n_selected": [R],
+                "min_part_rate": [R]}} # per-round means across seeds
+
+Seeds are PAIRED across scenarios in the same shape bucket (same geometry/
+fading keys), a variance-reduction trick for A-vs-B scenario comparisons.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel, dagsa_jit, mobility
+from repro.core.scenario import SCENARIOS, BS_LAYOUTS, ScenarioSpec, \
+    get_scenario
+from repro.core.types import MobilityState, WirelessConfig
+
+
+# -------------------------------------------------------------- lowering ---
+def _scenario_params(specs: Sequence[ScenarioSpec],
+                     cfg: WirelessConfig) -> dict:
+    """Lower specs to per-scenario parameter arrays [S] (all traced)."""
+    f32 = jnp.float32
+
+    def arr(fn, dtype=f32):
+        return jnp.asarray([fn(s) for s in specs], dtype)
+
+    return {
+        "model_id": arr(lambda s: mobility.model_index(s.mobility),
+                        jnp.int32),
+        "layout_id": arr(lambda s: BS_LAYOUTS.index(s.bs_layout), jnp.int32),
+        "speed": arr(lambda s: s.speed_mps),
+        "pause_s": arr(lambda s: s.pause_s),
+        "gm_memory": arr(lambda s: s.gm_memory),
+        "bw_min": arr(lambda s: s.bw_min_mhz if s.bw_min_mhz is not None
+                      else cfg.bs_bandwidth_mhz),
+        "bw_max": arr(lambda s: s.bw_max_mhz if s.bw_max_mhz is not None
+                      else cfg.bs_bandwidth_mhz),
+        "shadow_sigma": arr(lambda s: s.shadow_sigma_db if s.shadowing
+                            else 0.0),
+        "tcomp_min": arr(lambda s: s.tcomp_min_s if s.tcomp_min_s is not None
+                         else cfg.tcomp_min_s),
+        "tcomp_max": arr(lambda s: s.tcomp_max_s if s.tcomp_max_s is not None
+                         else cfg.tcomp_max_s),
+    }
+
+
+def _bs_positions(key: jax.Array, layout_id, cfg: WirelessConfig):
+    """[M, 2] BS positions; grid vs uniform selected by traced layout_id."""
+    kg, ku = jax.random.split(key)
+    grid = mobility.grid_bs_positions(kg, cfg.n_bs, cfg.area_m)
+    uniform = jax.random.uniform(ku, (cfg.n_bs, 2), minval=0.0,
+                                 maxval=cfg.area_m)
+    return jnp.where(layout_id == BS_LAYOUTS.index("grid"), grid, uniform)
+
+
+# ------------------------------------------------------------ compiled core --
+def _one_cell(p: dict, key: jax.Array, cfg: WirelessConfig, n_rounds: int,
+              min_participants: int, backend: str) -> dict:
+    """One (scenario, seed) cell: init world, scan the wireless loop."""
+    k_pos, k_bs, k_bw, k_aux, k_shadow, k_run = jax.random.split(key, 6)
+    pos0 = jax.random.uniform(k_pos, (cfg.n_users, 2), minval=0.0,
+                              maxval=cfg.area_m)
+    bs_pos = _bs_positions(k_bs, p["layout_id"], cfg)
+    bs_bw = p["bw_min"] + jax.random.uniform(k_bw, (cfg.n_bs,)) * \
+        (p["bw_max"] - p["bw_min"])
+    aux0 = mobility.init_aux(k_aux, cfg.n_users, cfg, speed_mps=p["speed"])
+    counts0 = jnp.zeros((cfg.n_users,))
+
+    def round_body(carry, r):
+        pos, aux, counts, key = carry
+        key, k_mob, k_snr, k_tc, k_sched = jax.random.split(key, 5)
+        pos, aux = mobility.step_switch(
+            p["model_id"], k_mob, pos, aux, cfg.area_m, cfg.round_duration_s,
+            p["speed"], p["pause_s"], p["gm_memory"])
+        dist = MobilityState(user_pos=pos, bs_pos=bs_pos).distances()
+        # same k_shadow every round -> the field is consistent over time;
+        # sigma 0 (scenario off) makes it a no-op multiplier.
+        shadow_db = p["shadow_sigma"] * channel.sample_shadowing(
+            k_shadow, pos, bs_pos, cfg, sigma_db=1.0)
+        snr = channel.sample_snr(k_snr, dist, cfg, shadow_db=shadow_db)
+        coeff = channel.bandwidth_time_coeff(snr, cfg)
+        u = jax.random.uniform(k_tc, (cfg.n_users,))
+        tcomp = p["tcomp_min"] + u * (p["tcomp_max"] - p["tcomp_min"])
+        necessary = counts < cfg.rho1 * r            # Eq. (8g)
+        _, selected, _, _, t_round = dagsa_jit._schedule(
+            snr, coeff, tcomp, bs_bw, necessary, min_participants, k_sched,
+            backend=backend)
+        counts = counts + selected.astype(counts.dtype)
+        out = {
+            "t_round": t_round,
+            "n_selected": jnp.sum(selected).astype(jnp.float32),
+            "min_part_rate": jnp.min(counts) / (r + 1.0),
+        }
+        return (pos, aux, counts, key), out
+
+    _, outs = jax.lax.scan(round_body, (pos0, aux0, counts0, k_run),
+                           jnp.arange(n_rounds, dtype=jnp.float32))
+    return outs
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_rounds", "n_seeds",
+                                   "min_participants", "backend",
+                                   "n_models"))
+def _sweep_bucket(params: dict, key: jax.Array, *, cfg: WirelessConfig,
+                  n_rounds: int, n_seeds: int, min_participants: int,
+                  backend: str, n_models: int) -> dict:
+    """All scenarios of one shape bucket x all seeds, one compiled call.
+
+    Returns a dict of [S, n_seeds, n_rounds] arrays.  ``n_models`` is the
+    mobility-registry size at call time: the lax.switch branch table is
+    baked in at trace time, so a model registered later must open a fresh
+    compilation instead of silently clamping to the last cached branch.
+    """
+    seed_keys = jax.random.split(key, n_seeds)   # shared: paired comparisons
+    run = partial(_one_cell, cfg=cfg, n_rounds=n_rounds,
+                  min_participants=min_participants, backend=backend)
+    return jax.vmap(lambda p: jax.vmap(lambda k: run(p, k))(seed_keys))(
+        params)
+
+
+# ------------------------------------------------------------------- API ---
+def run_sweep(scenarios: Sequence[str | ScenarioSpec], n_seeds: int = 4,
+              n_rounds: int = 10, cfg: WirelessConfig | None = None,
+              backend: str = "jax", seed: int = 0) -> list[dict]:
+    """Run the batched wireless sweep; one record dict per scenario.
+
+    Scenarios are bucketed by resolved array shape (n_users, n_bs); each
+    bucket is ONE jit-compiled call covering all its scenarios x seeds.
+    See the module docstring for the record schema.
+    """
+    specs = [get_scenario(s) if isinstance(s, str) else s for s in scenarios]
+    base = cfg or WirelessConfig()
+    buckets: dict[tuple[int, int], list[tuple[int, ScenarioSpec]]] = {}
+    for pos, spec in enumerate(specs):
+        w = spec.wireless(base)
+        buckets.setdefault((w.n_users, w.n_bs), []).append((pos, spec))
+
+    records: dict[int, dict] = {}       # original position -> record
+    for (n_users, n_bs), group in buckets.items():
+        bcfg = dataclasses.replace(base, n_bs=n_bs)
+        minp = int(np.ceil(bcfg.rho2 * n_users))
+        params = _scenario_params([s for _, s in group], bcfg)
+        outs = _sweep_bucket(params, jax.random.PRNGKey(seed), cfg=bcfg,
+                             n_rounds=n_rounds, n_seeds=n_seeds,
+                             min_participants=minp, backend=backend,
+                             n_models=len(mobility.MOBILITY_MODELS))
+        t_round = np.asarray(outs["t_round"])            # [S, seeds, R]
+        n_sel = np.asarray(outs["n_selected"])
+        min_pr = np.asarray(outs["min_part_rate"])
+        for i, (pos, spec) in enumerate(group):
+            records[pos] = {
+                "scenario": spec.name,
+                "mobility": spec.mobility,
+                "speed_mps": spec.speed_mps,
+                "n_seeds": n_seeds,
+                "n_rounds": n_rounds,
+                "t_round_mean_s": float(t_round[i].mean()),
+                "t_round_p95_s": float(np.percentile(t_round[i], 95)),
+                "participants_mean": float(n_sel[i].mean()),
+                "min_part_rate": float(min_pr[i, :, -1].mean()),
+                "curves": {
+                    "t_round_s": t_round[i].mean(axis=0).tolist(),
+                    "n_selected": n_sel[i].mean(axis=0).tolist(),
+                    "min_part_rate": min_pr[i].mean(axis=0).tolist(),
+                },
+            }
+    # preserve the caller's scenario order
+    return [records[i] for i in range(len(specs))]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Batched multi-scenario wireless sweep (JSON records).")
+    ap.add_argument("--scenarios", default="all",
+                    help="comma-separated registry names, or 'all' "
+                         f"(registered: {','.join(SCENARIOS)})")
+    ap.add_argument("--seeds", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--backend", default="jax", choices=("jax", "pallas"))
+    ap.add_argument("--seed", type=int, default=0, help="PRNG root seed")
+    ap.add_argument("--out", default="-",
+                    help="output path for the JSON list ('-' = stdout)")
+    args = ap.parse_args()
+
+    names = list(SCENARIOS) if args.scenarios == "all" \
+        else args.scenarios.split(",")
+    records = run_sweep(names, n_seeds=args.seeds, n_rounds=args.rounds,
+                        backend=args.backend, seed=args.seed)
+    payload = json.dumps(records, indent=2)
+    if args.out == "-":
+        print(payload)
+    else:
+        with open(args.out, "w") as f:
+            f.write(payload + "\n")
+        summary = " ".join(f"{r['scenario']}={r['t_round_mean_s']:.3f}s"
+                           for r in records)
+        print(f"wrote {args.out}: {summary}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,270 @@
+"""Scenario engine tests: mobility-model invariants, registry round-trips,
+ScenarioSpec jit-safety, and the batched sweep."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import WirelessConfig, mobility
+from repro.core.mobility import MOBILITY_MODELS
+from repro.core.scenario import (SCENARIOS, ScenarioSpec, get_scenario,
+                                 register_scenario)
+from repro.launch.sweep import run_sweep
+
+CFG = WirelessConfig(n_users=12, n_bs=4)
+
+
+def _rollout(model, n_steps=50, speed=80.0, cfg=CFG, **kw):
+    """Positions after each of n_steps rounds of ``model``, [T, N, 2]."""
+    key = jax.random.PRNGKey(0)
+    k_pos, k_aux = jax.random.split(key)
+    pos = jax.random.uniform(k_pos, (cfg.n_users, 2), maxval=cfg.area_m)
+    aux = mobility.init_aux(k_aux, cfg.n_users, cfg, speed_mps=speed)
+    traj = []
+    for t in range(n_steps):
+        pos, aux = mobility.step_named(model, jax.random.fold_in(key, t),
+                                       pos, aux, cfg, speed_mps=speed, **kw)
+        traj.append(pos)
+    return jnp.stack(traj)
+
+
+# ------------------------------------------------------- mobility models --
+@pytest.mark.parametrize("model", sorted(MOBILITY_MODELS))
+def test_models_stay_in_bounds(model):
+    """Boundary containment for every registered model, fast and slow."""
+    for speed in (5.0, 400.0):          # 400 m/s: multiple bounces per round
+        traj = _rollout(model, n_steps=40, speed=speed, pause_s=1.0)
+        assert float(traj.min()) >= 0.0
+        assert float(traj.max()) <= CFG.area_m
+
+
+def test_gauss_markov_zero_memory_is_rd():
+    """gm_memory=0 must reproduce RD exactly (same keys, same positions)."""
+    rd = _rollout("rd", n_steps=20)
+    gm = _rollout("gauss_markov", n_steps=20, gm_memory=0.0)
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(gm))
+
+
+def test_gauss_markov_memory_straightens_paths():
+    """High memory -> near-ballistic motion: mean per-step turn angle must
+    be much smaller than under RD (which redraws headings every round)."""
+
+    def mean_turn(traj):
+        v = np.diff(np.asarray(traj, np.float64), axis=0)   # [T-1, N, 2]
+        dots = (v[:-1] * v[1:]).sum(-1)
+        norms = np.linalg.norm(v[:-1], axis=-1) * np.linalg.norm(v[1:],
+                                                                 axis=-1)
+        return np.arccos(np.clip(dots / np.maximum(norms, 1e-12),
+                                 -1.0, 1.0)).mean()
+
+    big = WirelessConfig(n_users=32, n_bs=4, area_m=1e6)   # no reflections
+    assert mean_turn(_rollout("gauss_markov", cfg=big, speed=20.0,
+                              gm_memory=0.95)) < \
+        0.5 * mean_turn(_rollout("rd", cfg=big, speed=20.0))
+
+
+def test_static_is_fixed_point():
+    traj = _rollout("static", n_steps=10, speed=50.0)
+    np.testing.assert_array_equal(np.asarray(traj[0]), np.asarray(traj[-1]))
+
+
+def test_waypoint_pauses_then_moves():
+    """A paused user stays put exactly pause_s/dt rounds, then moves."""
+    cfg = WirelessConfig(n_users=3, n_bs=2)
+    key = jax.random.PRNGKey(1)
+    pos = jnp.full((3, 2), 500.0)
+    aux = mobility.init_aux(key, 3, cfg, speed_mps=10.0)
+    aux = {**aux, "pause_s": jnp.full((3,), 2.0)}       # everyone paused 2 s
+    p1, aux = mobility.step_named("waypoint", key, pos, aux, cfg,
+                                  speed_mps=10.0, pause_s=2.0)
+    p2, aux = mobility.step_named("waypoint", key, p1, aux, cfg,
+                                  speed_mps=10.0, pause_s=2.0)
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(pos))
+    p3, _ = mobility.step_named("waypoint", key, p2, aux, cfg,
+                                speed_mps=10.0, pause_s=2.0)
+    d = np.linalg.norm(np.asarray(p3 - p2), axis=-1)
+    assert (d > 1.0).all()              # moving again, |step| ~ v*dt
+
+
+def test_waypoint_arrival_draws_fresh_target():
+    """Users within v*dt of their target arrive exactly and start pausing."""
+    cfg = WirelessConfig(n_users=2, n_bs=2)
+    key = jax.random.PRNGKey(2)
+    pos = jnp.asarray([[100.0, 100.0], [900.0, 900.0]])
+    aux = mobility.init_aux(key, 2, cfg, speed_mps=10.0)
+    aux = {**aux, "target": pos + 3.0, "pause_s": jnp.zeros((2,))}
+    p1, aux = mobility.step_named("waypoint", key, pos, aux, cfg,
+                                  speed_mps=10.0, pause_s=5.0)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(pos + 3.0),
+                               atol=1e-4)
+    assert (np.asarray(aux["pause_s"]) == 5.0).all()
+    assert not np.allclose(np.asarray(aux["target"]), np.asarray(pos + 3.0))
+
+
+def test_step_switch_matches_named():
+    """The traced lax.switch dispatch equals static string dispatch."""
+    cfg = CFG
+    key = jax.random.PRNGKey(3)
+    pos = jax.random.uniform(key, (cfg.n_users, 2), maxval=cfg.area_m)
+    aux = mobility.init_aux(key, cfg.n_users, cfg, speed_mps=30.0)
+    for name in MOBILITY_MODELS:
+        want, aux_w = mobility.step_named(name, key, pos, aux, cfg,
+                                          speed_mps=30.0, pause_s=1.0,
+                                          gm_memory=0.5)
+        got, aux_g = mobility.step_switch(
+            jnp.int32(mobility.model_index(name)), key, pos, aux,
+            cfg.area_m, cfg.round_duration_s, 30.0, 1.0, 0.5)
+        # switch compiles under different XLA fusion than the eager path;
+        # agreement is to float32 ulp, not bitwise.
+        np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                                   rtol=1e-6, atol=1e-3)
+        for k in aux:
+            np.testing.assert_allclose(np.asarray(aux_w[k]),
+                                       np.asarray(aux_g[k]),
+                                       rtol=1e-6, atol=1e-3)
+
+
+def test_register_mobility_model_rejects_duplicates():
+    with pytest.raises(ValueError):
+        mobility.register_mobility_model("rd", lambda *a: None)
+    with pytest.raises(ValueError):
+        mobility.model_index("not-a-model")
+
+
+# ------------------------------------------------------ scenario registry --
+def test_registry_roundtrip_and_jit_safety():
+    assert len(SCENARIOS) >= 8
+    for name in ("paper-default", "static", "high-mobility", "hetero-bw",
+                 "shadowed", "dense-bs", "sparse-bs", "waypoint"):
+        assert name in SCENARIOS
+
+    @partial(jax.jit, static_argnames=("spec",))
+    def speed_of(spec, x):
+        return x * spec.speed_mps
+
+    for name, spec in SCENARIOS.items():
+        assert get_scenario(name) is spec
+        assert isinstance(hash(spec), int)          # static-arg hashable
+        assert float(speed_of(spec, jnp.float32(1.0))) == spec.speed_mps
+        w = spec.wireless(CFG)
+        assert w.speed_mps == spec.speed_mps
+        bw = spec.sample_bs_bw(jax.random.PRNGKey(0), w)
+        assert bw.shape == (w.n_bs,)
+    with pytest.raises(ValueError):
+        get_scenario("no-such-world")
+
+
+def test_spec_validation_and_custom_registration():
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="bad", mobility="teleport")
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="bad", bw_min_mhz=1.0)            # max missing
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="bad", bw_min_mhz=2.0, bw_max_mhz=1.0)
+    spec = ScenarioSpec(name="test-custom", mobility="gauss_markov",
+                        gm_memory=0.9, speed_mps=5.0)
+    register_scenario(spec)
+    try:
+        assert get_scenario("test-custom") is spec
+        with pytest.raises(ValueError):
+            register_scenario(spec)                         # no overwrite
+    finally:
+        del SCENARIOS["test-custom"]
+
+
+def test_hetero_scenarios_resolve_overrides():
+    dense = get_scenario("dense-bs").wireless(CFG)
+    assert dense.n_bs == 16
+    hbw = get_scenario("hetero-bw")
+    bw = np.asarray(hbw.sample_bs_bw(jax.random.PRNGKey(0),
+                                     hbw.wireless(CFG)))
+    assert bw.min() >= 0.5 and bw.max() <= 1.5 and bw.std() > 0.0
+
+
+# --------------------------------------------------------------- sweep ----
+def test_sweep_smoke_two_buckets():
+    """Batched sweep across two shape buckets emits well-formed records."""
+    cfg = WirelessConfig(n_users=10, n_bs=4)
+    recs = run_sweep(["paper-default", "static", "sparse-bs"], n_seeds=2,
+                     n_rounds=3, cfg=cfg)
+    assert [r["scenario"] for r in recs] == ["paper-default", "static",
+                                             "sparse-bs"]
+    for r in recs:
+        assert r["t_round_mean_s"] > 0.0
+        assert r["t_round_p95_s"] >= r["t_round_mean_s"] * 0.5
+        assert len(r["curves"]["t_round_s"]) == 3
+        assert r["participants_mean"] >= np.ceil(cfg.rho2 * cfg.n_users)
+        assert 0.0 <= r["min_part_rate"] <= 1.0
+
+
+def test_sweep_distinct_records_for_duplicate_names():
+    """Two specs sharing a name must keep separate (positional) records."""
+    import dataclasses
+    cfg = WirelessConfig(n_users=8, n_bs=3)
+    a = get_scenario("static")
+    b = dataclasses.replace(a, mobility="rd", speed_mps=50.0)
+    recs = run_sweep([a, b], n_seeds=2, n_rounds=3, cfg=cfg)
+    assert recs[0]["mobility"] == "static" and recs[1]["mobility"] == "rd"
+    assert recs[0]["speed_mps"] != recs[1]["speed_mps"]
+
+
+def test_sweep_sees_models_registered_after_compile():
+    """A mobility model registered AFTER a sweep has compiled must execute
+    (registry size is part of the compile key; no silent branch clamp)."""
+    cfg = WirelessConfig(n_users=6, n_bs=2)
+    run_sweep(["paper-default"], n_seeds=1, n_rounds=2, cfg=cfg)  # warm cache
+    name = "teleport-test"
+    mobility.register_mobility_model(
+        name, lambda key, pos, aux, area, dt, speed, pause_s, gm:
+        (jax.random.uniform(key, pos.shape, maxval=area), aux))
+    try:
+        spec = ScenarioSpec(name="teleport-world", mobility=name,
+                            speed_mps=0.0)
+        rec = run_sweep([spec], n_seeds=1, n_rounds=2, cfg=cfg)[0]
+        assert rec["mobility"] == name and rec["t_round_mean_s"] > 0.0
+    finally:
+        del MOBILITY_MODELS[name]
+
+
+def test_sweep_matches_per_problem_scheduler_constraints():
+    """Every round of every cell satisfies Eq. (8h) min participation."""
+    cfg = WirelessConfig(n_users=8, n_bs=3)
+    recs = run_sweep(["high-mobility", "waypoint"], n_seeds=2, n_rounds=4,
+                     cfg=cfg)
+    minp = np.ceil(cfg.rho2 * cfg.n_users)
+    for r in recs:
+        assert all(n >= minp for n in r["curves"]["n_selected"])
+
+
+# ----------------------------------------------------------- FL wiring ----
+def test_flconfig_scenario_wiring():
+    from repro.fl import FLConfig, FLSimulation
+    cfg = FLConfig(dataset="mnist", scheduler="rs", n_train=200, n_test=100,
+                   batch_size=10, eval_every=0, scenario="waypoint", seed=0)
+    sim = FLSimulation(cfg)
+    assert sim._mob_model == "waypoint" and sim._mob_pause == 2.0
+    assert sim.wireless.speed_mps == 20.0
+
+    static = FLSimulation(FLConfig(dataset="mnist", scheduler="rs",
+                                   n_train=200, n_test=100, batch_size=10,
+                                   eval_every=0, scenario="static", seed=0))
+    assert static.wireless.speed_mps == 0.0
+    pos_before = np.asarray(static.mob.user_pos).copy()
+    r = static.run_round()
+    assert r.t_round > 0.0
+    np.testing.assert_array_equal(pos_before,
+                                  np.asarray(static.mob.user_pos))
+
+    hetero = FLSimulation(FLConfig(dataset="mnist", scheduler="rs",
+                                   n_train=200, n_test=100, batch_size=10,
+                                   eval_every=0, scenario="hetero-bw",
+                                   seed=0))
+    assert float(jnp.std(hetero.bs_bw)) > 0.0
+
+    # contradictory input: static scenario ignores speed -> loud failure
+    with pytest.raises(ValueError):
+        FLSimulation(FLConfig(dataset="mnist", scheduler="rs", n_train=200,
+                              n_test=100, batch_size=10, eval_every=0,
+                              scenario="static", speed_mps=50.0, seed=0))
