@@ -1,0 +1,114 @@
+"""FL round-engine throughput: legacy per-round loop vs the fused scan.
+
+Variant ladder (each row removes one seed bottleneck, so readers can
+decompose where the throughput comes from):
+
+  * ``legacy``        — the seed's FL loop exactly as shipped: the default
+    host-numpy DAGSA greedy + eager per-round control plane + separate
+    fleet/aggregation dispatches + per-round host syncs
+    (``FLSimulation._run_round_eager`` with ``scheduler="dagsa"``).
+  * ``eager_jit``     — same eager loop, scheduler swapped for the compiled
+    DAGSA-X greedy (``dagsa_jit``); isolates the host-greedy cost from the
+    loop-structure cost.
+  * ``fused``         — the whole run is ONE ``lax.scan`` inside one jit;
+    records cross to the host once at the end.  Trains identically to
+    ``eager_jit`` (proven by
+    ``tests/test_fl.py::test_fused_scan_matches_legacy_loop``).
+  * ``fused_pallas``  — fused scan with the Eq. (2) FedAvg reduction routed
+    through the Pallas kernel (interpret mode off-TPU, so off-TPU this row
+    measures the emulation, not the kernel).
+  * ``selected``      — fused scan with ``compute="selected"``: local SGD
+    runs only on a static ceil(rho2*N)-sized padded subset of scheduled
+    clients instead of the whole fleet (approximation when the cap clips).
+
+Each record is emitted twice: a CSV row (harness contract
+``name,us_per_call,derived``; the value column is microseconds per round)
+and a machine-readable ``#json `` comment line (CI uploads these as the
+``BENCH_fl.json`` artifact).
+
+JSON record schema (one line per variant x setting):
+
+    {"bench": "fl_rounds",
+     "variant": str,     # legacy | eager_jit | fused | fused_pallas | selected
+     "setting": str,     # quick | full
+     "n_users": int, "n_bs": int, "n_rounds": int,
+     "local_epochs": int, "batch_size": int, "n_train": int,
+     "us_per_round": float,
+     "rounds_per_sec": float,
+     "speedup_vs_legacy": float}   # rounds/sec ratio vs the legacy row
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import emit
+from repro.core.types import WirelessConfig
+from repro.fl import FLConfig, FLSimulation
+from repro.models.cnn import CNNConfig
+
+# (n_users, n_bs, n_train, local_epochs, batch_size, n_rounds, cnn_cfg)
+# quick: tiny model so the round is control-plane-bound (the regime the
+# fused engine targets); full: paper §IV fleet scale, data-plane-bound.
+QUICK = (20, 4, 160, 1, 8, 16,
+         CNNConfig(height=28, width=28, channels=1, c1=4, c2=8, hidden=16))
+FULL = (100, 8, 2000, 5, 16, 3, None)
+
+
+def _make_sim(n_users, n_bs, n_train, epochs, batch, cnn_cfg,
+              scheduler="dagsa_jit", **over) -> FLSimulation:
+    cfg = FLConfig(scheduler=scheduler,
+                   wireless=WirelessConfig(n_users=n_users, n_bs=n_bs),
+                   n_train=n_train, n_test=100, local_epochs=epochs,
+                   batch_size=batch, eval_every=1, seed=0, cnn=cnn_cfg,
+                   **over)
+    return FLSimulation(cfg)
+
+
+def _time_rounds(run_fn, n_rounds: int, reps: int = 3) -> float:
+    """Best-of-``reps`` seconds per round of ``run_fn(n_rounds)``, after one
+    warmup run (min is the standard noise-robust point estimate)."""
+    run_fn(n_rounds)                     # compile + warm caches
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run_fn(n_rounds)
+        best = min(best, time.perf_counter() - t0)
+    return best / n_rounds
+
+
+def run(quick: bool = True) -> None:
+    setting = "quick" if quick else "full"
+    n_users, n_bs, n_train, epochs, batch, n_rounds, cnn_cfg = \
+        QUICK if quick else FULL
+
+    variants = {
+        "legacy": dict(scheduler="dagsa", over={}, mode="eager"),
+        "eager_jit": dict(scheduler="dagsa_jit", over={}, mode="eager"),
+        "fused": dict(scheduler="dagsa_jit", over={}, mode="fused"),
+        "fused_pallas": dict(scheduler="dagsa_jit",
+                             over={"fedavg_backend": "pallas"},
+                             mode="fused"),
+        "selected": dict(scheduler="dagsa_jit",
+                         over={"compute": "selected"}, mode="fused"),
+    }
+    legacy_rps = None
+    for variant, spec in variants.items():
+        sim = _make_sim(n_users, n_bs, n_train, epochs, batch, cnn_cfg,
+                        scheduler=spec["scheduler"], **spec["over"])
+        sec = _time_rounds(lambda r: sim.run(r, mode=spec["mode"]), n_rounds)
+        rps = 1.0 / sec
+        if variant == "legacy":
+            legacy_rps = rps
+        speedup = rps / legacy_rps
+        emit(f"fl_{variant}_{setting}", sec * 1e6,
+             f"rounds_per_sec={rps:.2f} speedup_vs_legacy={speedup:.2f}x")
+        rec = {
+            "bench": "fl_rounds", "variant": variant, "setting": setting,
+            "n_users": n_users, "n_bs": n_bs, "n_rounds": n_rounds,
+            "local_epochs": epochs, "batch_size": batch, "n_train": n_train,
+            "us_per_round": sec * 1e6,
+            "rounds_per_sec": rps,
+            "speedup_vs_legacy": speedup,
+        }
+        print(f"#json {json.dumps(rec)}")

@@ -18,6 +18,7 @@ BENCHES = [
     ("fig3", "benchmarks.bench_hetero_bw", "Fig.3 heterogeneous bandwidth"),
     ("fig4", "benchmarks.bench_mobility", "Fig.4 mobility sweep"),
     ("fleet", "benchmarks.bench_fleet", "fleet-scale batched scheduling"),
+    ("fl", "benchmarks.bench_fl_rounds", "FL round engine rounds/sec"),
     ("roofline", "benchmarks.bench_roofline", "dry-run roofline terms"),
 ]
 

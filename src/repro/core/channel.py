@@ -7,6 +7,8 @@ what makes the bandwidth sub-problem (10) convex with the clean KKT solution.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -83,7 +85,7 @@ def sample_tcomp(key: jax.Array, cfg: WirelessConfig) -> jnp.ndarray:
 
 
 def make_problem(key: jax.Array, state: MobilityState, cfg: WirelessConfig,
-                 part_counts: jnp.ndarray, round_idx: int,
+                 part_counts: jnp.ndarray, round_idx,
                  bs_bw: jnp.ndarray | None = None,
                  shadow_db: jnp.ndarray | None = None) -> SchedulingProblem:
     """Assemble one round's SchedulingProblem from the physical state.
@@ -99,8 +101,10 @@ def make_problem(key: jax.Array, state: MobilityState, cfg: WirelessConfig,
     coeff = bandwidth_time_coeff(snr, cfg)
     if bs_bw is None:
         bs_bw = jnp.full((cfg.n_bs,), cfg.bs_bandwidth_mhz)
-    necessary = part_counts < cfg.rho1 * float(round_idx)
-    min_participants = int(jnp.ceil(cfg.rho2 * cfg.n_users))
+    # works for both host ints and traced round counters (fused round scan)
+    necessary = part_counts < cfg.rho1 * round_idx
+    # host math: min_participants must stay a static int under tracing
+    min_participants = int(math.ceil(cfg.rho2 * cfg.n_users))
     return SchedulingProblem(snr=snr, tcomp=tcomp, bs_bw=bs_bw, coeff=coeff,
                              necessary=necessary,
                              min_participants=min_participants)

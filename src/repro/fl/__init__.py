@@ -1,7 +1,11 @@
 """Federated-learning substrate: partitioning, local training, aggregation,
 and the mobility-aware round engine that couples the control plane (core/)
-to the data plane."""
+to the data plane.  The engine runs fused (one ``lax.scan`` over rounds),
+per-round jitted, or eager — see :class:`repro.fl.rounds.FLSimulation`."""
 from repro.fl.partition import shard_partition
-from repro.fl.rounds import FLConfig, FLSimulation, RoundRecord
+from repro.fl.rounds import (FLConfig, FLSimulation, FUSED_SCHEDULERS,
+                             RoundRecord, accuracy_at_budget,
+                             train_and_aggregate)
 
-__all__ = ["shard_partition", "FLConfig", "FLSimulation", "RoundRecord"]
+__all__ = ["shard_partition", "FLConfig", "FLSimulation", "RoundRecord",
+           "FUSED_SCHEDULERS", "accuracy_at_budget", "train_and_aggregate"]

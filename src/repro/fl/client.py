@@ -5,6 +5,11 @@ a ``scan`` over (epochs x batches).  Unscheduled clients still compute (their
 result is masked out at aggregation) so the compiled step is identical every
 round — on TPU this is what keeps scheduling from retriggering compilation,
 and the per-client compute shards over the mesh ``data`` axis.
+
+When the wasted compute matters more than graph constancy, the round engine
+gathers a static-size padded subset of scheduled clients first
+(:func:`topk_selected_indices`, ``compute="selected"`` in
+:class:`repro.fl.rounds.FLConfig`) and vmaps local SGD over only those rows.
 """
 from __future__ import annotations
 
@@ -27,6 +32,11 @@ def local_sgd(loss_fn: Callable, params: PyTree, x: jnp.ndarray,
     """
     n = x.shape[0]
     n_batches = n // batch_size
+    if n_batches == 0:
+        raise ValueError(
+            f"batch_size={batch_size} exceeds the {n} samples per client — "
+            f"local SGD would silently train nothing; shrink batch_size or "
+            f"grow n_train/shards")
     n_used = n_batches * batch_size
 
     grad_fn = jax.grad(loss_fn)
@@ -47,6 +57,20 @@ def local_sgd(loss_fn: Callable, params: PyTree, x: jnp.ndarray,
     ekeys = jax.random.split(key, epochs)
     params, _ = jax.lax.scan(epoch_body, params, ekeys)
     return params
+
+
+def topk_selected_indices(selected: jnp.ndarray, cap: int) -> jnp.ndarray:
+    """[cap] client indices with every selected client first (stable order).
+
+    The static-size gather behind ``compute="selected"``: scheduled clients
+    come first in original index order, unscheduled ones pad the tail (their
+    aggregation weight is 0, so training them is wasted-but-harmless work).
+    When ``cap`` covers all selected clients the aggregated result equals
+    the full-fleet computation; when it does not, the overflow clients are
+    dropped from aggregation (a documented approximation — the fleet stops
+    paying the ~N/K wasted-compute tax of training everyone).
+    """
+    return jnp.argsort(jnp.logical_not(selected), stable=True)[:cap]
 
 
 def fleet_local_sgd(loss_fn: Callable, global_params: PyTree,

@@ -1,26 +1,45 @@
 """The mobility-aware FL round engine (paper §II + §IV simulation loop).
 
 Per communication round:
-  1. users move (Random Direction),
+  1. users move (mobility model chosen by the scenario),
   2. BSs observe positions/channels -> SchedulingProblem,
   3. the chosen scheduler (DAGSA or a baseline) picks users/BSs/bandwidth,
-  4. ALL clients run E local epochs in one compiled vmap step (the mask only
-     enters the FedAvg reduction, Eq. 2 — constant compiled graph),
+  4. clients run E local epochs in one compiled vmap step — either the whole
+     fleet (the mask only enters the FedAvg reduction, Eq. 2 — constant
+     compiled graph) or a static-size padded subset of scheduled clients
+     (``compute="selected"``),
   5. participation state and simulated wall-clock (Eq. 3) advance,
   6. periodic global-model evaluation on the test split.
 
 The simulated wall-clock, not the number of rounds, is the x-axis of every
 paper figure — the whole point is latency-aware scheduling.
+
+Execution modes (all share ONE traced round step, so they agree bit-for-bit
+on the training trajectory):
+
+  * ``fused``  — the whole run is a single ``lax.scan`` over rounds inside
+    one jit: zero per-round Python dispatches, zero per-round host syncs;
+    per-round records come back as stacked device arrays and cross to the
+    host once at the end.  Requires a jit-able scheduler (everything except
+    the host-numpy ``dagsa``).  This is what :func:`FLSimulation.run` uses
+    by default and what the learning-curve sweep
+    (:mod:`repro.launch.sweep`) vmaps over seeds x scenarios.
+  * ``step``   — one jitted dispatch per round (the fused step without the
+    scan); :func:`FLSimulation.run_round` is this thin legacy wrapper.
+  * ``eager``  — the seed's original per-round path: eager control plane,
+    separate fleet/aggregation dispatches, per-round host syncs.  Kept for
+    the host ``dagsa`` scheduler and as the benchmark baseline
+    (``benchmarks/bench_fl_rounds.py``).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import (MobilityState, ParticipationState, WirelessConfig,
                         channel, mobility, scheduler as sched)
@@ -33,9 +52,30 @@ from repro.models import cnn
 
 PyTree = Any
 
+# Schedulers whose round step traces (everything but the host-numpy greedy).
+FUSED_SCHEDULERS = ("dagsa_jit", "rs", "ub", "fedcs_low", "fedcs_high", "sa")
+
+COMPUTE_MODES = ("full", "selected")
+FEDAVG_BACKENDS = ("jax", "pallas")
+
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
+    """End-to-end FL simulation config.
+
+    Precedence of the world-defining knobs (most specific wins):
+
+      1. ``speed_mps`` / ``hetero_bw`` — explicit per-field overrides; they
+         beat everything, including a named ``scenario``.
+      2. ``scenario`` — a registry name (:mod:`repro.core.scenario`) that
+         sets mobility model, BS layout, bandwidth draw and shadowing in
+         one word; its static overrides are baked into ``wireless``.
+      3. ``wireless`` — the base :class:`WirelessConfig`.
+
+    Setting ``speed_mps > 0`` on a scenario whose mobility model is
+    ``static`` raises (the override would silently do nothing).
+    """
+
     dataset: str = "mnist"
     scheduler: str = "dagsa"
     wireless: WirelessConfig = dataclasses.field(default_factory=WirelessConfig)
@@ -53,10 +93,25 @@ class FLConfig:
     bs_layout: str = "grid"         # grid | uniform (uniform = paper's
                                     # literal reading; grid avoids the
                                     # degenerate all-in-one-corner draw)
-    scenario: Optional[str] = None  # registry name (core.scenario); sets
-                                    # mobility model, layout, bandwidth and
-                                    # shadowing in one word.  Explicit
-                                    # speed_mps/hetero_bw flags still win.
+    scenario: Optional[str] = None  # registry name (core.scenario); see the
+                                    # precedence rules in the class docstring
+    compute: str = "full"           # full: every client trains, mask at
+                                    # aggregation; selected: static-size
+                                    # padded top-K gather of scheduled
+                                    # clients (see client.topk_selected_indices)
+    select_cap: Optional[int] = None   # K for compute="selected"; default
+                                       # ceil(rho2 * N), the Eq. (8h) floor
+    fedavg_backend: str = "jax"     # jax oracle | pallas fused reduction
+                                    # (interpret mode auto-enabled off-TPU)
+
+    def __post_init__(self):
+        if self.compute not in COMPUTE_MODES:
+            raise ValueError(f"unknown compute mode {self.compute!r}; "
+                             f"choose from {COMPUTE_MODES}")
+        if self.fedavg_backend not in FEDAVG_BACKENDS:
+            raise ValueError(f"unknown fedavg backend "
+                             f"{self.fedavg_backend!r}; "
+                             f"choose from {FEDAVG_BACKENDS}")
 
 
 @dataclasses.dataclass
@@ -67,6 +122,42 @@ class RoundRecord:
     n_selected: int
     test_acc: float       # nan when not evaluated this round
     min_part_rate: float  # min_i counts_i / n — fairness monitor (Eq. 8g)
+
+
+def train_and_aggregate(loss_fn, params: PyTree, x_clients, y_clients, keys,
+                        selected, data_sizes, *, epochs: int, batch_size: int,
+                        lr: float, compute: str = "full",
+                        select_cap: int | None = None,
+                        fedavg_backend: str = "jax") -> PyTree:
+    """One round of the data plane: local SGD + masked FedAvg (Eq. 2).
+
+    ``compute="full"`` trains every client and masks at aggregation (the
+    constant-graph default); ``compute="selected"`` gathers the scheduled
+    clients into a static ``select_cap``-sized subset first (per-client PRNG
+    keys travel with their original index, so a covering cap reproduces the
+    full-fleet result exactly).  Shared by the round engine and the batched
+    learning-curve sweep.
+    """
+    if compute == "selected":
+        n = x_clients.shape[0]
+        cap = n if select_cap is None else min(int(select_cap), n)
+        idx = fl_client.topk_selected_indices(selected, cap)
+        client_params = fl_client.fleet_local_sgd(
+            loss_fn, params, x_clients[idx], y_clients[idx], keys[idx],
+            epochs=epochs, batch_size=batch_size, lr=lr)
+        sel, sizes = selected[idx], data_sizes[idx]
+    elif compute == "full":
+        client_params = fl_client.fleet_local_sgd(
+            loss_fn, params, x_clients, y_clients, keys,
+            epochs=epochs, batch_size=batch_size, lr=lr)
+        sel, sizes = selected, data_sizes
+    else:
+        raise ValueError(f"unknown compute mode {compute!r}; "
+                         f"choose from {COMPUTE_MODES}")
+    if fedavg_backend == "pallas":
+        from repro.kernels.fedavg_reduce import fedavg_reduce
+        return fedavg_reduce(params, client_params, sel, sizes)
+    return fl_server.fedavg(params, client_params, sel, sizes)
 
 
 class FLSimulation:
@@ -129,29 +220,165 @@ class FLSimulation:
 
         self.wall_clock = 0.0
         self.round_idx = 0
+        self._select_cap = (cfg.select_cap if cfg.select_cap is not None
+                            else int(np.ceil(w.rho2 * w.n_users)))
 
-        # one compiled graph for the whole fleet's local training
+        # one compiled graph for the whole fleet's local training (eager path)
         self._fleet = jax.jit(partial(
             fl_client.fleet_local_sgd, cnn.loss_fn,
             epochs=cfg.local_epochs, batch_size=cfg.batch_size, lr=cfg.lr))
-        self._agg = jax.jit(fl_server.fedavg)
         self._acc = jax.jit(cnn.accuracy)
+        # the fused round step, compiled once each way it is used
+        self._step_jit = jax.jit(self._round_step)
+        self._scan_jit = jax.jit(self._run_scan,
+                                 static_argnames=("n_rounds",))
+
+    # -------------------------------------------------------- fused engine --
+    @property
+    def fused_capable(self) -> bool:
+        return self.cfg.scheduler in FUSED_SCHEDULERS
+
+    def _carry(self) -> tuple:
+        return (self.params, self.mob.user_pos, self._mob_aux,
+                self.part.counts, self._key)
+
+    def _set_carry(self, carry: tuple) -> None:
+        params, pos, aux, counts, key = carry
+        self.params = params
+        self.mob = MobilityState(user_pos=pos, bs_pos=self.mob.bs_pos)
+        self._mob_aux = aux
+        self.part = ParticipationState(counts=counts,
+                                       round_idx=self.round_idx)
+        self._key = key
+
+    def _round_step(self, carry: tuple, r) -> tuple[tuple, dict]:
+        """One fully-traced round: mobility -> channel -> schedule -> local
+        SGD -> masked FedAvg -> eval under ``lax.cond``.  ``r`` may be a
+        host int (per-round step) or a traced counter (fused scan)."""
+        cfg, w = self.cfg, self.wireless
+        params, pos, aux, counts, key = carry
+        key, k_mob, k_prob, k_sched, k_fleet = jax.random.split(key, 5)
+
+        # 1. mobility (model chosen by the scenario; plain RD by default)
+        pos, aux = mobility.step_named(
+            self._mob_model, k_mob, pos, aux, w,
+            pause_s=self._mob_pause, gm_memory=self._mob_gm)
+        # 2. observe channels (shadowing field is consistent across rounds)
+        shadow_db = None
+        if self._shadow_sigma > 0.0:
+            shadow_db = self._shadow_sigma * channel.sample_shadowing(
+                self._k_shadow, pos, self.mob.bs_pos, w, sigma_db=1.0)
+        prob = channel.make_problem(
+            k_prob, MobilityState(user_pos=pos, bs_pos=self.mob.bs_pos), w,
+            counts, r, bs_bw=self.bs_bw, shadow_db=shadow_db)
+        # 3. schedule (static dispatch by name; jit-able schedulers only)
+        res = sched.schedule(cfg.scheduler, prob, w, k_sched)
+        # 4. data plane: local SGD + Eq. (2) aggregation
+        keys = jax.random.split(k_fleet, w.n_users)
+        params = train_and_aggregate(
+            cnn.loss_fn, params, self.x_clients, self.y_clients, keys,
+            res.selected, self.data_sizes, epochs=cfg.local_epochs,
+            batch_size=cfg.batch_size, lr=cfg.lr, compute=cfg.compute,
+            select_cap=self._select_cap,
+            fedavg_backend=cfg.fedavg_backend)
+        # 5. bookkeeping — everything stays on device
+        counts = counts + res.selected.astype(counts.dtype)
+        if cfg.eval_every:
+            acc = jax.lax.cond(
+                (r + 1) % cfg.eval_every == 0,
+                lambda p: cnn.accuracy(p, self.data.x_test, self.data.y_test),
+                lambda p: jnp.float32(jnp.nan), params)
+        else:
+            acc = jnp.float32(jnp.nan)
+        out = {
+            "t_round": res.t_round,
+            "n_selected": jnp.sum(res.selected).astype(jnp.int32),
+            "test_acc": acc,
+            "min_part_rate": jnp.min(counts) / (r + 1.0),
+        }
+        return (params, pos, aux, counts, key), out
+
+    def _run_scan(self, carry: tuple, r0, n_rounds: int):
+        """n_rounds of :meth:`_round_step` as one ``lax.scan``."""
+        rs = r0 + jnp.arange(n_rounds)
+        return jax.lax.scan(self._round_step, carry, rs)
 
     # ------------------------------------------------------------------ API
-    def run(self, n_rounds: int) -> list[RoundRecord]:
-        return [self.run_round() for _ in range(n_rounds)]
+    def run(self, n_rounds: int, mode: str | None = None) -> list[RoundRecord]:
+        """Run ``n_rounds``; returns one :class:`RoundRecord` per round.
+
+        ``mode``: ``"fused"`` (one compiled scan, default when the scheduler
+        is jit-able), ``"step"`` (one jitted dispatch per round, records
+        accumulated on device and transferred once at the end), or
+        ``"eager"`` (the seed's per-round host path — the only option for
+        the host-numpy ``dagsa`` scheduler).
+        """
+        if mode is None:
+            mode = "fused" if self.fused_capable else "eager"
+        if mode in ("fused", "step") and not self.fused_capable:
+            raise ValueError(
+                f"scheduler {self.cfg.scheduler!r} does not trace; "
+                f"mode={mode!r} needs one of {FUSED_SCHEDULERS} "
+                f"(use mode='eager')")
+        if n_rounds <= 0:
+            return []
+        if mode == "fused":
+            carry, outs = self._scan_jit(self._carry(), self.round_idx,
+                                         n_rounds=n_rounds)
+        elif mode == "step":
+            carry, collected = self._carry(), []
+            for r in range(self.round_idx, self.round_idx + n_rounds):
+                carry, out = self._step_jit(carry, r)
+                collected.append(out)
+            outs = {k: jnp.stack([o[k] for o in collected])
+                    for k in collected[0]}
+        elif mode == "eager":
+            return [self._run_round_eager() for _ in range(n_rounds)]
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        self.round_idx += n_rounds
+        self._set_carry(carry)
+        return self._finish(outs, n_rounds)
+
+    def _finish(self, outs: dict, n_rounds: int) -> list[RoundRecord]:
+        """Stacked device records -> host RoundRecords (ONE transfer)."""
+        outs = jax.tree.map(np.asarray, outs)        # the only host sync
+        wall = self.wall_clock + np.cumsum(outs["t_round"], dtype=np.float64)
+        first = self.round_idx - n_rounds + 1  # round_idx already advanced
+        recs = [RoundRecord(round_idx=first + i,
+                            t_round=float(outs["t_round"][i]),
+                            wall_clock=float(wall[i]),
+                            n_selected=int(outs["n_selected"][i]),
+                            test_acc=float(outs["test_acc"][i]),
+                            min_part_rate=float(outs["min_part_rate"][i]))
+                for i in range(n_rounds)]
+        self.wall_clock = float(wall[-1])
+        return recs
 
     def run_round(self) -> RoundRecord:
+        """One round, returned as a host RoundRecord (syncs: this is the
+        interactive per-round API; use :meth:`run` for throughput)."""
+        if not self.fused_capable:
+            return self._run_round_eager()
+        carry, out = self._step_jit(self._carry(), self.round_idx)
+        self.round_idx += 1
+        self._set_carry(carry)
+        return self._finish({k: jnp.stack([v]) for k, v in out.items()}, 1)[0]
+
+    # ---------------------------------------------------------- eager path --
+    def _run_round_eager(self) -> RoundRecord:
+        """The seed's original per-round path: eager control plane, separate
+        fleet/aggregation dispatches, per-round host syncs.  Required for
+        the host-numpy ``dagsa`` scheduler; kept verbatim as the benchmark
+        baseline for the fused engine."""
         cfg, w = self.cfg, self.wireless
         self._key, k_mob, k_prob, k_sched, k_fleet = \
             jax.random.split(self._key, 5)
 
-        # 1. mobility (model chosen by the scenario; plain RD by default)
         pos, self._mob_aux = mobility.step_named(
             self._mob_model, k_mob, self.mob.user_pos, self._mob_aux, w,
             pause_s=self._mob_pause, gm_memory=self._mob_gm)
         self.mob = MobilityState(user_pos=pos, bs_pos=self.mob.bs_pos)
-        # 2. observe channels (shadowing field is consistent across rounds)
         shadow_db = None
         if self._shadow_sigma > 0.0:
             shadow_db = self._shadow_sigma * channel.sample_shadowing(
@@ -159,16 +386,14 @@ class FLSimulation:
         prob = channel.make_problem(k_prob, self.mob, w, self.part.counts,
                                     self.part.round_idx, bs_bw=self.bs_bw,
                                     shadow_db=shadow_db)
-        # 3. schedule
         res = sched.schedule(cfg.scheduler, prob, w, k_sched,
                              seed=cfg.seed * 100003 + self.round_idx)
-        # 4. data plane: everyone trains, aggregation is masked (Eq. 2)
         keys = jax.random.split(k_fleet, w.n_users)
         client_params = self._fleet(self.params, self.x_clients,
                                     self.y_clients, keys)
-        self.params = self._agg(self.params, client_params, res.selected,
-                                self.data_sizes)
-        # 5. bookkeeping
+        # donated: the fleet's [N, ...] buffers die into the reduction
+        self.params = fl_server.fedavg_donating(
+            self.params, client_params, res.selected, self.data_sizes)
         self.part = self.part.update(res)
         t_round = float(res.t_round)
         self.wall_clock += t_round

@@ -1,6 +1,16 @@
-"""Server-side aggregation — paper Eq. (2), masked weighted FedAvg."""
+"""Server-side aggregation — paper Eq. (2), masked weighted FedAvg.
+
+This module is the single source of truth for the Eq. (2) math: the Pallas
+kernel oracle (:func:`repro.kernels.ref.fedavg_reduce`) delegates here, and
+the TPU kernel (:mod:`repro.kernels.fedavg_reduce`) must match it.  The
+weighted sum accumulates in float32 regardless of the leaf dtype — with
+low-precision client params and large fleets a leaf-dtype accumulator
+overflows/loses precision long before the mean does — and casts back to the
+leaf dtype exactly once at the end.
+"""
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
@@ -9,20 +19,48 @@ import jax.numpy as jnp
 PyTree = Any
 
 
+def fedavg_weights(selected: jnp.ndarray,
+                   data_sizes: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. (2) client weights a_i |D_i| (float32) and their total."""
+    w = selected.astype(jnp.float32) * data_sizes.astype(jnp.float32)
+    return w, jnp.sum(w)
+
+
 def fedavg(global_params: PyTree, client_params: PyTree,
            selected: jnp.ndarray, data_sizes: jnp.ndarray) -> PyTree:
     """w^n = sum_i a_i |D_i| w_i / sum_i a_i |D_i|  (Eq. 2).
 
     client_params leaves: [N, ...]; selected: [N] bool; data_sizes: [N].
     If nothing was selected the global model is kept (guarded denominator).
+    Accumulation runs in float32; the result is cast back to the leaf dtype.
     """
-    w = selected.astype(jnp.float32) * data_sizes.astype(jnp.float32)
-    total = jnp.sum(w)
+    w, total = fedavg_weights(selected, data_sizes)
     safe_total = jnp.maximum(total, 1e-9)
 
     def agg(g, c):
-        wb = w.reshape((-1,) + (1,) * (c.ndim - 1)).astype(c.dtype)
-        avg = jnp.sum(wb * c, axis=0) / safe_total.astype(c.dtype)
+        wb = w.reshape((-1,) + (1,) * (c.ndim - 1))
+        acc = jnp.sum(wb * c.astype(jnp.float32), axis=0)
+        avg = (acc / safe_total).astype(c.dtype)
         return jnp.where(total > 0, avg, g)
 
     return jax.tree.map(agg, global_params, client_params)
+
+
+@functools.lru_cache(maxsize=None)
+def _fedavg_jit(donate: bool):
+    kwargs = {"donate_argnums": (1,)} if donate else {}
+    return jax.jit(fedavg, **kwargs)
+
+
+def fedavg_donating(global_params: PyTree, client_params: PyTree,
+                    selected: jnp.ndarray, data_sizes: jnp.ndarray) -> PyTree:
+    """Standalone jitted aggregator for callers outside a larger jit.
+
+    On accelerators the client-params pytree (dead after aggregation) is
+    donated so XLA reuses the fleet's [N, ...] buffers for the reduction
+    instead of allocating fresh ones; on CPU donation is a no-op, so it is
+    skipped to keep runs warning-free.
+    """
+    donate = jax.default_backend() != "cpu"
+    return _fedavg_jit(donate)(global_params, client_params, selected,
+                               data_sizes)

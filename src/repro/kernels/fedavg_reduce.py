@@ -1,0 +1,118 @@
+"""Fused masked-FedAvg reduction (paper Eq. 2) as a Pallas TPU kernel.
+
+The jnp aggregation materializes a weighted copy of every client-param leaf
+([N, ...] twice over) before reducing; at fleet scale the FedAvg step is
+pure memory traffic.  This kernel streams client blocks through VMEM and
+accumulates the Eq. (2) weighted masked sum directly into the output block
+in float32 — the [N, ...] weighted intermediate never exists.
+
+Layout per leaf: clients are rows, the flattened feature dim lives in
+lanes.  Grid is (feature_blocks, client_blocks) with clients innermost, so
+each output block stays resident in VMEM while the client stream flows past
+it (the standard sequential-grid accumulation pattern).  The division by
+the Eq. (2) weight total and the zero-selected guard happen once per leaf
+outside the kernel, exactly mirroring the oracle
+(:func:`repro.fl.server.fedavg`, re-exported as
+:func:`repro.kernels.ref.fedavg_reduce`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.fl.server import fedavg_weights
+
+PyTree = Any
+
+DEFAULT_CLIENT_BLOCK = 8      # f32 sublane width
+DEFAULT_FEATURE_BLOCK = 512   # lanes per program (multiple of 128)
+_LANE = 128
+
+
+def _fedavg_kernel(w_ref, x_ref, o_ref):
+    """Accumulate sum_n w[n] * x[n, :] over the client grid dimension."""
+    jn = pl.program_id(1)
+
+    @pl.when(jn == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # [Nb, Db]
+    w = w_ref[...].astype(jnp.float32)          # [Nb, 1]
+    o_ref[...] += jnp.sum(w * x, axis=0, keepdims=True)
+
+
+def _reduce_leaf(w2: jnp.ndarray, flat: jnp.ndarray, client_block: int,
+                 feature_block: int, interpret: bool) -> jnp.ndarray:
+    """[N, D] leaf + [N, 1] weights -> [D] float32 weighted masked sum."""
+    n, d = flat.shape
+    nb = min(client_block, n)
+    d_lanes = -(-d // _LANE) * _LANE
+    db = min(feature_block, d_lanes)
+    n_pad = (-n) % nb
+    d_pad = (-d) % db
+    if n_pad or d_pad:
+        flat = jnp.pad(flat, ((0, n_pad), (0, d_pad)))
+        w2 = jnp.pad(w2, ((0, n_pad), (0, 0)))   # zero weight -> no effect
+    np_, dp = flat.shape
+    out = pl.pallas_call(
+        _fedavg_kernel,
+        grid=(dp // db, np_ // nb),
+        in_specs=[pl.BlockSpec((nb, 1), lambda jd, jn: (jn, 0)),
+                  pl.BlockSpec((nb, db), lambda jd, jn: (jn, jd))],
+        out_specs=pl.BlockSpec((1, db), lambda jd, jn: (0, jd)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
+        interpret=interpret,
+    )(w2, flat)
+    return out[0, :d]
+
+
+def _fedavg_reduce(global_params: PyTree, client_params: PyTree,
+                   selected: jnp.ndarray, data_sizes: jnp.ndarray,
+                   client_block: int, feature_block: int,
+                   interpret: bool) -> PyTree:
+    w, total = fedavg_weights(selected, data_sizes)
+    safe_total = jnp.maximum(total, 1e-9)
+    w2 = w.reshape(-1, 1)
+
+    def agg(g, c):
+        n = c.shape[0]
+        s = _reduce_leaf(w2, c.reshape(n, -1), client_block, feature_block,
+                         interpret)
+        avg = (s / safe_total).astype(c.dtype).reshape(c.shape[1:])
+        return jnp.where(total > 0, avg, g)
+
+    return jax.tree.map(agg, global_params, client_params)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(donate: bool):
+    kwargs = {"donate_argnums": (1,)} if donate else {}
+    return jax.jit(_fedavg_reduce,
+                   static_argnames=("client_block", "feature_block",
+                                    "interpret"), **kwargs)
+
+
+def fedavg_reduce(global_params: PyTree, client_params: PyTree,
+                  selected: jnp.ndarray, data_sizes: jnp.ndarray,
+                  client_block: int = DEFAULT_CLIENT_BLOCK,
+                  feature_block: int = DEFAULT_FEATURE_BLOCK,
+                  interpret: bool | None = None) -> PyTree:
+    """Masked weighted FedAvg (Eq. 2) with the reduction in the kernel.
+
+    Same contract as :func:`repro.fl.server.fedavg`: client_params leaves
+    [N, ...], selected [N] bool, data_sizes [N]; empty selection keeps the
+    global model.  On TPU the client-params pytree is donated (dead after
+    the reduction).  ``interpret=None`` auto-enables interpret mode off-TPU
+    so the entry point runs everywhere.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = not on_tpu
+    return _jitted(on_tpu)(global_params, client_params, selected,
+                           data_sizes, client_block=client_block,
+                           feature_block=feature_block, interpret=interpret)

@@ -14,6 +14,7 @@ from repro.kernels import flash_attention as fa
 from repro.kernels import ssd_scan as ssd
 from repro.kernels import rmsnorm as rms
 from repro.kernels import bandwidth_solve as bws
+from repro.kernels import fedavg_reduce as favg
 
 
 def _on_tpu() -> bool:
@@ -42,3 +43,11 @@ def bandwidth_solve(coeff, tcomp, mask, bw):
     if _on_tpu():
         return bws.bandwidth_solve(coeff, tcomp, mask, bw)
     return ref.bandwidth_solve(coeff, tcomp, mask, bw)
+
+
+def fedavg_reduce(global_params, client_params, selected, data_sizes):
+    if _on_tpu():
+        return favg.fedavg_reduce(global_params, client_params, selected,
+                                  data_sizes)
+    return ref.fedavg_reduce(global_params, client_params, selected,
+                             data_sizes)

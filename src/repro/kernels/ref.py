@@ -35,6 +35,13 @@ def ssd_scan(x, dt, A, B, C, chunk: int) -> jnp.ndarray:
     return ssd_chunked(x, dt, A, B, C, chunk)
 
 
+def fedavg_reduce(global_params, client_params, selected, data_sizes):
+    """Masked weighted FedAvg oracle — delegates to the server implementation
+    (float32 accumulation, zero-selected guard; see repro.fl.server)."""
+    from repro.fl.server import fedavg
+    return fedavg(global_params, client_params, selected, data_sizes)
+
+
 def bandwidth_solve(coeff, tcomp, mask, bw, iters: int | None = None,
                     method: str = "newton", lo=None) -> jnp.ndarray:
     """Batched Eq.(11) root-finding oracle (safeguarded Newton or bisection).

@@ -6,6 +6,11 @@
     # same, in a named scenario (see repro.core.scenario / docs/SCENARIOS.md)
     PYTHONPATH=src python -m repro.launch.fl_sim \
         --scheduler dagsa --scenario high-mobility --rounds 20
+
+Jit-able schedulers (everything except the host-numpy ``dagsa``) run the
+whole simulation as ONE fused ``lax.scan`` — the round table prints after
+the compiled run finishes.  ``--mode eager`` restores the seed's per-round
+streaming loop; the host ``dagsa`` scheduler always uses it.
 """
 from __future__ import annotations
 
@@ -33,20 +38,34 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=1)
+    ap.add_argument("--mode", default=None,
+                    choices=("fused", "step", "eager"),
+                    help="fused scan (default for jit-able schedulers), "
+                         "per-round jitted step, or the seed's eager loop")
+    ap.add_argument("--compute", default="full",
+                    choices=("full", "selected"),
+                    help="selected: train only a static-size padded top-K "
+                         "subset of scheduled clients")
+    ap.add_argument("--select-cap", type=int, default=None,
+                    help="K for --compute selected (default ceil(rho2*N))")
+    ap.add_argument("--fedavg-backend", default="jax",
+                    choices=("jax", "pallas"),
+                    help="pallas: fused masked-FedAvg reduction kernel "
+                         "(interpret mode off-TPU)")
     args = ap.parse_args()
 
     cfg = FLConfig(dataset=args.dataset, scheduler=args.scheduler,
                    n_train=args.n_train, n_test=500,
                    batch_size=args.batch_size, eval_every=args.eval_every,
                    seed=args.seed, speed_mps=args.speed,
-                   hetero_bw=args.hetero_bw, scenario=args.scenario)
+                   hetero_bw=args.hetero_bw, scenario=args.scenario,
+                   compute=args.compute, select_cap=args.select_cap,
+                   fedavg_backend=args.fedavg_backend)
     sim = FLSimulation(cfg)
+    recs = sim.run(args.rounds, mode=args.mode)
     print(f"{'round':>5} {'t_round':>8} {'clock':>8} {'users':>5} "
           f"{'acc':>6} {'min_fair':>8}")
-    recs = []
-    for _ in range(args.rounds):
-        r = sim.run_round()
-        recs.append(r)
+    for r in recs:
         print(f"{r.round_idx:5d} {r.t_round:8.3f} {r.wall_clock:8.2f} "
               f"{r.n_selected:5d} {r.test_acc:6.3f} {r.min_part_rate:8.2f}")
     budget = recs[-1].wall_clock / 2

@@ -1,4 +1,4 @@
-"""Fully-batched multi-scenario, multi-seed wireless sweep.
+"""Fully-batched multi-scenario, multi-seed wireless + learning sweeps.
 
 One compiled loop runs (mobility step -> channel sample -> DAGSA-X
 schedule) as a ``lax.scan`` over rounds, vmapped over seeds x scenarios.
@@ -10,12 +10,22 @@ compilation bucket.  Candidate bandwidth solves go through the same
 ``repro.core.dagsa_jit._schedule`` greedy the fleet engine batches
 (``backend="pallas"`` routes them through the Pallas kernel).
 
+``--learning`` extends the compiled loop with the full FL data plane
+(fleet local SGD + masked Eq. (2) FedAvg + periodic eval) — the paper's
+accuracy-vs-simulated-wall-clock figures (Figs. 2-4) as one compiled call
+per shape bucket, seeds x scenarios batched.
+
 CLI (emits per-scenario JSON latency/fairness curves, schema below):
 
     PYTHONPATH=src python -m repro.launch.sweep \
         --scenarios paper-default,high-mobility --seeds 4 --rounds 10
 
-Record schema (one dict per scenario, JSON list on stdout / ``--out``):
+    # learning curves: test-acc vs simulated wall-clock per scenario x seed
+    PYTHONPATH=src python -m repro.launch.sweep --learning \
+        --scenarios paper-default,static --seeds 2 --rounds 10
+
+Wireless record schema (one dict per scenario, JSON list on stdout /
+``--out``):
 
     {"scenario": str, "mobility": str, "speed_mps": float,
      "n_seeds": int, "n_rounds": int,
@@ -27,8 +37,20 @@ Record schema (one dict per scenario, JSON list on stdout / ``--out``):
      "curves": {"t_round_s": [R], "n_selected": [R],
                 "min_part_rate": [R]}} # per-round means across seeds
 
+Learning records add (see :func:`run_learning_sweep`):
+
+    {..., "dataset": str,
+     "final_acc_mean": float, "final_acc_std": float,
+     "wall_clock_mean_s": float,       # mean final simulated clock
+     "acc_at_budget": {"budget_s": float, "acc_mean": float},
+     "curves": {"wall_clock_s": [R], "test_acc": [R],  # seed means
+                "t_round_s": [R], "n_selected": [R]},
+     "seed_curves": {"wall_clock_s": [seeds][R],       # per-seed curves
+                     "test_acc": [seeds][R]}}
+
 Seeds are PAIRED across scenarios in the same shape bucket (same geometry/
-fading keys), a variance-reduction trick for A-vs-B scenario comparisons.
+fading keys, same client data + model init in the learning sweep), a
+variance-reduction trick for A-vs-B scenario comparisons.
 """
 from __future__ import annotations
 
@@ -201,9 +223,216 @@ def run_sweep(scenarios: Sequence[str | ScenarioSpec], n_seeds: int = 4,
     return [records[i] for i in range(len(specs))]
 
 
+# ---------------------------------------------------- learning-curve sweep --
+def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
+                       x_test, y_test, *, cfg: WirelessConfig, n_rounds: int,
+                       minp: int, epochs: int, batch_size: int, lr: float,
+                       eval_every: int, backend: str, fedavg_backend: str,
+                       compute: str, select_cap) -> dict:
+    """One (scenario, seed) FL cell: init world, scan the full round loop
+    (wireless control plane + local SGD + Eq. (2) FedAvg + periodic eval)."""
+    from repro.fl.rounds import train_and_aggregate
+    from repro.models import cnn
+
+    k_pos, k_bs, k_bw, k_aux, k_shadow, k_run = jax.random.split(key, 6)
+    pos0 = jax.random.uniform(k_pos, (cfg.n_users, 2), minval=0.0,
+                              maxval=cfg.area_m)
+    bs_pos = _bs_positions(k_bs, p["layout_id"], cfg)
+    bs_bw = p["bw_min"] + jax.random.uniform(k_bw, (cfg.n_bs,)) * \
+        (p["bw_max"] - p["bw_min"])
+    aux0 = mobility.init_aux(k_aux, cfg.n_users, cfg, speed_mps=p["speed"])
+    counts0 = jnp.zeros((cfg.n_users,))
+    data_sizes = jnp.full((cfg.n_users,), x_c.shape[1])
+
+    def round_body(carry, r):
+        params, pos, aux, counts, key = carry
+        key, k_mob, k_snr, k_tc, k_sched, k_fleet = jax.random.split(key, 6)
+        pos, aux = mobility.step_switch(
+            p["model_id"], k_mob, pos, aux, cfg.area_m, cfg.round_duration_s,
+            p["speed"], p["pause_s"], p["gm_memory"])
+        dist = MobilityState(user_pos=pos, bs_pos=bs_pos).distances()
+        shadow_db = p["shadow_sigma"] * channel.sample_shadowing(
+            k_shadow, pos, bs_pos, cfg, sigma_db=1.0)
+        snr = channel.sample_snr(k_snr, dist, cfg, shadow_db=shadow_db)
+        coeff = channel.bandwidth_time_coeff(snr, cfg)
+        u = jax.random.uniform(k_tc, (cfg.n_users,))
+        tcomp = p["tcomp_min"] + u * (p["tcomp_max"] - p["tcomp_min"])
+        necessary = counts < cfg.rho1 * r                    # Eq. (8g)
+        _, selected, _, _, t_round = dagsa_jit._schedule(
+            snr, coeff, tcomp, bs_bw, necessary, minp, k_sched,
+            backend=backend)
+        keys = jax.random.split(k_fleet, cfg.n_users)
+        params = train_and_aggregate(
+            cnn.loss_fn, params, x_c, y_c, keys, selected, data_sizes,
+            epochs=epochs, batch_size=batch_size, lr=lr, compute=compute,
+            select_cap=select_cap, fedavg_backend=fedavg_backend)
+        counts = counts + selected.astype(counts.dtype)
+        if eval_every:
+            # the predicate only depends on the (unbatched) scan counter, so
+            # the cond survives the seeds x scenarios vmaps as a real branch
+            acc = jax.lax.cond(
+                (r + 1) % eval_every == 0,
+                lambda q: cnn.accuracy(q, x_test, y_test),
+                lambda q: jnp.float32(jnp.nan), params)
+        else:
+            acc = jnp.float32(jnp.nan)
+        out = {
+            "t_round": t_round,
+            "n_selected": jnp.sum(selected).astype(jnp.float32),
+            "test_acc": acc,
+            "min_part_rate": jnp.min(counts) / (r + 1.0),
+        }
+        return (params, pos, aux, counts, key), out
+
+    _, outs = jax.lax.scan(round_body,
+                           (params0, pos0, aux0, counts0, k_run),
+                           jnp.arange(n_rounds))
+    return outs
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_rounds", "minp", "epochs",
+                                   "batch_size", "lr", "eval_every",
+                                   "backend", "fedavg_backend", "compute",
+                                   "select_cap", "n_models"))
+def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
+                     x_test, y_test, *, cfg: WirelessConfig, n_rounds: int,
+                     minp: int, epochs: int, batch_size: int, lr: float,
+                     eval_every: int, backend: str, fedavg_backend: str,
+                     compute: str, select_cap, n_models: int) -> dict:
+    """All scenarios of one shape bucket x all seeds, one compiled call.
+
+    ``x_c``/``y_c``/``w0`` carry a leading seed axis (per-seed Non-IID
+    partition and model init, shared across scenarios for paired
+    comparisons); ``params`` carries the scenario axis.  Returns a dict of
+    [S, n_seeds, n_rounds] arrays.
+    """
+    run = partial(_one_learning_cell, cfg=cfg, n_rounds=n_rounds, minp=minp,
+                  epochs=epochs, batch_size=batch_size, lr=lr,
+                  eval_every=eval_every, backend=backend,
+                  fedavg_backend=fedavg_backend, compute=compute,
+                  select_cap=select_cap)
+
+    def per_scenario(p):
+        return jax.vmap(lambda k, xc, yc, w: run(p, k, xc, yc, w,
+                                                 x_test, y_test))(
+            seed_keys, x_c, y_c, w0)
+
+    return jax.vmap(per_scenario)(params)
+
+
+def _finite_or_none(xs) -> list:
+    """nan -> None so the emitted JSON stays strictly parseable."""
+    return [float(v) if np.isfinite(v) else None for v in np.asarray(xs)]
+
+
+def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
+                       n_seeds: int = 2, n_rounds: int = 10,
+                       cfg: WirelessConfig | None = None,
+                       dataset: str = "mnist", n_train: int = 600,
+                       n_test: int = 200, local_epochs: int = 2,
+                       batch_size: int = 10, lr: float = 0.01,
+                       eval_every: int = 1, shards_per_user: int = 2,
+                       backend: str = "jax", fedavg_backend: str = "jax",
+                       compute: str = "full", select_cap: int | None = None,
+                       seed: int = 0) -> list[dict]:
+    """Accuracy-vs-simulated-wall-clock curves, one record per scenario.
+
+    Scenarios are bucketed by resolved array shape (n_users, n_bs); each
+    bucket is ONE jit-compiled call covering all its scenarios x seeds —
+    the fused round engine of :mod:`repro.fl.rounds` vmapped over the
+    scenario parameter arrays.  Dataset and per-seed partitions/inits are
+    shared across scenarios (paired seeds).  See the module docstring for
+    the record schema.
+    """
+    import warnings
+
+    from repro.data import make_dataset
+    from repro.fl.partition import shard_partition
+    from repro.models import cnn
+
+    specs = [get_scenario(s) if isinstance(s, str) else s for s in scenarios]
+    base = cfg or WirelessConfig()
+    data = make_dataset(dataset, seed=seed, n_train=n_train, n_test=n_test)
+    h, wd, c = data.x_train.shape[1:]
+    cnn_cfg = cnn.CNNConfig(height=h, width=wd, channels=c)
+
+    buckets: dict[tuple[int, int], list[tuple[int, ScenarioSpec]]] = {}
+    for pos, spec in enumerate(specs):
+        w = spec.wireless(base)
+        buckets.setdefault((w.n_users, w.n_bs), []).append((pos, spec))
+
+    k_cells, k_part, k_init = jax.random.split(jax.random.PRNGKey(seed), 3)
+    seed_keys = jax.random.split(k_cells, n_seeds)   # paired across scenarios
+    records: dict[int, dict] = {}
+    for (n_users, n_bs), group in buckets.items():
+        bcfg = dataclasses.replace(base, n_bs=n_bs)
+        minp = int(np.ceil(bcfg.rho2 * n_users))
+        pkeys = jax.random.split(k_part, n_seeds)
+        ikeys = jax.random.split(k_init, n_seeds)
+        idx = jax.vmap(partial(shard_partition, labels=data.y_train,
+                               n_users=n_users,
+                               shards_per_user=shards_per_user))(pkeys)
+        x_c, y_c = data.x_train[idx], data.y_train[idx]  # [seeds, N, n_i, ..]
+        w0 = jax.vmap(lambda k: cnn.init(k, cnn_cfg))(ikeys)
+        params = _scenario_params([s for _, s in group], bcfg)
+        outs = _learning_bucket(
+            params, seed_keys, x_c, y_c, w0, data.x_test, data.y_test,
+            cfg=bcfg, n_rounds=n_rounds, minp=minp, epochs=local_epochs,
+            batch_size=batch_size, lr=float(lr), eval_every=eval_every,
+            backend=backend, fedavg_backend=fedavg_backend, compute=compute,
+            select_cap=select_cap, n_models=len(mobility.MOBILITY_MODELS))
+        t_round = np.asarray(outs["t_round"])            # [S, seeds, R]
+        n_sel = np.asarray(outs["n_selected"])
+        acc = np.asarray(outs["test_acc"])
+        wall = np.cumsum(t_round, axis=-1)
+        for i, (pos, spec) in enumerate(group):
+            finals = []                      # last evaluated acc per seed
+            at_budget = []                   # paper metric per seed
+            budget = float(wall[i, :, -1].mean()) / 2.0
+            for s in range(n_seeds):
+                finite = np.isfinite(acc[i, s])
+                finals.append(acc[i, s][finite][-1] if finite.any()
+                              else np.nan)
+                in_budget = finite & (wall[i, s] <= budget)
+                at_budget.append(acc[i, s][in_budget].max()
+                                 if in_budget.any() else np.nan)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", RuntimeWarning)
+                acc_curve = np.nanmean(acc[i], axis=0)
+                at_budget_mean = float(np.nanmean(at_budget))
+                final_mean = float(np.nanmean(finals))
+                final_std = float(np.nanstd(finals))
+            records[pos] = {
+                "scenario": spec.name,
+                "mobility": spec.mobility,
+                "speed_mps": spec.speed_mps,
+                "dataset": dataset,
+                "n_seeds": n_seeds,
+                "n_rounds": n_rounds,
+                "final_acc_mean": final_mean,
+                "final_acc_std": final_std,
+                "wall_clock_mean_s": float(wall[i, :, -1].mean()),
+                "acc_at_budget": {"budget_s": budget,
+                                  "acc_mean": at_budget_mean},
+                "curves": {
+                    "wall_clock_s": wall[i].mean(axis=0).tolist(),
+                    "test_acc": _finite_or_none(acc_curve),
+                    "t_round_s": t_round[i].mean(axis=0).tolist(),
+                    "n_selected": n_sel[i].mean(axis=0).tolist(),
+                },
+                "seed_curves": {
+                    "wall_clock_s": wall[i].tolist(),
+                    "test_acc": [_finite_or_none(acc[i, s])
+                                 for s in range(n_seeds)],
+                },
+            }
+    return [records[i] for i in range(len(specs))]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
-        description="Batched multi-scenario wireless sweep (JSON records).")
+        description="Batched multi-scenario wireless/learning sweep "
+                    "(JSON records).")
     ap.add_argument("--scenarios", default="all",
                     help="comma-separated registry names, or 'all' "
                          f"(registered: {','.join(SCENARIOS)})")
@@ -213,20 +442,45 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0, help="PRNG root seed")
     ap.add_argument("--out", default="-",
                     help="output path for the JSON list ('-' = stdout)")
+    ap.add_argument("--learning", action="store_true",
+                    help="run the full FL data plane and emit "
+                         "accuracy-vs-wall-clock curves per scenario x seed")
+    ap.add_argument("--dataset", default="mnist")
+    ap.add_argument("--n-train", type=int, default=600)
+    ap.add_argument("--n-test", type=int, default=200)
+    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--batch-size", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--eval-every", type=int, default=1)
+    ap.add_argument("--fedavg-backend", default="jax",
+                    choices=("jax", "pallas"))
+    ap.add_argument("--compute", default="full", choices=("full", "selected"))
+    ap.add_argument("--select-cap", type=int, default=None)
     args = ap.parse_args()
 
     names = list(SCENARIOS) if args.scenarios == "all" \
         else args.scenarios.split(",")
-    records = run_sweep(names, n_seeds=args.seeds, n_rounds=args.rounds,
-                        backend=args.backend, seed=args.seed)
+    if args.learning:
+        records = run_learning_sweep(
+            names, n_seeds=args.seeds, n_rounds=args.rounds,
+            dataset=args.dataset, n_train=args.n_train, n_test=args.n_test,
+            local_epochs=args.local_epochs, batch_size=args.batch_size,
+            lr=args.lr, eval_every=args.eval_every, backend=args.backend,
+            fedavg_backend=args.fedavg_backend, compute=args.compute,
+            select_cap=args.select_cap, seed=args.seed)
+        summary = " ".join(f"{r['scenario']}={r['final_acc_mean']:.3f}"
+                           for r in records)
+    else:
+        records = run_sweep(names, n_seeds=args.seeds, n_rounds=args.rounds,
+                            backend=args.backend, seed=args.seed)
+        summary = " ".join(f"{r['scenario']}={r['t_round_mean_s']:.3f}s"
+                           for r in records)
     payload = json.dumps(records, indent=2)
     if args.out == "-":
         print(payload)
     else:
         with open(args.out, "w") as f:
             f.write(payload + "\n")
-        summary = " ".join(f"{r['scenario']}={r['t_round_mean_s']:.3f}s"
-                           for r in records)
         print(f"wrote {args.out}: {summary}")
 
 

@@ -78,8 +78,18 @@ def _conv(x, w, b):
 
 
 def _maxpool2(x):
-    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    """2x2 stride-2 max pool via reshape-and-reduce.
+
+    Identical to ``reduce_window`` on even dims, but its transpose is a
+    vectorized mask instead of the SelectAndScatter op, whose CPU lowering
+    is a scalar loop ~10x slower than the whole rest of the backward pass
+    (the FL fleet trains under grad, so the pool backward is hot).
+    """
+    b, h, w, c = x.shape
+    if h % 2 or w % 2:                    # odd dims: VALID drops the edge
+        x = x[:, : h - h % 2, : w - w % 2, :]
+        b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
 
 
 def apply(params: PyTree, x: jnp.ndarray) -> jnp.ndarray:

@@ -4,12 +4,25 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.types import WirelessConfig
 from repro.data import make_dataset
 from repro.fl import FLConfig, FLSimulation, shard_partition
 from repro.fl import server as fl_server
 from repro.fl.rounds import accuracy_at_budget
 
 KEY = jax.random.PRNGKey(0)
+
+# small world shared by the engine-parity tests (kept light: the fused scan,
+# the per-round step and the eager loop each compile their own graph)
+SMALL = dict(scheduler="dagsa_jit",
+             wireless=WirelessConfig(n_users=10, n_bs=3),
+             n_train=200, n_test=100, batch_size=10, local_epochs=1,
+             eval_every=1, seed=0)
+
+
+def _max_leaf_diff(a, b) -> float:
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
 # -------------------------------------------------------------- partition --
@@ -51,7 +64,117 @@ def test_fedavg_empty_selection_keeps_global():
     np.testing.assert_allclose(np.asarray(out["w"]), 7.0)
 
 
-# ------------------------------------------------------------ round engine --
+def test_fedavg_accumulates_in_float32():
+    """Low-precision leaves must not overflow/lose precision in the sum:
+    100 clients of f16 value 1000 -> leaf-dtype accumulation hits inf
+    (sum 1e5 > f16 max 65504); the f32 accumulator keeps the mean exact."""
+    n = 100
+    g = {"w": jnp.zeros((4,), jnp.float16)}
+    clients = {"w": jnp.full((n, 4), 1000.0, jnp.float16)}
+    out = fl_server.fedavg(g, clients, jnp.ones(n, dtype=bool), jnp.ones(n))
+    assert out["w"].dtype == jnp.float16          # leaf dtype preserved
+    vals = np.asarray(out["w"], np.float32)
+    assert np.all(np.isfinite(vals))
+    np.testing.assert_allclose(vals, 1000.0)
+
+
+# ------------------------------------------------------- fused round engine --
+def test_fused_scan_matches_legacy_loop():
+    """Same seed -> the fused lax.scan, the per-round jitted step and the
+    seed's eager loop must produce the same training run: identical
+    per-round t_round/n_selected traces and the same final params."""
+    sims = {m: FLSimulation(FLConfig(**SMALL)) for m in
+            ("fused", "step", "eager")}
+    recs = {m: sim.run(3, mode=m) for m, sim in sims.items()}
+
+    for mode in ("step", "eager"):
+        assert [r.n_selected for r in recs[mode]] == \
+               [r.n_selected for r in recs["fused"]]
+        np.testing.assert_allclose(
+            [r.t_round for r in recs[mode]],
+            [r.t_round for r in recs["fused"]], rtol=1e-6)
+        np.testing.assert_allclose(
+            [r.wall_clock for r in recs[mode]],
+            [r.wall_clock for r in recs["fused"]], rtol=1e-6)
+        np.testing.assert_allclose(
+            [r.min_part_rate for r in recs[mode]],
+            [r.min_part_rate for r in recs["fused"]], rtol=1e-6)
+        assert _max_leaf_diff(sims[mode].params, sims["fused"].params) \
+            <= 1e-5
+    # record bookkeeping matches the legacy contract
+    for r_f, r_e in zip(recs["fused"], recs["eager"]):
+        assert r_f.round_idx == r_e.round_idx
+        np.testing.assert_allclose(r_f.test_acc, r_e.test_acc, atol=1e-6)
+
+
+def test_fused_run_is_resumable():
+    """Two fused run() calls chain the carry exactly like one long run."""
+    sim_once = FLSimulation(FLConfig(**SMALL))
+    sim_split = FLSimulation(FLConfig(**SMALL))
+    recs_once = sim_once.run(4, mode="fused")
+    recs_split = sim_split.run(2, mode="fused") + \
+        sim_split.run(2, mode="fused")
+    assert [r.n_selected for r in recs_split] == \
+           [r.n_selected for r in recs_once]
+    np.testing.assert_allclose([r.wall_clock for r in recs_split],
+                               [r.wall_clock for r in recs_once], rtol=1e-6)
+    assert [r.round_idx for r in recs_split] == [1, 2, 3, 4]
+    assert _max_leaf_diff(sim_split.params, sim_once.params) <= 1e-6
+
+
+def test_selected_compute_matches_full_when_cap_covers():
+    """compute='selected' with a cap covering every scheduled client must
+    reproduce the full-fleet result (per-client keys travel with their
+    original index)."""
+    n = SMALL["wireless"].n_users
+    sim_full = FLSimulation(FLConfig(**SMALL))
+    sim_sel = FLSimulation(FLConfig(**SMALL, compute="selected",
+                                    select_cap=n))
+    recs_full = sim_full.run(3)
+    recs_sel = sim_sel.run(3)
+    assert [r.n_selected for r in recs_sel] == \
+           [r.n_selected for r in recs_full]
+    assert _max_leaf_diff(sim_sel.params, sim_full.params) <= 1e-5
+
+
+def test_selected_compute_tight_cap_runs():
+    """A clipping cap is a documented approximation: it must still run and
+    keep the Eq. (8h) floor (the cap defaults to ceil(rho2 * N))."""
+    sim = FLSimulation(FLConfig(**SMALL, compute="selected"))
+    recs = sim.run(2)
+    w = sim.wireless
+    assert all(r.n_selected >= int(np.ceil(w.rho2 * w.n_users))
+               for r in recs)
+
+
+def test_fused_rejects_host_scheduler():
+    sim = FLSimulation(FLConfig(**{**SMALL, "scheduler": "dagsa"}))
+    with pytest.raises(ValueError, match="does not trace"):
+        sim.run(1, mode="fused")
+
+
+def test_learning_sweep_smoke():
+    """2 scenarios x 2 seeds x 2 rounds through the batched learning sweep:
+    one compiled call, strict-JSON records, monotone wall clock."""
+    import json
+
+    from repro.launch.sweep import run_learning_sweep
+
+    recs = run_learning_sweep(
+        ["paper-default", "static"], n_seeds=2, n_rounds=2,
+        cfg=WirelessConfig(n_users=8, n_bs=3), n_train=96, n_test=64,
+        local_epochs=1, batch_size=6)
+    assert [r["scenario"] for r in recs] == ["paper-default", "static"]
+    for r in recs:
+        json.dumps(r, allow_nan=False)            # strictly parseable
+        wall = r["curves"]["wall_clock_s"]
+        assert len(wall) == 2 and wall[1] > wall[0] > 0.0
+        assert len(r["seed_curves"]["test_acc"]) == 2
+        accs = [a for row in r["seed_curves"]["test_acc"] for a in row
+                if a is not None]
+        assert accs and all(0.0 <= a <= 1.0 for a in accs)
+
+
 @pytest.mark.slow
 def test_fl_simulation_learns_and_accounts_latency():
     cfg = FLConfig(dataset="mnist", scheduler="dagsa", n_train=1000,

@@ -7,6 +7,7 @@ from _hypothesis_fallback import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.bandwidth_solve import bandwidth_solve
+from repro.kernels.fedavg_reduce import fedavg_reduce
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.ssd_scan import ssd_scan
@@ -101,6 +102,59 @@ def test_rmsnorm_sweep(shape, dtype):
     np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
                                np.asarray(want, dtype=np.float32),
                                rtol=tol, atol=tol)
+
+
+# ----------------------------------------------------------- fedavg reduce --
+def _fedavg_case(n, shapes, dtype=jnp.float32, p_sel=0.5, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2 * len(shapes) + 2)
+    g = {f"leaf{i}": jax.random.normal(ks[2 * i], s).astype(dtype)
+         for i, s in enumerate(shapes)}
+    c = {f"leaf{i}": jax.random.normal(ks[2 * i + 1], (n,) + s).astype(dtype)
+         for i, s in enumerate(shapes)}
+    sel = jax.random.bernoulli(ks[-2], p_sel, (n,))
+    sizes = jax.random.uniform(ks[-1], (n,), minval=1.0, maxval=9.0)
+    return g, c, sel, sizes
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,shapes", [
+    (7, [(13,), (3, 5)]),            # non-divisible client/feature blocks
+    (16, [(8,), (130,)]),            # feature dim straddling one lane block
+    (1, [(5,)]),                     # single client
+    (20, [(600,)]),                  # multiple feature blocks per leaf
+    (8, [(3, 3, 1, 4), (4,)]),       # conv-style leaf ranks
+])
+def test_fedavg_reduce_matches_oracle(n, shapes, dtype):
+    g, c, sel, sizes = _fedavg_case(n, shapes, dtype)
+    want = ref.fedavg_reduce(g, c, sel, sizes)
+    got = fedavg_reduce(g, c, sel, sizes, client_block=4, feature_block=256,
+                        interpret=True)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    for k in g:
+        assert got[k].dtype == dtype
+        np.testing.assert_allclose(np.asarray(got[k], np.float32),
+                                   np.asarray(want[k], np.float32),
+                                   rtol=tol, atol=tol)
+
+
+def test_fedavg_reduce_zero_selected_keeps_global():
+    g, c, _, sizes = _fedavg_case(6, [(11,)])
+    got = fedavg_reduce(g, c, jnp.zeros(6, dtype=bool), sizes,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(got["leaf0"]),
+                               np.asarray(g["leaf0"]))
+
+
+def test_fedavg_reduce_accumulates_in_float32():
+    """Same overflow guard as the oracle: f16 leaves, sum beyond f16 max."""
+    n = 100
+    g = {"w": jnp.zeros((4,), jnp.float16)}
+    c = {"w": jnp.full((n, 4), 1000.0, jnp.float16)}
+    got = fedavg_reduce(g, c, jnp.ones(n, dtype=bool), jnp.ones(n),
+                        interpret=True)
+    vals = np.asarray(got["w"], np.float32)
+    assert np.all(np.isfinite(vals))
+    np.testing.assert_allclose(vals, 1000.0)
 
 
 # --------------------------------------------------------- bandwidth solve --

@@ -242,13 +242,13 @@ def test_sweep_matches_per_problem_scheduler_constraints():
 def test_flconfig_scenario_wiring():
     from repro.fl import FLConfig, FLSimulation
     cfg = FLConfig(dataset="mnist", scheduler="rs", n_train=200, n_test=100,
-                   batch_size=10, eval_every=0, scenario="waypoint", seed=0)
+                   batch_size=4, eval_every=0, scenario="waypoint", seed=0)
     sim = FLSimulation(cfg)
     assert sim._mob_model == "waypoint" and sim._mob_pause == 2.0
     assert sim.wireless.speed_mps == 20.0
 
     static = FLSimulation(FLConfig(dataset="mnist", scheduler="rs",
-                                   n_train=200, n_test=100, batch_size=10,
+                                   n_train=200, n_test=100, batch_size=4,
                                    eval_every=0, scenario="static", seed=0))
     assert static.wireless.speed_mps == 0.0
     pos_before = np.asarray(static.mob.user_pos).copy()
@@ -258,7 +258,7 @@ def test_flconfig_scenario_wiring():
                                   np.asarray(static.mob.user_pos))
 
     hetero = FLSimulation(FLConfig(dataset="mnist", scheduler="rs",
-                                   n_train=200, n_test=100, batch_size=10,
+                                   n_train=200, n_test=100, batch_size=4,
                                    eval_every=0, scenario="hetero-bw",
                                    seed=0))
     assert float(jnp.std(hetero.bs_bw)) > 0.0
@@ -266,5 +266,5 @@ def test_flconfig_scenario_wiring():
     # contradictory input: static scenario ignores speed -> loud failure
     with pytest.raises(ValueError):
         FLSimulation(FLConfig(dataset="mnist", scheduler="rs", n_train=200,
-                              n_test=100, batch_size=10, eval_every=0,
+                              n_test=100, batch_size=4, eval_every=0,
                               scenario="static", speed_mps=50.0, seed=0))
