@@ -106,8 +106,10 @@ def _make_problems(fleet: int):
     for s in range(fleet):
         k0, k1 = jax.random.split(jax.random.fold_in(key, s))
         st = mobility.init_positions_grid_bs(k0, CFG)
+        # one prior participation each: nobody Eq. (8g)-necessary, so the
+        # timed greedy does real work (zero counts -> trivial select-all)
         probs.append(channel.make_problem(k1, st, CFG,
-                                          jnp.zeros((CFG.n_users,)), 0))
+                                          jnp.ones((CFG.n_users,)), 0))
     return probs, stack_problems(probs)
 
 

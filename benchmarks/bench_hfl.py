@@ -1,0 +1,116 @@
+"""Hierarchical vs single-tier FL: wall-clock cost and handover/accuracy.
+
+For each scenario the same world runs three aggregation variants:
+
+  * ``single``     — the paper's one-tier Eq. (2) (the floor),
+  * ``hier_tau1``  — per-BS edge aggregation, global sync EVERY round
+    (maximal sync traffic; trains like single-tier up to float order),
+  * ``hier_tau5``  — global sync every 5 rounds (the cluster-HFL regime:
+    edges diverge mid-interval, handover users cross diverged models).
+
+All variants run the fused engine (one ``lax.scan`` per run), so the
+``us_per_round`` column is an apples-to-apples measure of what the
+hierarchical tier costs on top of the single-tier round.  The
+``handover_rate_mean`` vs ``final_acc`` pair across scenarios is the
+mobility-vs-convergence trade the cluster-HFL paper (arXiv 2108.09103)
+studies.
+
+Each record is emitted twice: a CSV row (harness contract
+``name,us_per_call,derived``; value = microseconds per round) and a
+machine-readable ``#json `` line (CI uploads these as ``BENCH_hfl.json``).
+
+JSON record schema (one line per scenario x variant):
+
+    {"bench": "hfl",
+     "scenario": str,          # wireless world (registry name)
+     "variant": str,           # single | hier_tau1 | hier_tau5
+     "aggregation": str,       # single | hierarchical
+     "tau_global": int,
+     "setting": str,           # quick | full
+     "n_users": int, "n_bs": int, "n_rounds": int,
+     "us_per_round": float,
+     "rounds_per_sec": float,
+     "speedup_vs_single": float,   # rounds/sec ratio vs this scenario's
+                                   #   single-tier row (< 1 = overhead)
+     "final_acc": float,
+     "handover_rate_mean": float | null}  # null for single-tier (strict JSON)
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.types import WirelessConfig
+from repro.fl import FLConfig, FLSimulation
+from repro.models.cnn import CNNConfig
+
+# (n_users, n_bs, n_train, local_epochs, batch_size, n_rounds, cnn_cfg)
+QUICK = (16, 4, 128, 1, 8, 10,
+         CNNConfig(height=28, width=28, channels=1, c1=4, c2=8, hidden=16))
+FULL = (50, 8, 1000, 2, 10, 10, None)
+
+SCENARIO_NAMES = ("paper-default", "hfl-high-mobility")
+
+VARIANTS = (
+    ("single", "single", None),
+    ("hier_tau1", "hierarchical", 1),
+    ("hier_tau5", "hierarchical", 5),
+)
+
+
+def _make_sim(scenario, aggregation, tau, n_users, n_bs, n_train, epochs,
+              batch, cnn_cfg) -> FLSimulation:
+    cfg = FLConfig(scheduler="dagsa_jit", scenario=scenario,
+                   wireless=WirelessConfig(n_users=n_users, n_bs=n_bs),
+                   n_train=n_train, n_test=100, local_epochs=epochs,
+                   batch_size=batch, eval_every=1, seed=0, cnn=cnn_cfg,
+                   aggregation=aggregation, tau_global=tau)
+    return FLSimulation(cfg)
+
+
+def run(quick: bool = True) -> None:
+    setting = "quick" if quick else "full"
+    n_users, n_bs, n_train, epochs, batch, n_rounds, cnn_cfg = \
+        QUICK if quick else FULL
+
+    for scenario in SCENARIO_NAMES:
+        single_rps = None
+        for variant, agg, tau in VARIANTS:
+            sim = _make_sim(scenario, agg, tau, n_users, n_bs, n_train,
+                            epochs, batch, cnn_cfg)
+            recs = sim.run(n_rounds, mode="fused")   # compile + learn
+            best = float("inf")                      # best-of-3: noise-robust
+            for _ in range(3):
+                t0 = time.perf_counter()
+                sim.run(n_rounds, mode="fused")
+                best = min(best, time.perf_counter() - t0)
+            sec = best / n_rounds
+            rps = 1.0 / sec
+            if variant == "single":
+                single_rps = rps
+            speedup = rps / single_rps
+            final_acc = recs[-1].test_acc
+            # None (not NaN) for single-tier so the JSON stays strict
+            hand = float(np.nanmean([r.handover_rate for r in recs])) \
+                if agg == "hierarchical" else None
+            tau_eff = sim.tau_global
+            emit(f"hfl_{scenario}_{variant}_{setting}", sec * 1e6,
+                 f"rounds_per_sec={rps:.2f} "
+                 f"speedup_vs_single={speedup:.2f}x "
+                 f"final_acc={final_acc:.3f} "
+                 f"handover={hand if hand is not None else 'n/a'}")
+            rec = {
+                "bench": "hfl", "scenario": scenario, "variant": variant,
+                "aggregation": agg, "tau_global": tau_eff,
+                "setting": setting, "n_users": n_users, "n_bs": n_bs,
+                "n_rounds": n_rounds,
+                "us_per_round": sec * 1e6,
+                "rounds_per_sec": rps,
+                "speedup_vs_single": speedup,
+                "final_acc": final_acc,
+                "handover_rate_mean": hand,
+            }
+            print(f"#json {json.dumps(rec)}")

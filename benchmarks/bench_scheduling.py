@@ -3,8 +3,24 @@
 Also times the scheduling call itself (schedules/sec per policy) — the
 control-plane cost that fleet-scale sweeps pay every round, and the figure
 the Eq. (11) solver work shows up in.
+
+Each row is emitted twice: the harness CSV contract and a ``#json `` line
+(CI extracts these as ``BENCH_scheduling.json``; a committed baseline
+snapshot lives in ``benchmarks/baselines/``).
+
+JSON record schemas:
+
+    {"bench": "scheduling", "kind": "sched_call", "setting": str,
+     "scheduler": str, "us_per_call": float, "schedules_per_sec": float}
+
+    {"bench": "scheduling", "kind": "fig2", "setting": str,
+     "dataset": str, "scheduler": str, "n_rounds": int,
+     "mean_t_round_s": float, "budget_s": float,
+     "acc_at_budget": float, "final_acc": float, "sim_time_s": float}
 """
 from __future__ import annotations
+
+import json
 
 import jax
 import jax.numpy as jnp
@@ -20,12 +36,16 @@ SCHEDULERS = ["dagsa", "rs", "ub", "fedcs_low", "fedcs_high", "sa"]
 
 def _bench_scheduler_calls(quick: bool) -> None:
     """schedules/sec of the bare scheduling call, per policy."""
+    setting = "quick" if quick else "full"
     cfg = WirelessConfig()
     key = jax.random.PRNGKey(0)
     k0, k1 = jax.random.split(key)
     state = mobility.init_positions_grid_bs(k0, cfg)
+    # one prior participation per user: nobody Eq. (8g)-necessary, so the
+    # greedy faces a real scheduling problem (zero counts would make every
+    # user necessary -> trivial select-all)
     prob = channel.make_problem(k1, state, cfg,
-                                jnp.zeros((cfg.n_users,)), 0)
+                                jnp.ones((cfg.n_users,)), 0)
     n = 5 if quick else 20
     for name in SCHEDULERS + ["dagsa_jit"]:
         def call():
@@ -35,6 +55,10 @@ def _bench_scheduler_calls(quick: bool) -> None:
         us = time_fn(call, n=n, warmup=2)
         emit(f"sched_call_{name}", us,
              f"schedules_per_sec={1e6 / us:.1f}")
+        rec = {"bench": "scheduling", "kind": "sched_call",
+               "setting": setting, "scheduler": name, "us_per_call": us,
+               "schedules_per_sec": 1e6 / us}
+        print(f"#json {json.dumps(rec)}")
 
 
 def run(quick: bool = True) -> None:
@@ -53,7 +77,16 @@ def run(quick: bool = True) -> None:
         budget = 0.95 * min(r[-1].wall_clock for r in results.values())
         for name, recs in results.items():
             mean_lat = np.mean([r.t_round for r in recs])
+            acc_b = accuracy_at_budget(recs, budget)
             emit(f"fig2_{ds}_{name}", mean_lat * 1e6,
-                 f"acc@{budget:.1f}s={accuracy_at_budget(recs, budget):.3f} "
+                 f"acc@{budget:.1f}s={acc_b:.3f} "
                  f"final_acc={recs[-1].test_acc:.3f} "
                  f"sim_time={recs[-1].wall_clock:.1f}s")
+            rec = {"bench": "scheduling", "kind": "fig2",
+                   "setting": "quick" if quick else "full",
+                   "dataset": ds, "scheduler": name, "n_rounds": n_rounds,
+                   "mean_t_round_s": float(mean_lat), "budget_s": budget,
+                   "acc_at_budget": acc_b,
+                   "final_acc": recs[-1].test_acc,
+                   "sim_time_s": recs[-1].wall_clock}
+            print(f"#json {json.dumps(rec)}")

@@ -19,6 +19,7 @@ BENCHES = [
     ("fig4", "benchmarks.bench_mobility", "Fig.4 mobility sweep"),
     ("fleet", "benchmarks.bench_fleet", "fleet-scale batched scheduling"),
     ("fl", "benchmarks.bench_fl_rounds", "FL round engine rounds/sec"),
+    ("hfl", "benchmarks.bench_hfl", "hierarchical vs single-tier FL"),
     ("roofline", "benchmarks.bench_roofline", "dry-run roofline terms"),
 ]
 

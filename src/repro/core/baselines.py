@@ -84,7 +84,15 @@ def fedcs_schedule(problem: SchedulingProblem,
     candidates in descending-SNR order while the round time under an EVEN
     bandwidth split stays <= threshold.  With j admitted users each gets
     B_k/j, so t(j) = max_{i<=j} (tcomp_i + c_i * j / B_k); we take the largest
-    j with t(j) <= threshold — a sort + prefix-max, fully vectorized.
+    j with t(j) <= threshold.
+
+    t(j) is evaluated per position j as an O(N) masked max over the sorted
+    prefix, ``lax.map``-ed over j in fixed-size chunks — O(N * chunk) live
+    memory per BS and ~N/chunk sequential steps instead of a fully
+    serialized scan.  (The previous formulation materialized the full
+    [N, N] ``t(j)`` matrix per BS inside the vmap over M and cummax'd it:
+    O(N^2 * M) memory, which OOMs fleet-scale sweeps.  Max is exact
+    whatever the reduction order, so the schedules are bit-identical.)
     """
     n = problem.snr.shape[0]
     all_sel = jnp.ones((n,), dtype=bool)
@@ -97,12 +105,16 @@ def fedcs_schedule(problem: SchedulingProblem,
         c_s = coeff_k[order]
         tc_s = problem.tcomp[order]
         is_cand = cand_k[order]
-        # t_for_j[j-1] = max_{i<j} tc_s[i] + c_s[i]*j/bw  (j = 1..N)
-        j = jnp.arange(1, n + 1, dtype=coeff_k.dtype)        # [N]
-        vals = tc_s[:, None] + c_s[:, None] * j[None, :] / bw_k  # [N, N]
-        vals = jnp.where(is_cand[:, None], vals, -jnp.inf)
-        prefix = jax.lax.cummax(vals, axis=0)
-        t_for_j = jnp.diagonal(prefix)                        # [N]
+        pos = jnp.arange(n)
+
+        def t_for(j):
+            # t(j+1) = max over the first j+1 sorted candidates of
+            # tc_s[i] + c_s[i] * (j+1) / bw
+            jj = (j + 1).astype(coeff_k.dtype)
+            vals = tc_s + c_s * jj / bw_k                     # [N]
+            return jnp.max(jnp.where(is_cand & (pos <= j), vals, -jnp.inf))
+
+        t_for_j = jax.lax.map(t_for, pos, batch_size=min(n, 64))  # [N]
         n_cand = jnp.sum(is_cand)
         feasible = (t_for_j <= threshold_s) & (jnp.arange(1, n + 1) <= n_cand)
         n_take = jnp.max(jnp.where(feasible, jnp.arange(1, n + 1), 0))

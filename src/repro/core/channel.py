@@ -91,9 +91,12 @@ def make_problem(key: jax.Array, state: MobilityState, cfg: WirelessConfig,
     """Assemble one round's SchedulingProblem from the physical state.
 
     ``necessary`` implements Eq. (8g): user i must participate this round if
-    its historical participation count would otherwise fall below rho1 * n.
-    ``shadow_db`` optionally stacks a [N, M] shadowing field (dB) on top of
-    the Rayleigh fading (scenario engine's ``shadowing`` option).
+    sitting it out would leave its participation count below the post-round
+    floor rho1 * (round_idx + 1) — after this round, round_idx + 1 rounds
+    have elapsed.  (Testing against the PRE-round floor rho1 * round_idx
+    marks users necessary one round late and can never mark anyone at round
+    0.)  ``shadow_db`` optionally stacks a [N, M] shadowing field (dB) on
+    top of the Rayleigh fading (scenario engine's ``shadowing`` option).
     """
     k_snr, k_tc = jax.random.split(key)
     snr = sample_snr(k_snr, state.distances(), cfg, shadow_db=shadow_db)
@@ -102,7 +105,7 @@ def make_problem(key: jax.Array, state: MobilityState, cfg: WirelessConfig,
     if bs_bw is None:
         bs_bw = jnp.full((cfg.n_bs,), cfg.bs_bandwidth_mhz)
     # works for both host ints and traced round counters (fused round scan)
-    necessary = part_counts < cfg.rho1 * round_idx
+    necessary = part_counts < cfg.rho1 * (round_idx + 1)
     # host math: min_participants must stay a static int under tracing
     min_participants = int(math.ceil(cfg.rho2 * cfg.n_users))
     return SchedulingProblem(snr=snr, tcomp=tcomp, bs_bw=bs_bw, coeff=coeff,

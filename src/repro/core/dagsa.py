@@ -22,7 +22,9 @@ would contradict both):
 Determinism: ONE ``numpy.random.Generator`` seeded from ``seed`` is created
 up front and threaded through every random choice (the step-1 shuffle and
 the step-4 BS draw); nothing else consumes entropy, so ``seed`` fully
-determines the schedule (asserted in tests).
+determines the schedule (asserted in tests).  On single-BS problems the
+step-4 draw is determined and consumes NO entropy (mirrored by
+``dagsa_jit``, keeping host/jit draw counts in lockstep).
 
 Performance: per-BS optimal times are cached and every candidate evaluation
 warm-starts the Eq. (11) solver with the BS's current t_k^* as the lower
@@ -143,7 +145,10 @@ def dagsa_schedule(problem: SchedulingProblem,
     fill_pass(t_star)
     while int(assign.any(axis=1).sum()) < problem.min_participants \
             and remaining.any():
-        k = int(rng.integers(m))
+        # single-BS worlds: the draw is determined, so consuming entropy for
+        # it would break step-count parity with dagsa_jit (which mirrors
+        # this short-circuit) without changing anything.
+        k = int(rng.integers(m)) if m > 1 else 0
         cand = np.where(remaining, snr[:, k], -np.inf)
         i = int(np.argmax(cand))
         t_bs[k] = bs_time_with(k, i)

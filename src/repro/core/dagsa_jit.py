@@ -114,9 +114,14 @@ def _schedule(snr, coeff, tcomp, bs_bw, necessary, min_participants, key,
         score = jnp.where(feasible, cand_snr, -jnp.inf)
         k_greedy = jnp.argmax(score)
 
-        # otherwise force-add to a random BS and raise the threshold (8h)
-        key, krand = jax.random.split(key)
-        k_forced = jax.random.randint(krand, (), 0, m)
+        # otherwise force-add to a random BS and raise the threshold (8h);
+        # m == 1 short-circuits the draw (mirrors the host greedy: a
+        # determined draw must not consume entropy)
+        if m > 1:
+            key, krand = jax.random.split(key)
+            k_forced = jax.random.randint(krand, (), 0, m)
+        else:
+            k_forced = jnp.int32(0)
         need_more = n_selected(assign) < min_participants
         k_star = jnp.where(any_feasible, k_greedy, k_forced)
         i_star = cand[k_star]

@@ -32,6 +32,12 @@ from repro.core.types import WirelessConfig
 
 BS_LAYOUTS = ("grid", "uniform")
 
+# FL aggregation architectures a scenario can ask for (resolved by the FL
+# engine; "single" is the paper's one-tier world, "hierarchical" adds per-BS
+# edge aggregation with a global sync every tau_global rounds — see
+# repro.fl.rounds).
+AGGREGATIONS = ("single", "hierarchical")
+
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
@@ -63,6 +69,9 @@ class ScenarioSpec:
     # -- fading ------------------------------------------------------------
     shadowing: bool = False
     shadow_sigma_db: float = 8.0
+    # -- FL aggregation architecture ---------------------------------------
+    aggregation: str = "single"         # single | hierarchical
+    tau_global: int = 1                 # global sync period (hierarchical)
 
     def __post_init__(self):
         if self.mobility not in MOBILITY_MODELS:
@@ -77,6 +86,15 @@ class ScenarioSpec:
             raise ValueError("bw_max_mhz must be >= bw_min_mhz")
         if not 0.0 <= self.gm_memory < 1.0:
             raise ValueError("gm_memory must be in [0, 1)")
+        if self.aggregation not in AGGREGATIONS:
+            raise ValueError(f"unknown aggregation {self.aggregation!r}; "
+                             f"choose from {AGGREGATIONS}")
+        if self.tau_global < 1:
+            raise ValueError("tau_global must be >= 1")
+        if self.aggregation == "single" and self.tau_global != 1:
+            raise ValueError("tau_global only applies to "
+                             "aggregation='hierarchical'; it would silently "
+                             "do nothing on a single-tier scenario")
         assert self.speed_mps >= 0.0 and self.pause_s >= 0.0
 
     # ------------------------------------------------------------- derive --
@@ -155,6 +173,25 @@ _BUILTINS = (
         name="waypoint", mobility="waypoint", pause_s=2.0,
         description="Random Waypoint with 2 s pauses: bursty mobility with "
                     "center-biased stationary density."),
+    # Hierarchical (edge-aggregating) worlds — arXiv 2108.09103's regime:
+    # every BS edge-aggregates its users each round, edges sync to the
+    # global model every tau_global rounds, and users that hand over
+    # between cells mid-interval pull the new cell's (diverged) edge model.
+    ScenarioSpec(
+        name="hfl-default", aggregation="hierarchical", tau_global=5,
+        description="Hierarchical FL in the paper's baseline world: per-BS "
+                    "edge Eq. (2) every round, global sync every 5 rounds."),
+    ScenarioSpec(
+        name="hfl-high-mobility", aggregation="hierarchical", tau_global=5,
+        speed_mps=100.0,
+        description="Hierarchical FL at 100 m/s: frequent handovers make "
+                    "users cross diverged edge models mid-interval — the "
+                    "cluster-HFL paper's dominant convergence effect."),
+    ScenarioSpec(
+        name="hfl-sparse-bs", aggregation="hierarchical", tau_global=5,
+        n_bs=3, bs_layout="uniform",
+        description="Hierarchical FL under sparse coverage: few large "
+                    "cells, rare handovers, strongly non-IID edge models."),
 )
 for _spec in _BUILTINS:
     register_scenario(_spec)

@@ -3,9 +3,11 @@ and the mobility-aware round engine that couples the control plane (core/)
 to the data plane.  The engine runs fused (one ``lax.scan`` over rounds),
 per-round jitted, or eager — see :class:`repro.fl.rounds.FLSimulation`."""
 from repro.fl.partition import shard_partition
-from repro.fl.rounds import (FLConfig, FLSimulation, FUSED_SCHEDULERS,
-                             RoundRecord, accuracy_at_budget,
+from repro.fl.rounds import (DEFAULT_TAU_GLOBAL, FLConfig, FLSimulation,
+                             FUSED_SCHEDULERS, RoundRecord,
+                             accuracy_at_budget, hierarchical_round,
                              train_and_aggregate)
 
 __all__ = ["shard_partition", "FLConfig", "FLSimulation", "RoundRecord",
-           "FUSED_SCHEDULERS", "accuracy_at_budget", "train_and_aggregate"]
+           "FUSED_SCHEDULERS", "DEFAULT_TAU_GLOBAL", "accuracy_at_budget",
+           "hierarchical_round", "train_and_aggregate"]

@@ -85,3 +85,20 @@ def fleet_local_sgd(loss_fn: Callable, global_params: PyTree,
                  lr=lr)
     return jax.vmap(lambda xx, yy, kk: fn(global_params, xx, yy, kk))(
         x_all, y_all, keys)
+
+
+def fleet_local_sgd_per_client(loss_fn: Callable, init_params: PyTree,
+                               x_all: jnp.ndarray, y_all: jnp.ndarray,
+                               keys: jax.Array, epochs: int, batch_size: int,
+                               lr: float) -> PyTree:
+    """vmap of local_sgd where EACH client starts from its own params.
+
+    The hierarchical engine's data plane: client i pulls the edge model of
+    its serving BS (handover-aware — a user that moved cells trains from
+    the new cell's model), so ``init_params`` leaves carry a leading client
+    axis [N, ...] instead of being broadcast from one global model.
+    """
+    fn = partial(local_sgd, loss_fn, epochs=epochs, batch_size=batch_size,
+                 lr=lr)
+    return jax.vmap(lambda p, xx, yy, kk: fn(p, xx, yy, kk))(
+        init_params, x_all, y_all, keys)

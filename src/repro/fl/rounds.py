@@ -30,6 +30,21 @@ on the training trajectory):
     separate fleet/aggregation dispatches, per-round host syncs.  Kept for
     the host ``dagsa`` scheduler and as the benchmark baseline
     (``benchmarks/bench_fl_rounds.py``).
+
+Aggregation architectures (``FLConfig.aggregation``):
+
+  * ``single``       — the paper's one-tier Eq. (2): every scheduled user
+    uploads to the global server each round.
+  * ``hierarchical`` — the multi-BS architecture of *Mobility-Aware Cluster
+    Federated Learning in Hierarchical Wireless Networks* (arXiv
+    2108.09103): each BS edge-aggregates its users' updates every round
+    (per-BS segmented Eq. (2), :func:`repro.fl.server.fedavg_segmented` /
+    the Pallas ``fedavg_segment_reduce`` kernel), edge models sync into the
+    global model every ``tau_global`` rounds, and a user that hands over
+    between cells mid-interval pulls the new cell's (diverged) edge model —
+    the convergence effect that paper studies.  Lives entirely inside the
+    traced round step (edge states ride the ``lax.scan`` carry), so fused
+    runs stay one compiled call.
 """
 from __future__ import annotations
 
@@ -43,7 +58,7 @@ import numpy as np
 
 from repro.core import (MobilityState, ParticipationState, WirelessConfig,
                         channel, mobility, scheduler as sched)
-from repro.core.scenario import get_scenario
+from repro.core.scenario import AGGREGATIONS, get_scenario
 from repro.data import make_dataset
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
@@ -57,6 +72,10 @@ FUSED_SCHEDULERS = ("dagsa_jit", "rs", "ub", "fedcs_low", "fedcs_high", "sa")
 
 COMPUTE_MODES = ("full", "selected")
 FEDAVG_BACKENDS = ("jax", "pallas")
+
+# Global sync period when a config asks for hierarchical aggregation but
+# neither it nor its scenario names a tau.
+DEFAULT_TAU_GLOBAL = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +122,14 @@ class FLConfig:
                                        # ceil(rho2 * N), the Eq. (8h) floor
     fedavg_backend: str = "jax"     # jax oracle | pallas fused reduction
                                     # (interpret mode auto-enabled off-TPU)
+    aggregation: Optional[str] = None  # single | hierarchical; None inherits
+                                       # the scenario's choice (default
+                                       # single).  hierarchical: per-BS edge
+                                       # Eq. (2) every round, global sync
+                                       # every tau_global rounds, handover
+                                       # users pull the new cell's edge model
+    tau_global: Optional[int] = None   # global sync period (rounds); only
+                                       # meaningful with hierarchical
 
     def __post_init__(self):
         if self.compute not in COMPUTE_MODES:
@@ -112,6 +139,11 @@ class FLConfig:
             raise ValueError(f"unknown fedavg backend "
                              f"{self.fedavg_backend!r}; "
                              f"choose from {FEDAVG_BACKENDS}")
+        if self.aggregation is not None and self.aggregation not in AGGREGATIONS:
+            raise ValueError(f"unknown aggregation {self.aggregation!r}; "
+                             f"choose from {AGGREGATIONS}")
+        if self.tau_global is not None and self.tau_global < 1:
+            raise ValueError("tau_global must be >= 1")
 
 
 @dataclasses.dataclass
@@ -122,6 +154,9 @@ class RoundRecord:
     n_selected: int
     test_acc: float       # nan when not evaluated this round
     min_part_rate: float  # min_i counts_i / n — fairness monitor (Eq. 8g)
+    handover_rate: float = float("nan")  # fraction of users whose serving
+                                         # BS changed this round
+                                         # (hierarchical runs only)
 
 
 def train_and_aggregate(loss_fn, params: PyTree, x_clients, y_clients, keys,
@@ -160,6 +195,90 @@ def train_and_aggregate(loss_fn, params: PyTree, x_clients, y_clients, keys,
     return fl_server.fedavg(params, client_params, sel, sizes)
 
 
+def camped_bs(dist: jnp.ndarray) -> jnp.ndarray:
+    """[N] int32 serving cell: the geometrically nearest BS.
+
+    Camping follows large-scale signal (distance), not the per-round
+    Rayleigh draw — handover between camped cells is the mobility-driven
+    quantity the cluster-HFL paper (arXiv 2108.09103) studies, and defining
+    it on geometry keeps the metric free of fading noise.
+    """
+    return jnp.argmin(dist, axis=1).astype(jnp.int32)
+
+
+def hierarchical_round(loss_fn, global_params: PyTree, edge_params: PyTree,
+                       edge_weight: jnp.ndarray, prev_bs: jnp.ndarray,
+                       x_clients, y_clients, keys, assign, selected, serving,
+                       data_sizes, r, *, tau_global: int, epochs: int,
+                       batch_size: int, lr: float, compute: str = "full",
+                       select_cap: int | None = None,
+                       fedavg_backend: str = "jax"):
+    """One hierarchical data-plane round (arXiv 2108.09103's architecture).
+
+    Each client pulls the edge model of its serving (camped) cell — so a
+    user that handed over since last round trains from the NEW cell's,
+    possibly diverged, model — runs local SGD, and its update
+    edge-aggregates into the BS the *scheduler* assigned its upload to, via
+    the per-BS segmented Eq. (2) (download follows camping, upload follows
+    the Eq. (8) assignment; the two usually agree but the scheduler may
+    load-balance).  Every ``tau_global`` rounds the edge models sync into
+    the global model, weighted by the data each edge aggregated since the
+    last sync.  Fully traced: ``r`` may be a host int or the fused scan's
+    round counter.
+
+    Returns ``(global_params, edge_params, edge_weight, serving,
+    handover_rate)``.  For evaluation between syncs, mix the edges with
+    :func:`repro.fl.server.edge_global_sync` (the virtual global: edge
+    mixture by accumulated weight, the plain global right after a sync) —
+    callers do this INSIDE their eval ``lax.cond`` so non-eval rounds skip
+    the O(M x model) reduction.
+    """
+    moved = (serving != prev_bs) & (prev_bs >= 0)
+    handover_rate = jnp.mean(moved.astype(jnp.float32))
+    init = jax.tree.map(lambda e: e[serving], edge_params)
+
+    if compute == "selected":
+        n = x_clients.shape[0]
+        cap = n if select_cap is None else min(int(select_cap), n)
+        idx = fl_client.topk_selected_indices(selected, cap)
+        client_params = fl_client.fleet_local_sgd_per_client(
+            loss_fn, jax.tree.map(lambda a: a[idx], init),
+            x_clients[idx], y_clients[idx], keys[idx],
+            epochs=epochs, batch_size=batch_size, lr=lr)
+        assign_r, sizes = assign[idx], data_sizes[idx]
+    elif compute == "full":
+        client_params = fl_client.fleet_local_sgd_per_client(
+            loss_fn, init, x_clients, y_clients, keys,
+            epochs=epochs, batch_size=batch_size, lr=lr)
+        assign_r, sizes = assign, data_sizes
+    else:
+        raise ValueError(f"unknown compute mode {compute!r}; "
+                         f"choose from {COMPUTE_MODES}")
+
+    # edge Eq. (2): every BS aggregates its users in one segment-reduce
+    if fedavg_backend == "pallas":
+        from repro.kernels.fedavg_reduce import fedavg_segment_reduce
+        edge_params = fedavg_segment_reduce(edge_params, client_params,
+                                            assign_r, sizes)
+    else:
+        edge_params = fl_server.fedavg_segmented(edge_params, client_params,
+                                                 assign_r, sizes)
+    _, bs_totals = fl_server.segment_weights(assign_r, sizes)
+    edge_weight = edge_weight + bs_totals
+
+    def sync(args):
+        g, e, wgt = args
+        g2 = fl_server.edge_global_sync(g, e, wgt)
+        e2 = jax.tree.map(
+            lambda gl, el: jnp.broadcast_to(gl[None], el.shape), g2, e)
+        return g2, e2, jnp.zeros_like(wgt)
+
+    global_params, edge_params, edge_weight = jax.lax.cond(
+        (r + 1) % tau_global == 0, sync, lambda a: a,
+        (global_params, edge_params, edge_weight))
+    return global_params, edge_params, edge_weight, serving, handover_rate
+
+
 class FLSimulation:
     """Owns all state of one FL run; `run(n_rounds)` yields RoundRecords."""
 
@@ -177,6 +296,31 @@ class FLSimulation:
             w = dataclasses.replace(w, speed_mps=cfg.speed_mps)
         self.scenario = spec
         self.wireless = w                  # resolved wireless config
+
+        # -- aggregation architecture (explicit config beats the scenario) --
+        agg = cfg.aggregation or (spec.aggregation if spec else "single")
+        if cfg.tau_global is not None and agg != "hierarchical":
+            raise ValueError(
+                f"tau_global={cfg.tau_global} only applies to "
+                f"aggregation='hierarchical' (resolved aggregation is "
+                f"{agg!r}); it would silently do nothing")
+        if agg == "hierarchical":
+            if cfg.tau_global is not None:
+                tau = cfg.tau_global
+            elif spec is not None and spec.aggregation == "hierarchical":
+                tau = spec.tau_global
+            else:
+                tau = DEFAULT_TAU_GLOBAL
+            if cfg.scheduler not in FUSED_SCHEDULERS:
+                raise ValueError(
+                    f"aggregation='hierarchical' needs a traced round step; "
+                    f"scheduler {cfg.scheduler!r} is host-side — pick one "
+                    f"of {FUSED_SCHEDULERS}")
+        else:
+            tau = 1
+        self.aggregation, self.tau_global = agg, tau
+        self._hier = agg == "hierarchical"
+
         key = jax.random.PRNGKey(cfg.seed)
         (k_data, k_part, k_pos, k_model, k_bw, self._key) = \
             jax.random.split(key, 6)
@@ -223,6 +367,15 @@ class FLSimulation:
         self._select_cap = (cfg.select_cap if cfg.select_cap is not None
                             else int(np.ceil(w.rho2 * w.n_users)))
 
+        # hierarchical state: per-BS edge models (all start at the global
+        # model), the data weight each edge aggregated since the last
+        # global sync, and last round's serving BS for handover detection.
+        if self._hier:
+            self.edge_params = jax.tree.map(
+                lambda p: jnp.repeat(p[None], w.n_bs, axis=0), self.params)
+            self.edge_weight = jnp.zeros((w.n_bs,), jnp.float32)
+            self._prev_bs = jnp.full((w.n_users,), -1, jnp.int32)
+
         # one compiled graph for the whole fleet's local training (eager path)
         self._fleet = jax.jit(partial(
             fl_client.fleet_local_sgd, cnn.loss_fn,
@@ -239,24 +392,31 @@ class FLSimulation:
         return self.cfg.scheduler in FUSED_SCHEDULERS
 
     def _carry(self) -> tuple:
-        return (self.params, self.mob.user_pos, self._mob_aux,
+        base = (self.params, self.mob.user_pos, self._mob_aux,
                 self.part.counts, self._key)
+        if self._hier:
+            return base + (self.edge_params, self.edge_weight, self._prev_bs)
+        return base
 
     def _set_carry(self, carry: tuple) -> None:
-        params, pos, aux, counts, key = carry
+        params, pos, aux, counts, key = carry[:5]
         self.params = params
         self.mob = MobilityState(user_pos=pos, bs_pos=self.mob.bs_pos)
         self._mob_aux = aux
         self.part = ParticipationState(counts=counts,
                                        round_idx=self.round_idx)
         self._key = key
+        if self._hier:
+            self.edge_params, self.edge_weight, self._prev_bs = carry[5:]
 
     def _round_step(self, carry: tuple, r) -> tuple[tuple, dict]:
         """One fully-traced round: mobility -> channel -> schedule -> local
-        SGD -> masked FedAvg -> eval under ``lax.cond``.  ``r`` may be a
-        host int (per-round step) or a traced counter (fused scan)."""
+        SGD -> masked FedAvg (single-tier Eq. (2) or per-BS edge
+        aggregation + tau_global sync) -> eval under ``lax.cond``.  ``r``
+        may be a host int (per-round step) or a traced counter (fused
+        scan)."""
         cfg, w = self.cfg, self.wireless
-        params, pos, aux, counts, key = carry
+        params, pos, aux, counts, key = carry[:5]
         key, k_mob, k_prob, k_sched, k_fleet = jax.random.split(key, 5)
 
         # 1. mobility (model chosen by the scenario; plain RD by default)
@@ -275,19 +435,39 @@ class FLSimulation:
         res = sched.schedule(cfg.scheduler, prob, w, k_sched)
         # 4. data plane: local SGD + Eq. (2) aggregation
         keys = jax.random.split(k_fleet, w.n_users)
-        params = train_and_aggregate(
-            cnn.loss_fn, params, self.x_clients, self.y_clients, keys,
-            res.selected, self.data_sizes, epochs=cfg.local_epochs,
-            batch_size=cfg.batch_size, lr=cfg.lr, compute=cfg.compute,
-            select_cap=self._select_cap,
-            fedavg_backend=cfg.fedavg_backend)
+        if self._hier:
+            edge, edge_w, prev_bs = carry[5:]
+            serving = camped_bs(MobilityState(
+                user_pos=pos, bs_pos=self.mob.bs_pos).distances())
+            (params, edge, edge_w, prev_bs, handover_rate) = \
+                hierarchical_round(
+                    cnn.loss_fn, params, edge, edge_w, prev_bs,
+                    self.x_clients, self.y_clients, keys, res.assign,
+                    res.selected, serving, self.data_sizes, r,
+                    tau_global=self.tau_global, epochs=cfg.local_epochs,
+                    batch_size=cfg.batch_size, lr=cfg.lr,
+                    compute=cfg.compute, select_cap=self._select_cap,
+                    fedavg_backend=cfg.fedavg_backend)
+            # eval sees the virtual global (edge mixture); built inside the
+            # cond so non-eval rounds skip the O(M x model) reduction
+            eval_args = (params, edge, edge_w)
+            eval_model = lambda a: fl_server.edge_global_sync(*a)
+        else:
+            params = train_and_aggregate(
+                cnn.loss_fn, params, self.x_clients, self.y_clients, keys,
+                res.selected, self.data_sizes, epochs=cfg.local_epochs,
+                batch_size=cfg.batch_size, lr=cfg.lr, compute=cfg.compute,
+                select_cap=self._select_cap,
+                fedavg_backend=cfg.fedavg_backend)
+            eval_args, eval_model = params, lambda p: p
         # 5. bookkeeping — everything stays on device
         counts = counts + res.selected.astype(counts.dtype)
         if cfg.eval_every:
             acc = jax.lax.cond(
                 (r + 1) % cfg.eval_every == 0,
-                lambda p: cnn.accuracy(p, self.data.x_test, self.data.y_test),
-                lambda p: jnp.float32(jnp.nan), params)
+                lambda a: cnn.accuracy(eval_model(a), self.data.x_test,
+                                       self.data.y_test),
+                lambda a: jnp.float32(jnp.nan), eval_args)
         else:
             acc = jnp.float32(jnp.nan)
         out = {
@@ -296,7 +476,11 @@ class FLSimulation:
             "test_acc": acc,
             "min_part_rate": jnp.min(counts) / (r + 1.0),
         }
-        return (params, pos, aux, counts, key), out
+        new_carry = (params, pos, aux, counts, key)
+        if self._hier:
+            out["handover_rate"] = handover_rate
+            new_carry = new_carry + (edge, edge_w, prev_bs)
+        return new_carry, out
 
     def _run_scan(self, carry: tuple, r0, n_rounds: int):
         """n_rounds of :meth:`_round_step` as one ``lax.scan``."""
@@ -320,6 +504,10 @@ class FLSimulation:
                 f"scheduler {self.cfg.scheduler!r} does not trace; "
                 f"mode={mode!r} needs one of {FUSED_SCHEDULERS} "
                 f"(use mode='eager')")
+        if mode == "eager" and self._hier:
+            raise ValueError(
+                "aggregation='hierarchical' lives in the traced round step; "
+                "use mode='fused' or mode='step'")
         if n_rounds <= 0:
             return []
         if mode == "fused":
@@ -345,12 +533,15 @@ class FLSimulation:
         outs = jax.tree.map(np.asarray, outs)        # the only host sync
         wall = self.wall_clock + np.cumsum(outs["t_round"], dtype=np.float64)
         first = self.round_idx - n_rounds + 1  # round_idx already advanced
+        hand = outs.get("handover_rate")
         recs = [RoundRecord(round_idx=first + i,
                             t_round=float(outs["t_round"][i]),
                             wall_clock=float(wall[i]),
                             n_selected=int(outs["n_selected"][i]),
                             test_acc=float(outs["test_acc"][i]),
-                            min_part_rate=float(outs["min_part_rate"][i]))
+                            min_part_rate=float(outs["min_part_rate"][i]),
+                            handover_rate=(float(hand[i]) if hand is not None
+                                           else float("nan")))
                 for i in range(n_rounds)]
         self.wall_clock = float(wall[-1])
         return recs

@@ -1,12 +1,22 @@
 """Server-side aggregation — paper Eq. (2), masked weighted FedAvg.
 
 This module is the single source of truth for the Eq. (2) math: the Pallas
-kernel oracle (:func:`repro.kernels.ref.fedavg_reduce`) delegates here, and
-the TPU kernel (:mod:`repro.kernels.fedavg_reduce`) must match it.  The
-weighted sum accumulates in float32 regardless of the leaf dtype — with
+kernel oracles (:func:`repro.kernels.ref.fedavg_reduce`,
+:func:`repro.kernels.ref.fedavg_segment_reduce`) delegate here, and the TPU
+kernels (:mod:`repro.kernels.fedavg_reduce`) must match them.  The weighted
+sum accumulates in float32 regardless of the leaf dtype — with
 low-precision client params and large fleets a leaf-dtype accumulator
 overflows/loses precision long before the mean does — and casts back to the
 leaf dtype exactly once at the end.
+
+Two aggregation granularities share the math:
+
+  * :func:`fedavg` — the paper's single-tier Eq. (2): one global weighted
+    mean over the selected fleet.
+  * :func:`fedavg_segmented` — the hierarchical edge step: Eq. (2) applied
+    independently per BS over the ``[N, M]`` assignment (a segment-reduce
+    with the BS as the segment id); a BS that aggregated nobody keeps its
+    current edge model, mirroring the empty-selection guard.
 """
 from __future__ import annotations
 
@@ -44,6 +54,58 @@ def fedavg(global_params: PyTree, client_params: PyTree,
         return jnp.where(total > 0, avg, g)
 
     return jax.tree.map(agg, global_params, client_params)
+
+
+def segment_weights(assign: jnp.ndarray,
+                    data_sizes: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(client, BS) Eq. (2) weights a_{i,k} |D_i| and per-BS totals.
+
+    assign: [N, M] bool; data_sizes: [N] -> ([N, M] float32, [M] float32).
+    """
+    w = assign.astype(jnp.float32) * data_sizes.astype(jnp.float32)[:, None]
+    return w, jnp.sum(w, axis=0)
+
+
+def fedavg_segmented(edge_params: PyTree, client_params: PyTree,
+                     assign: jnp.ndarray, data_sizes: jnp.ndarray) -> PyTree:
+    """Per-BS edge aggregation: Eq. (2) restricted to each BS's users.
+
+    edge_params leaves: [M, ...]; client_params leaves: [N, ...];
+    assign: [N, M] bool (row-sum <= 1, Eq. 8d); data_sizes: [N].
+    BS k's new edge model is the data-size-weighted mean of the clients
+    assigned to it; a BS with no assigned clients keeps its edge model.
+    Accumulation runs in float32 via one [M, N] x [N, D] contraction.
+    """
+    w, totals = segment_weights(assign, data_sizes)            # [N, M], [M]
+    safe = jnp.maximum(totals, 1e-9)
+
+    def agg(e, c):
+        n = c.shape[0]
+        acc = w.T @ c.astype(jnp.float32).reshape(n, -1)       # [M, D]
+        avg = (acc / safe[:, None]).astype(c.dtype).reshape(e.shape)
+        keep = (totals > 0).reshape((-1,) + (1,) * (e.ndim - 1))
+        return jnp.where(keep, avg, e)
+
+    return jax.tree.map(agg, edge_params, client_params)
+
+
+def edge_global_sync(global_params: PyTree, edge_params: PyTree,
+                     edge_weight: jnp.ndarray) -> PyTree:
+    """Global aggregation over edge models (hierarchical Eq. (2), tier 2).
+
+    edge_params leaves: [M, ...]; edge_weight: [M] cumulative data sizes
+    aggregated into each edge since the last sync.  If nothing was
+    aggregated anywhere the global model is kept.
+    """
+    total = jnp.sum(edge_weight)
+    safe = jnp.maximum(total, 1e-9)
+
+    def agg(g, e):
+        wb = edge_weight.reshape((-1,) + (1,) * (e.ndim - 1))
+        acc = jnp.sum(wb * e.astype(jnp.float32), axis=0)
+        return jnp.where(total > 0, (acc / safe).astype(g.dtype), g)
+
+    return jax.tree.map(agg, global_params, edge_params)
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,19 +1,30 @@
-"""Fused masked-FedAvg reduction (paper Eq. 2) as a Pallas TPU kernel.
+"""Fused masked-FedAvg reductions (paper Eq. 2) as Pallas TPU kernels.
 
 The jnp aggregation materializes a weighted copy of every client-param leaf
 ([N, ...] twice over) before reducing; at fleet scale the FedAvg step is
-pure memory traffic.  This kernel streams client blocks through VMEM and
-accumulates the Eq. (2) weighted masked sum directly into the output block
+pure memory traffic.  These kernels stream client blocks through VMEM and
+accumulate the Eq. (2) weighted masked sum directly into the output block
 in float32 — the [N, ...] weighted intermediate never exists.
+
+Two reductions share the streaming layout:
+
+  * :func:`fedavg_reduce` — single-tier Eq. (2): one [N] weight vector,
+    one aggregated model.
+  * :func:`fedavg_segment_reduce` — the hierarchical edge step: an [N, M]
+    assignment-weight matrix, M edge models in one pass.  Per client block
+    the kernel contracts ``w_blk.T @ x_blk`` ([M, Nb] x [Nb, Db]) into the
+    resident [M, Db] output block, so edge aggregation costs ONE streaming
+    sweep over the fleet regardless of M (the per-BS loop never exists).
 
 Layout per leaf: clients are rows, the flattened feature dim lives in
 lanes.  Grid is (feature_blocks, client_blocks) with clients innermost, so
 each output block stays resident in VMEM while the client stream flows past
 it (the standard sequential-grid accumulation pattern).  The division by
-the Eq. (2) weight total and the zero-selected guard happen once per leaf
-outside the kernel, exactly mirroring the oracle
-(:func:`repro.fl.server.fedavg`, re-exported as
-:func:`repro.kernels.ref.fedavg_reduce`).
+the Eq. (2) weight totals and the empty-selection/empty-BS guards happen
+once per leaf outside the kernel, exactly mirroring the oracles
+(:func:`repro.fl.server.fedavg` / :func:`repro.fl.server.fedavg_segmented`,
+re-exported as :func:`repro.kernels.ref.fedavg_reduce` /
+:func:`repro.kernels.ref.fedavg_segment_reduce`).
 """
 from __future__ import annotations
 
@@ -24,7 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.fl.server import fedavg_weights
+from repro.fl.server import fedavg_weights, segment_weights
 
 PyTree = Any
 
@@ -116,3 +127,99 @@ def fedavg_reduce(global_params: PyTree, client_params: PyTree,
     return _jitted(on_tpu)(global_params, client_params, selected,
                            data_sizes, client_block=client_block,
                            feature_block=feature_block, interpret=interpret)
+
+
+# ------------------------------------------------- segmented (per-BS) path --
+_SUBLANE = 8
+
+
+def _segment_kernel(w_ref, x_ref, o_ref):
+    """Accumulate o[m, :] += sum_n w[n, m] * x[n, :] over the client grid."""
+    jn = pl.program_id(1)
+
+    @pl.when(jn == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # [Nb, Db]
+    w = w_ref[...].astype(jnp.float32)          # [Nb, Mp]
+    o_ref[...] += jax.lax.dot_general(
+        w, x, (((0,), (0,)), ((), ())),          # w.T @ x -> [Mp, Db]
+        preferred_element_type=jnp.float32)
+
+
+def _segment_reduce_leaf(w: jnp.ndarray, flat: jnp.ndarray, client_block: int,
+                         feature_block: int, interpret: bool) -> jnp.ndarray:
+    """[N, D] leaf + [N, M] weights -> [M, D] float32 per-BS weighted sums."""
+    n, d = flat.shape
+    m = w.shape[1]
+    nb = min(client_block, n)
+    d_lanes = -(-d // _LANE) * _LANE
+    db = min(feature_block, d_lanes)
+    mp = -(-m // _SUBLANE) * _SUBLANE
+    n_pad = (-n) % nb
+    d_pad = (-d) % db
+    if n_pad or d_pad:
+        flat = jnp.pad(flat, ((0, n_pad), (0, d_pad)))
+    if n_pad or mp != m:
+        w = jnp.pad(w, ((0, n_pad), (0, mp - m)))  # zero weight -> no effect
+    np_, dp = flat.shape
+    out = pl.pallas_call(
+        _segment_kernel,
+        grid=(dp // db, np_ // nb),
+        in_specs=[pl.BlockSpec((nb, mp), lambda jd, jn: (jn, 0)),
+                  pl.BlockSpec((nb, db), lambda jd, jn: (jn, jd))],
+        out_specs=pl.BlockSpec((mp, db), lambda jd, jn: (0, jd)),
+        out_shape=jax.ShapeDtypeStruct((mp, dp), jnp.float32),
+        interpret=interpret,
+    )(w, flat)
+    return out[:m, :d]
+
+
+def _fedavg_segment_reduce(edge_params: PyTree, client_params: PyTree,
+                           assign: jnp.ndarray, data_sizes: jnp.ndarray,
+                           client_block: int, feature_block: int,
+                           interpret: bool) -> PyTree:
+    w, totals = segment_weights(assign, data_sizes)            # [N, M], [M]
+    safe = jnp.maximum(totals, 1e-9)
+
+    def agg(e, c):
+        n = c.shape[0]
+        s = _segment_reduce_leaf(w, c.reshape(n, -1), client_block,
+                                 feature_block, interpret)      # [M, D]
+        avg = (s / safe[:, None]).astype(c.dtype).reshape(e.shape)
+        keep = (totals > 0).reshape((-1,) + (1,) * (e.ndim - 1))
+        return jnp.where(keep, avg, e)
+
+    return jax.tree.map(agg, edge_params, client_params)
+
+
+@functools.lru_cache(maxsize=None)
+def _segment_jitted(donate: bool):
+    kwargs = {"donate_argnums": (1,)} if donate else {}
+    return jax.jit(_fedavg_segment_reduce,
+                   static_argnames=("client_block", "feature_block",
+                                    "interpret"), **kwargs)
+
+
+def fedavg_segment_reduce(edge_params: PyTree, client_params: PyTree,
+                          assign: jnp.ndarray, data_sizes: jnp.ndarray,
+                          client_block: int = DEFAULT_CLIENT_BLOCK,
+                          feature_block: int = DEFAULT_FEATURE_BLOCK,
+                          interpret: bool | None = None) -> PyTree:
+    """Per-BS masked weighted FedAvg (hierarchical edge Eq. 2) in one pass.
+
+    Same contract as :func:`repro.fl.server.fedavg_segmented`: edge_params
+    leaves [M, ...], client_params leaves [N, ...], assign [N, M] bool,
+    data_sizes [N]; a BS whose segment is empty keeps its edge model.  On
+    TPU the client-params pytree is donated (dead after the reduction).
+    ``interpret=None`` auto-enables interpret mode off-TPU so the entry
+    point runs everywhere.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = not on_tpu
+    return _segment_jitted(on_tpu)(edge_params, client_params, assign,
+                                   data_sizes, client_block=client_block,
+                                   feature_block=feature_block,
+                                   interpret=interpret)

@@ -51,3 +51,11 @@ def fedavg_reduce(global_params, client_params, selected, data_sizes):
                                   data_sizes)
     return ref.fedavg_reduce(global_params, client_params, selected,
                              data_sizes)
+
+
+def fedavg_segment_reduce(edge_params, client_params, assign, data_sizes):
+    if _on_tpu():
+        return favg.fedavg_segment_reduce(edge_params, client_params, assign,
+                                          data_sizes)
+    return ref.fedavg_segment_reduce(edge_params, client_params, assign,
+                                     data_sizes)

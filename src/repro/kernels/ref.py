@@ -42,6 +42,14 @@ def fedavg_reduce(global_params, client_params, selected, data_sizes):
     return fedavg(global_params, client_params, selected, data_sizes)
 
 
+def fedavg_segment_reduce(edge_params, client_params, assign, data_sizes):
+    """Per-BS segmented FedAvg oracle (hierarchical edge Eq. 2) — delegates
+    to the server implementation (float32 [M, N] x [N, D] contraction,
+    empty-BS guard; see repro.fl.server.fedavg_segmented)."""
+    from repro.fl.server import fedavg_segmented
+    return fedavg_segmented(edge_params, client_params, assign, data_sizes)
+
+
 def bandwidth_solve(coeff, tcomp, mask, bw, iters: int | None = None,
                     method: str = "newton", lo=None) -> jnp.ndarray:
     """Batched Eq.(11) root-finding oracle (safeguarded Newton or bisection).

@@ -7,6 +7,12 @@
     PYTHONPATH=src python -m repro.launch.fl_sim \
         --scheduler dagsa --scenario high-mobility --rounds 20
 
+    # hierarchical (multi-cell) FL: per-BS edge aggregation, global sync
+    # every 5 rounds, handover-aware model pulls
+    PYTHONPATH=src python -m repro.launch.fl_sim \
+        --scheduler dagsa_jit --aggregation hierarchical --tau-global 5 \
+        --rounds 20
+
 Jit-able schedulers (everything except the host-numpy ``dagsa``) run the
 whole simulation as ONE fused ``lax.scan`` — the round table prints after
 the compiled run finishes.  ``--mode eager`` restores the seed's per-round
@@ -52,6 +58,13 @@ def main() -> None:
                     choices=("jax", "pallas"),
                     help="pallas: fused masked-FedAvg reduction kernel "
                          "(interpret mode off-TPU)")
+    ap.add_argument("--aggregation", default=None,
+                    choices=("single", "hierarchical"),
+                    help="hierarchical: per-BS edge aggregation with a "
+                         "global sync every --tau-global rounds (default: "
+                         "inherit the scenario, else single-tier)")
+    ap.add_argument("--tau-global", type=int, default=None,
+                    help="global sync period in rounds (hierarchical only)")
     args = ap.parse_args()
 
     cfg = FLConfig(dataset=args.dataset, scheduler=args.scheduler,
@@ -60,14 +73,20 @@ def main() -> None:
                    seed=args.seed, speed_mps=args.speed,
                    hetero_bw=args.hetero_bw, scenario=args.scenario,
                    compute=args.compute, select_cap=args.select_cap,
-                   fedavg_backend=args.fedavg_backend)
+                   fedavg_backend=args.fedavg_backend,
+                   aggregation=args.aggregation, tau_global=args.tau_global)
     sim = FLSimulation(cfg)
     recs = sim.run(args.rounds, mode=args.mode)
+    hier = sim.aggregation == "hierarchical"
     print(f"{'round':>5} {'t_round':>8} {'clock':>8} {'users':>5} "
-          f"{'acc':>6} {'min_fair':>8}")
+          f"{'acc':>6} {'min_fair':>8}" + (" {:>8}".format("handover")
+                                           if hier else ""))
     for r in recs:
-        print(f"{r.round_idx:5d} {r.t_round:8.3f} {r.wall_clock:8.2f} "
-              f"{r.n_selected:5d} {r.test_acc:6.3f} {r.min_part_rate:8.2f}")
+        line = (f"{r.round_idx:5d} {r.t_round:8.3f} {r.wall_clock:8.2f} "
+                f"{r.n_selected:5d} {r.test_acc:6.3f} {r.min_part_rate:8.2f}")
+        if hier:
+            line += f" {r.handover_rate:8.2f}"
+        print(line)
     budget = recs[-1].wall_clock / 2
     print(f"\nacc@{budget:.1f}s = {accuracy_at_budget(recs, budget):.3f}  "
           f"final = {recs[-1].test_acc:.3f}")

@@ -40,6 +40,7 @@ Wireless record schema (one dict per scenario, JSON list on stdout /
 Learning records add (see :func:`run_learning_sweep`):
 
     {..., "dataset": str,
+     "aggregation": str, "tau_global": int,  # single | hierarchical
      "final_acc_mean": float, "final_acc_std": float,
      "wall_clock_mean_s": float,       # mean final simulated clock
      "acc_at_budget": {"budget_s": float, "acc_mean": float},
@@ -47,6 +48,11 @@ Learning records add (see :func:`run_learning_sweep`):
                 "t_round_s": [R], "n_selected": [R]},
      "seed_curves": {"wall_clock_s": [seeds][R],       # per-seed curves
                      "test_acc": [seeds][R]}}
+
+Hierarchical scenarios (``hfl-*`` or ``aggregation="hierarchical"``)
+additionally report ``handover_rate_mean`` and a per-round
+``handover_rate`` curve, and are bucketed separately so every bucket
+stays one compiled call.
 
 Seeds are PAIRED across scenarios in the same shape bucket (same geometry/
 fading keys, same client data + model init in the learning sweep), a
@@ -136,7 +142,10 @@ def _one_cell(p: dict, key: jax.Array, cfg: WirelessConfig, n_rounds: int,
         coeff = channel.bandwidth_time_coeff(snr, cfg)
         u = jax.random.uniform(k_tc, (cfg.n_users,))
         tcomp = p["tcomp_min"] + u * (p["tcomp_max"] - p["tcomp_min"])
-        necessary = counts < cfg.rho1 * r            # Eq. (8g)
+        # Eq. (8g): post-round requirement — participate if sitting out
+        # would leave the count below rho1 * (rounds so far INCLUDING this
+        # one); matches channel.make_problem.
+        necessary = counts < cfg.rho1 * (r + 1.0)
         _, selected, _, _, t_round = dagsa_jit._schedule(
             snr, coeff, tcomp, bs_bw, necessary, min_participants, k_sched,
             backend=backend)
@@ -228,12 +237,17 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                        x_test, y_test, *, cfg: WirelessConfig, n_rounds: int,
                        minp: int, epochs: int, batch_size: int, lr: float,
                        eval_every: int, backend: str, fedavg_backend: str,
-                       compute: str, select_cap) -> dict:
+                       compute: str, select_cap, aggregation: str = "single",
+                       tau_global: int = 1) -> dict:
     """One (scenario, seed) FL cell: init world, scan the full round loop
-    (wireless control plane + local SGD + Eq. (2) FedAvg + periodic eval)."""
-    from repro.fl.rounds import train_and_aggregate
+    (wireless control plane + local SGD + Eq. (2) aggregation — single-tier
+    or hierarchical per-BS edges with a tau_global sync — + periodic
+    eval)."""
+    from repro.fl.rounds import hierarchical_round, camped_bs, \
+        train_and_aggregate
     from repro.models import cnn
 
+    hier = aggregation == "hierarchical"
     k_pos, k_bs, k_bw, k_aux, k_shadow, k_run = jax.random.split(key, 6)
     pos0 = jax.random.uniform(k_pos, (cfg.n_users, 2), minval=0.0,
                               maxval=cfg.area_m)
@@ -245,7 +259,10 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
     data_sizes = jnp.full((cfg.n_users,), x_c.shape[1])
 
     def round_body(carry, r):
-        params, pos, aux, counts, key = carry
+        if hier:
+            params, edge, edge_w, prev_bs, pos, aux, counts, key = carry
+        else:
+            params, pos, aux, counts, key = carry
         key, k_mob, k_snr, k_tc, k_sched, k_fleet = jax.random.split(key, 6)
         pos, aux = mobility.step_switch(
             p["model_id"], k_mob, pos, aux, cfg.area_m, cfg.round_duration_s,
@@ -257,23 +274,39 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
         coeff = channel.bandwidth_time_coeff(snr, cfg)
         u = jax.random.uniform(k_tc, (cfg.n_users,))
         tcomp = p["tcomp_min"] + u * (p["tcomp_max"] - p["tcomp_min"])
-        necessary = counts < cfg.rho1 * r                    # Eq. (8g)
-        _, selected, _, _, t_round = dagsa_jit._schedule(
+        # Eq. (8g), post-round requirement (matches channel.make_problem)
+        necessary = counts < cfg.rho1 * (r + 1.0)
+        assign, selected, _, _, t_round = dagsa_jit._schedule(
             snr, coeff, tcomp, bs_bw, necessary, minp, k_sched,
             backend=backend)
         keys = jax.random.split(k_fleet, cfg.n_users)
-        params = train_and_aggregate(
-            cnn.loss_fn, params, x_c, y_c, keys, selected, data_sizes,
-            epochs=epochs, batch_size=batch_size, lr=lr, compute=compute,
-            select_cap=select_cap, fedavg_backend=fedavg_backend)
+        if hier:
+            from repro.fl import server as fl_server
+            (params, edge, edge_w, prev_bs, handover) = \
+                hierarchical_round(
+                    cnn.loss_fn, params, edge, edge_w, prev_bs, x_c, y_c,
+                    keys, assign, selected, camped_bs(dist), data_sizes, r,
+                    tau_global=tau_global, epochs=epochs,
+                    batch_size=batch_size, lr=lr, compute=compute,
+                    select_cap=select_cap, fedavg_backend=fedavg_backend)
+            # virtual global built inside the eval cond: non-eval rounds
+            # skip the O(M x model) edge mixture
+            eval_args = (params, edge, edge_w)
+            eval_model = lambda a: fl_server.edge_global_sync(*a)
+        else:
+            params = train_and_aggregate(
+                cnn.loss_fn, params, x_c, y_c, keys, selected, data_sizes,
+                epochs=epochs, batch_size=batch_size, lr=lr, compute=compute,
+                select_cap=select_cap, fedavg_backend=fedavg_backend)
+            eval_args, eval_model = params, lambda q: q
         counts = counts + selected.astype(counts.dtype)
         if eval_every:
             # the predicate only depends on the (unbatched) scan counter, so
             # the cond survives the seeds x scenarios vmaps as a real branch
             acc = jax.lax.cond(
                 (r + 1) % eval_every == 0,
-                lambda q: cnn.accuracy(q, x_test, y_test),
-                lambda q: jnp.float32(jnp.nan), params)
+                lambda a: cnn.accuracy(eval_model(a), x_test, y_test),
+                lambda a: jnp.float32(jnp.nan), eval_args)
         else:
             acc = jnp.float32(jnp.nan)
         out = {
@@ -282,23 +315,37 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
             "test_acc": acc,
             "min_part_rate": jnp.min(counts) / (r + 1.0),
         }
-        return (params, pos, aux, counts, key), out
+        if hier:
+            out["handover_rate"] = handover
+            new_carry = (params, edge, edge_w, prev_bs, pos, aux, counts,
+                         key)
+        else:
+            new_carry = (params, pos, aux, counts, key)
+        return new_carry, out
 
-    _, outs = jax.lax.scan(round_body,
-                           (params0, pos0, aux0, counts0, k_run),
-                           jnp.arange(n_rounds))
+    if hier:
+        edge0 = jax.tree.map(
+            lambda q: jnp.repeat(q[None], cfg.n_bs, axis=0), params0)
+        carry0 = (params0, edge0, jnp.zeros((cfg.n_bs,), jnp.float32),
+                  jnp.full((cfg.n_users,), -1, jnp.int32),
+                  pos0, aux0, counts0, k_run)
+    else:
+        carry0 = (params0, pos0, aux0, counts0, k_run)
+    _, outs = jax.lax.scan(round_body, carry0, jnp.arange(n_rounds))
     return outs
 
 
 @partial(jax.jit, static_argnames=("cfg", "n_rounds", "minp", "epochs",
                                    "batch_size", "lr", "eval_every",
                                    "backend", "fedavg_backend", "compute",
-                                   "select_cap", "n_models"))
+                                   "select_cap", "aggregation", "tau_global",
+                                   "n_models"))
 def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                      x_test, y_test, *, cfg: WirelessConfig, n_rounds: int,
                      minp: int, epochs: int, batch_size: int, lr: float,
                      eval_every: int, backend: str, fedavg_backend: str,
-                     compute: str, select_cap, n_models: int) -> dict:
+                     compute: str, select_cap, aggregation: str,
+                     tau_global: int, n_models: int) -> dict:
     """All scenarios of one shape bucket x all seeds, one compiled call.
 
     ``x_c``/``y_c``/``w0`` carry a leading seed axis (per-seed Non-IID
@@ -310,7 +357,8 @@ def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                   epochs=epochs, batch_size=batch_size, lr=lr,
                   eval_every=eval_every, backend=backend,
                   fedavg_backend=fedavg_backend, compute=compute,
-                  select_cap=select_cap)
+                  select_cap=select_cap, aggregation=aggregation,
+                  tau_global=tau_global)
 
     def per_scenario(p):
         return jax.vmap(lambda k, xc, yc, w: run(p, k, xc, yc, w,
@@ -325,6 +373,27 @@ def _finite_or_none(xs) -> list:
     return [float(v) if np.isfinite(v) else None for v in np.asarray(xs)]
 
 
+def _scalar_or_none(x):
+    """Scalar counterpart of :func:`_finite_or_none` (e.g. an all-nan
+    acc_at_budget when no eval landed inside the budget)."""
+    return float(x) if np.isfinite(x) else None
+
+
+def _resolve_aggregation(spec: ScenarioSpec, aggregation: str | None,
+                         tau_global: int | None) -> tuple[str, int]:
+    """Effective (aggregation, tau) for one scenario: explicit args win."""
+    from repro.fl.rounds import DEFAULT_TAU_GLOBAL
+
+    agg = aggregation or spec.aggregation
+    if agg != "hierarchical":
+        return agg, 1
+    if tau_global is not None:
+        return agg, tau_global
+    if spec.aggregation == "hierarchical":
+        return agg, spec.tau_global
+    return agg, DEFAULT_TAU_GLOBAL
+
+
 def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                        n_seeds: int = 2, n_rounds: int = 10,
                        cfg: WirelessConfig | None = None,
@@ -334,15 +403,21 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                        eval_every: int = 1, shards_per_user: int = 2,
                        backend: str = "jax", fedavg_backend: str = "jax",
                        compute: str = "full", select_cap: int | None = None,
+                       aggregation: str | None = None,
+                       tau_global: int | None = None,
                        seed: int = 0) -> list[dict]:
     """Accuracy-vs-simulated-wall-clock curves, one record per scenario.
 
-    Scenarios are bucketed by resolved array shape (n_users, n_bs); each
-    bucket is ONE jit-compiled call covering all its scenarios x seeds —
-    the fused round engine of :mod:`repro.fl.rounds` vmapped over the
-    scenario parameter arrays.  Dataset and per-seed partitions/inits are
-    shared across scenarios (paired seeds).  See the module docstring for
-    the record schema.
+    Scenarios are bucketed by resolved array shape (n_users, n_bs) and
+    aggregation architecture; each bucket is ONE jit-compiled call covering
+    all its scenarios x seeds — the fused round engine of
+    :mod:`repro.fl.rounds` vmapped over the scenario parameter arrays.
+    ``aggregation``/``tau_global`` override every scenario's own choice
+    (``hfl-*`` scenarios default to hierarchical with their registered
+    tau).  Dataset and per-seed partitions/inits are shared across
+    scenarios (paired seeds).  See the module docstring for the record
+    schema; hierarchical records additionally carry ``tau_global``,
+    ``handover_rate_mean`` and a ``handover_rate`` curve.
     """
     import warnings
 
@@ -356,15 +431,17 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     h, wd, c = data.x_train.shape[1:]
     cnn_cfg = cnn.CNNConfig(height=h, width=wd, channels=c)
 
-    buckets: dict[tuple[int, int], list[tuple[int, ScenarioSpec]]] = {}
+    buckets: dict[tuple, list[tuple[int, ScenarioSpec]]] = {}
     for pos, spec in enumerate(specs):
         w = spec.wireless(base)
-        buckets.setdefault((w.n_users, w.n_bs), []).append((pos, spec))
+        agg, tau = _resolve_aggregation(spec, aggregation, tau_global)
+        buckets.setdefault((w.n_users, w.n_bs, agg, tau), []).append(
+            (pos, spec))
 
     k_cells, k_part, k_init = jax.random.split(jax.random.PRNGKey(seed), 3)
     seed_keys = jax.random.split(k_cells, n_seeds)   # paired across scenarios
     records: dict[int, dict] = {}
-    for (n_users, n_bs), group in buckets.items():
+    for (n_users, n_bs, agg, tau), group in buckets.items():
         bcfg = dataclasses.replace(base, n_bs=n_bs)
         minp = int(np.ceil(bcfg.rho2 * n_users))
         pkeys = jax.random.split(k_part, n_seeds)
@@ -380,10 +457,13 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
             cfg=bcfg, n_rounds=n_rounds, minp=minp, epochs=local_epochs,
             batch_size=batch_size, lr=float(lr), eval_every=eval_every,
             backend=backend, fedavg_backend=fedavg_backend, compute=compute,
-            select_cap=select_cap, n_models=len(mobility.MOBILITY_MODELS))
+            select_cap=select_cap, aggregation=agg, tau_global=tau,
+            n_models=len(mobility.MOBILITY_MODELS))
         t_round = np.asarray(outs["t_round"])            # [S, seeds, R]
         n_sel = np.asarray(outs["n_selected"])
         acc = np.asarray(outs["test_acc"])
+        hand = (np.asarray(outs["handover_rate"])
+                if "handover_rate" in outs else None)
         wall = np.cumsum(t_round, axis=-1)
         for i, (pos, spec) in enumerate(group):
             finals = []                      # last evaluated acc per seed
@@ -407,13 +487,16 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                 "mobility": spec.mobility,
                 "speed_mps": spec.speed_mps,
                 "dataset": dataset,
+                "aggregation": agg,
+                "tau_global": tau,
                 "n_seeds": n_seeds,
                 "n_rounds": n_rounds,
-                "final_acc_mean": final_mean,
-                "final_acc_std": final_std,
+                "final_acc_mean": _scalar_or_none(final_mean),
+                "final_acc_std": _scalar_or_none(final_std),
                 "wall_clock_mean_s": float(wall[i, :, -1].mean()),
                 "acc_at_budget": {"budget_s": budget,
-                                  "acc_mean": at_budget_mean},
+                                  "acc_mean": _scalar_or_none(
+                                      at_budget_mean)},
                 "curves": {
                     "wall_clock_s": wall[i].mean(axis=0).tolist(),
                     "test_acc": _finite_or_none(acc_curve),
@@ -426,6 +509,10 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                                  for s in range(n_seeds)],
                 },
             }
+            if hand is not None:
+                records[pos]["handover_rate_mean"] = float(hand[i].mean())
+                records[pos]["curves"]["handover_rate"] = \
+                    hand[i].mean(axis=0).tolist()
     return [records[i] for i in range(len(specs))]
 
 
@@ -456,6 +543,13 @@ def main() -> None:
                     choices=("jax", "pallas"))
     ap.add_argument("--compute", default="full", choices=("full", "selected"))
     ap.add_argument("--select-cap", type=int, default=None)
+    ap.add_argument("--aggregation", default=None,
+                    choices=("single", "hierarchical"),
+                    help="override every scenario's aggregation "
+                         "architecture (--learning only)")
+    ap.add_argument("--tau-global", type=int, default=None,
+                    help="global sync period for hierarchical aggregation "
+                         "(--learning only)")
     args = ap.parse_args()
 
     names = list(SCENARIOS) if args.scenarios == "all" \
@@ -467,9 +561,12 @@ def main() -> None:
             local_epochs=args.local_epochs, batch_size=args.batch_size,
             lr=args.lr, eval_every=args.eval_every, backend=args.backend,
             fedavg_backend=args.fedavg_backend, compute=args.compute,
-            select_cap=args.select_cap, seed=args.seed)
-        summary = " ".join(f"{r['scenario']}={r['final_acc_mean']:.3f}"
-                           for r in records)
+            select_cap=args.select_cap, aggregation=args.aggregation,
+            tau_global=args.tau_global, seed=args.seed)
+        summary = " ".join(
+            f"{r['scenario']}="
+            f"{r['final_acc_mean']:.3f}" if r["final_acc_mean"] is not None
+            else f"{r['scenario']}=n/a" for r in records)
     else:
         records = run_sweep(names, n_seeds=args.seeds, n_rounds=args.rounds,
                             backend=args.backend, seed=args.seed)

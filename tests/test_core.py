@@ -17,7 +17,11 @@ def make_problem(seed=0, cfg=CFG, round_idx=0, counts=None):
     k0, k1 = jax.random.split(key)
     state = mobility.init_positions_grid_bs(k0, cfg)
     if counts is None:
-        counts = jnp.zeros((cfg.n_users,))
+        # one prior participation each: nobody is Eq. (8g)-necessary until
+        # round ceil(1/rho1) - 1, so the schedulers face a real choice
+        # (zero counts at round 0 correctly mark EVERYONE necessary under
+        # the post-round reading — a degenerate select-all world)
+        counts = jnp.ones((cfg.n_users,))
     return channel.make_problem(k1, state, cfg, counts, round_idx)
 
 
@@ -175,12 +179,106 @@ def test_dagsa_beats_baselines_on_latency():
     assert np.mean(lat["dagsa"]) < np.mean(lat["ub"])
 
 
+def test_necessary_uses_post_round_requirement():
+    """Eq. (8g) regression: the necessary set tests the POST-round floor
+    rho1 * (round_idx + 1).  The pre-round reading (rho1 * round_idx) marks
+    a never-selected user necessary one round late and can never mark
+    anyone at round 0."""
+    n = CFG.n_users            # rho1 = 0.1
+    zeros = jnp.zeros((n,))
+    ones = jnp.ones((n,))
+    # round 0, no history: skipping would leave count 0 < 0.1 * 1 -> every
+    # user is necessary already (the pre-round reading says nobody is).
+    assert bool(make_problem(counts=zeros, round_idx=0).necessary.all())
+    # a user with one participation first becomes necessary at round 10
+    # (1 < 0.1 * 11); the pre-round reading defers it to round 11.
+    assert not bool(make_problem(counts=ones, round_idx=9).necessary.any())
+    assert bool(make_problem(counts=ones, round_idx=10).necessary.all())
+    # traced round counters take the same branch (fused-scan path)
+    prob = make_problem(counts=ones, round_idx=jnp.int32(10))
+    assert bool(prob.necessary.all())
+
+
 def test_fedcs_respects_threshold():
     for thr in (FEDCS_LOW_S, FEDCS_HIGH_S):
         prob = make_problem(seed=3)
         from repro.core import baselines
         res = baselines.fedcs_schedule(prob, thr)
         assert float(res.t_round) <= thr + 1e-3
+
+
+def _fedcs_dense_reference(problem, threshold_s):
+    """The pre-fix O(N^2)-memory FedCS formulation (dense [N, N] vals +
+    prefix cummax diagonal), kept verbatim as the bit-identity reference
+    for the O(N)-memory per-position rewrite."""
+    from repro.core.baselines import _best_bs_assign, _uniform_result
+    n = problem.snr.shape[0]
+    cand = _best_bs_assign(problem.snr, jnp.ones((n,), dtype=bool))
+
+    def per_bs(snr_k, coeff_k, cand_k, bw_k):
+        sort_key = jnp.where(cand_k, snr_k, -jnp.inf)
+        order = jnp.argsort(-sort_key)
+        c_s = coeff_k[order]
+        tc_s = problem.tcomp[order]
+        is_cand = cand_k[order]
+        j = jnp.arange(1, n + 1, dtype=coeff_k.dtype)
+        vals = tc_s[:, None] + c_s[:, None] * j[None, :] / bw_k
+        vals = jnp.where(is_cand[:, None], vals, -jnp.inf)
+        t_for_j = jnp.diagonal(jax.lax.cummax(vals, axis=0))
+        n_cand = jnp.sum(is_cand)
+        feasible = (t_for_j <= threshold_s) & (jnp.arange(1, n + 1) <= n_cand)
+        n_take = jnp.max(jnp.where(feasible, jnp.arange(1, n + 1), 0))
+        take = jnp.zeros((n,), dtype=bool).at[order].set(jnp.arange(n)
+                                                         < n_take)
+        return take & cand_k
+
+    assign = jax.vmap(per_bs, in_axes=(1, 1, 1, 0), out_axes=1)(
+        problem.snr, problem.coeff, cand, problem.bs_bw)
+    return _uniform_result(problem, assign)
+
+
+def test_fedcs_linear_memory_rewrite_bit_identical():
+    """The O(N)-memory FedCS must reproduce the dense formulation's
+    schedules (and times) exactly — max is order-independent, so the
+    rewrite is not allowed to drift by even one admitted user."""
+    from repro.core import baselines
+    for seed in range(6):
+        cfg = WirelessConfig(n_users=17, n_bs=3) if seed % 2 else CFG
+        prob = make_problem(seed=seed, cfg=cfg)
+        if seed == 4:   # heterogeneous per-BS bandwidth exercises bw_k
+            prob.bs_bw = jnp.linspace(0.5, 1.5, cfg.n_bs)
+        for thr in (FEDCS_LOW_S, FEDCS_HIGH_S):
+            got = baselines.fedcs_schedule(prob, thr)
+            want = _fedcs_dense_reference(prob, thr)
+            np.testing.assert_array_equal(np.asarray(got.assign),
+                                          np.asarray(want.assign))
+            np.testing.assert_array_equal(np.asarray(got.bw),
+                                          np.asarray(want.bw))
+            assert float(got.t_round) == float(want.t_round)
+
+
+def test_fedcs_no_quadratic_intermediate():
+    """FedCS memory regression: the traced program must not materialize any
+    [N, N]-shaped intermediate (the dense t(j) matrix was O(N^2 * M) under
+    the vmap over BSs and OOM'd fleet-scale sweeps)."""
+    from repro.core import baselines
+    from repro.core.types import SchedulingProblem
+    n, m = 256, 4
+    rng = np.random.default_rng(0)
+    snr = jnp.asarray(rng.lognormal(2.0, 2.0, (n, m)), jnp.float32)
+
+    def traced(snr, coeff, tcomp, bs_bw, necessary):
+        prob = SchedulingProblem(snr=snr, coeff=coeff, tcomp=tcomp,
+                                 bs_bw=bs_bw, necessary=necessary,
+                                 min_participants=n // 2)
+        return baselines.fedcs_schedule(prob, 0.6).assign
+
+    jaxpr = jax.make_jaxpr(traced)(
+        snr, 0.5 / jnp.log2(1.0 + snr),
+        jnp.asarray(rng.uniform(0.1, 0.11, n), jnp.float32),
+        jnp.ones((m,), jnp.float32), jnp.zeros(n, dtype=bool))
+    assert f"{n},{n}" not in str(jaxpr), \
+        "FedCS traced an [N, N] intermediate (dense t(j) matrix)"
 
 
 def test_participation_state_update():

@@ -11,12 +11,14 @@ from repro.core.latency import round_latency
 CFG = WirelessConfig()
 
 
-def make_problem(seed):
+def make_problem(seed, cfg=CFG):
     key = jax.random.PRNGKey(seed)
     k0, k1 = jax.random.split(key)
-    st = mobility.init_positions_grid_bs(k0, CFG)
-    counts = jnp.zeros((CFG.n_users,))
-    return channel.make_problem(k1, st, CFG, counts, 0)
+    st = mobility.init_positions_grid_bs(k0, cfg)
+    # one prior participation each -> nobody Eq. (8g)-necessary yet (zero
+    # counts at round 0 would make everyone necessary: select-all, no greedy)
+    counts = jnp.ones((cfg.n_users,))
+    return channel.make_problem(k1, st, cfg, counts, 0)
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
@@ -56,6 +58,58 @@ def test_jit_dagsa_latency_parity_with_host():
         assert t_jit < t_sa
         ratios.append(t_jit / t_host)
     assert np.mean(ratios) < 1.25
+
+
+def test_jit_dagsa_latency_parity_single_bs():
+    """Host-vs-jit parity extends to m == 1: both greedy orders are fully
+    determined (no feasible-BS choice, no step-4 draw), so the schedules
+    must agree exactly."""
+    cfg = WirelessConfig(n_bs=1)
+    for seed in range(3):
+        prob = make_problem(seed, cfg=cfg)
+        host = dagsa.dagsa_schedule(prob, seed=seed)
+        jit = dagsa_schedule_jit(prob, jax.random.PRNGKey(seed))
+        np.testing.assert_array_equal(np.asarray(host.assign),
+                                      np.asarray(jit.assign))
+        np.testing.assert_allclose(float(host.t_round), float(jit.t_round),
+                                   rtol=2e-3)
+
+
+def test_host_dagsa_single_bs_consumes_no_step4_entropy(monkeypatch):
+    """m == 1 regression: the step-4 BS draw is determined, so the host
+    greedy must not consume Generator entropy for it (the contract that
+    keeps host/jit draw counts in lockstep).  Fails on the pre-fix code,
+    which called ``rng.integers(m)`` anyway."""
+    from repro.core import dagsa as dagsa_mod
+    from repro.core.types import SchedulingProblem
+
+    rng = np.random.default_rng(0)
+    n = 12
+    snr = jnp.asarray(rng.lognormal(2.0, 2.0, (n, 1)), jnp.float32)
+    prob = SchedulingProblem(
+        snr=snr, tcomp=jnp.asarray(rng.uniform(0.1, 0.11, n), jnp.float32),
+        bs_bw=jnp.ones((1,), jnp.float32), coeff=0.5 / jnp.log2(1.0 + snr),
+        necessary=jnp.zeros(n, dtype=bool), min_participants=n // 2)
+
+    real_rng = np.random.default_rng
+
+    def strict_rng(seed=None):
+        inner = real_rng(seed)
+
+        class NoIntegers:
+            def shuffle(self, *a, **k):       # step-1 order is legitimate
+                return inner.shuffle(*a, **k)
+
+            def integers(self, *a, **k):
+                raise AssertionError(
+                    "step-4 rng.integers consumed entropy on an m==1 "
+                    "problem (the draw is determined)")
+
+        return NoIntegers()
+
+    monkeypatch.setattr(dagsa_mod.np.random, "default_rng", strict_rng)
+    res = dagsa_mod.dagsa_schedule(prob, seed=3)   # forces step-4 adds
+    assert int(res.selected.sum()) >= n // 2
 
 
 def test_jit_dagsa_vmappable():

@@ -19,7 +19,9 @@ def make_problem(seed):
     key = jax.random.PRNGKey(seed)
     k0, k1 = jax.random.split(key)
     st = mobility.init_positions_grid_bs(k0, CFG)
-    return channel.make_problem(k1, st, CFG, jnp.zeros((CFG.n_users,)), 0)
+    # one prior participation each -> nobody Eq. (8g)-necessary yet (zero
+    # counts at round 0 would make everyone necessary: a trivial greedy)
+    return channel.make_problem(k1, st, CFG, jnp.ones((CFG.n_users,)), 0)
 
 
 def _kkt_resid(t, coeff, tcomp, mask, bw):

@@ -1,0 +1,280 @@
+"""Hierarchical multi-cell FL: segmented FedAvg (oracle + Pallas kernel),
+the fused hierarchical round engine, handover accounting, scenarios."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scenario import SCENARIOS, ScenarioSpec, get_scenario
+from repro.core.types import WirelessConfig
+from repro.fl import FLConfig, FLSimulation
+from repro.fl import server as fl_server
+from repro.kernels import ref
+from repro.kernels.fedavg_reduce import fedavg_segment_reduce
+
+KEY = jax.random.PRNGKey(11)
+
+SMALL = dict(scheduler="dagsa_jit",
+             wireless=WirelessConfig(n_users=10, n_bs=3),
+             n_train=200, n_test=100, batch_size=10, local_epochs=1,
+             eval_every=1, seed=0)
+
+
+def _max_leaf_diff(a, b) -> float:
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _segment_case(n, m, shapes, dtype=jnp.float32, p_sel=0.7, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2 * len(shapes) + 3)
+    e = {f"leaf{i}": jax.random.normal(ks[2 * i], (m,) + s).astype(dtype)
+         for i, s in enumerate(shapes)}
+    c = {f"leaf{i}": jax.random.normal(ks[2 * i + 1], (n,) + s).astype(dtype)
+         for i, s in enumerate(shapes)}
+    best = jax.random.randint(ks[-3], (n,), 0, m)
+    sel = jax.random.bernoulli(ks[-2], p_sel, (n,))
+    assign = jax.nn.one_hot(best, m, dtype=bool) & sel[:, None]
+    sizes = jax.random.uniform(ks[-1], (n,), minval=1.0, maxval=9.0)
+    return e, c, assign, sizes
+
+
+# ------------------------------------------------------ segmented oracle ---
+def test_fedavg_segmented_per_bs_weighted_mean():
+    """Hand-checkable case: each BS's edge is the weighted mean of ITS
+    clients; a BS with no clients keeps its edge model."""
+    e = {"w": jnp.stack([jnp.zeros(2), jnp.full((2,), 9.0),
+                         jnp.full((2,), 7.0)])}
+    c = {"w": jnp.stack([jnp.ones(2) * 1, jnp.ones(2) * 2, jnp.ones(2) * 4])}
+    assign = jnp.asarray([[True, False, False],
+                          [True, False, False],
+                          [False, True, False]])
+    sizes = jnp.asarray([1.0, 3.0, 2.0])
+    out = fl_server.fedavg_segmented(e, c, assign, sizes)
+    np.testing.assert_allclose(np.asarray(out["w"][0]),
+                               (1 * 1 + 2 * 3) / 4.0)     # BS0: users 0, 1
+    np.testing.assert_allclose(np.asarray(out["w"][1]), 4.0)  # BS1: user 2
+    np.testing.assert_allclose(np.asarray(out["w"][2]), 7.0)  # BS2: empty
+
+
+def test_fedavg_segmented_matches_single_tier_on_one_bs():
+    """With M=1 the segmented reduce degenerates to plain Eq. (2)."""
+    n = 9
+    ks = jax.random.split(KEY, 4)
+    g = {"a": jax.random.normal(ks[0], (5,))}
+    c = {"a": jax.random.normal(ks[1], (n, 5))}
+    sel = jax.random.bernoulli(ks[2], 0.5, (n,))
+    sizes = jax.random.uniform(ks[3], (n,), minval=1.0, maxval=4.0)
+    single = fl_server.fedavg(g, c, sel, sizes)
+    seg = fl_server.fedavg_segmented(
+        {"a": g["a"][None]}, c, sel[:, None], sizes)
+    np.testing.assert_allclose(np.asarray(seg["a"][0]),
+                               np.asarray(single["a"]), rtol=1e-6, atol=1e-6)
+
+
+def test_edge_global_sync_weighted_mean_and_empty_guard():
+    g = {"w": jnp.full((3,), 5.0)}
+    e = {"w": jnp.stack([jnp.ones(3) * 2, jnp.ones(3) * 6])}
+    out = fl_server.edge_global_sync(g, e, jnp.asarray([1.0, 3.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), (2 + 6 * 3) / 4.0)
+    kept = fl_server.edge_global_sync(g, e, jnp.zeros(2))
+    np.testing.assert_allclose(np.asarray(kept["w"]), 5.0)
+
+
+# ------------------------------------------------------- segmented kernel --
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,m,shapes", [
+    (7, 3, [(13,), (3, 5)]),           # non-divisible client/feature blocks
+    (16, 8, [(130,)]),                 # feature dim straddling a lane block
+    (1, 2, [(5,)]),                    # single client
+    (20, 5, [(600,)]),                 # multiple feature blocks per leaf
+    (9, 12, [(3, 3, 1, 4), (4,)]),     # conv-style ranks, M > sublane
+])
+def test_segment_reduce_matches_oracle(n, m, shapes, dtype):
+    e, c, assign, sizes = _segment_case(n, m, shapes, dtype)
+    want = ref.fedavg_segment_reduce(e, c, assign, sizes)
+    got = fedavg_segment_reduce(e, c, assign, sizes, client_block=4,
+                                feature_block=256, interpret=True)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    for k in e:
+        assert got[k].dtype == dtype
+        np.testing.assert_allclose(np.asarray(got[k], np.float32),
+                                   np.asarray(want[k], np.float32),
+                                   rtol=tol, atol=tol)
+
+
+def test_segment_reduce_bitwise_single_client_block():
+    """With one client block the kernel's contraction is the oracle's —
+    parity must be bit-for-bit, not just close."""
+    e, c, assign, sizes = _segment_case(8, 3, [(37,), (4, 5)])
+    want = ref.fedavg_segment_reduce(e, c, assign, sizes)
+    got = fedavg_segment_reduce(e, c, assign, sizes, client_block=8,
+                                interpret=True)
+    for k in e:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]))
+
+
+def test_segment_reduce_empty_bs_keeps_edge():
+    e, c, assign, sizes = _segment_case(6, 4, [(11,)])
+    assign = assign.at[:, 2].set(False)          # empty BS 2
+    got = fedavg_segment_reduce(e, c, assign, sizes, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got["leaf0"][2]),
+                                  np.asarray(e["leaf0"][2]))
+    want = ref.fedavg_segment_reduce(e, c, assign, sizes)
+    np.testing.assert_allclose(np.asarray(got["leaf0"]),
+                               np.asarray(want["leaf0"]), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_segment_reduce_accumulates_in_float32():
+    """f16 leaves, per-BS sums beyond the f16 max: the f32 accumulator must
+    keep the edge means exact."""
+    n, m = 100, 2
+    e = {"w": jnp.zeros((m, 4), jnp.float16)}
+    c = {"w": jnp.full((n, 4), 1000.0, jnp.float16)}
+    assign = jnp.stack([jnp.arange(n) % 2 == 0, jnp.arange(n) % 2 == 1],
+                       axis=1)
+    got = fedavg_segment_reduce(e, c, assign, jnp.ones(n), interpret=True)
+    vals = np.asarray(got["w"], np.float32)
+    assert np.all(np.isfinite(vals))
+    np.testing.assert_allclose(vals, 1000.0)
+
+
+# ------------------------------------------------- hierarchical engine -----
+def test_hierarchical_fused_matches_step():
+    """The hierarchical round step must behave identically under the fused
+    lax.scan and the per-round jitted dispatch (edge states ride the
+    carry)."""
+    mk = lambda: FLSimulation(FLConfig(**SMALL, aggregation="hierarchical",
+                                       tau_global=2))
+    sims = {m: mk() for m in ("fused", "step")}
+    recs = {m: sim.run(4, mode=m) for m, sim in sims.items()}
+    assert [r.n_selected for r in recs["step"]] == \
+           [r.n_selected for r in recs["fused"]]
+    np.testing.assert_allclose([r.t_round for r in recs["step"]],
+                               [r.t_round for r in recs["fused"]], rtol=1e-6)
+    np.testing.assert_allclose(
+        [r.handover_rate for r in recs["step"]],
+        [r.handover_rate for r in recs["fused"]], rtol=1e-6)
+    np.testing.assert_allclose([r.test_acc for r in recs["step"]],
+                               [r.test_acc for r in recs["fused"]],
+                               atol=1e-6)
+    assert _max_leaf_diff(sims["step"].params, sims["fused"].params) <= 1e-6
+    assert _max_leaf_diff(sims["step"].edge_params,
+                          sims["fused"].edge_params) <= 1e-6
+
+
+def test_hierarchical_tau1_tracks_single_tier():
+    """tau_global=1 syncs every round; the two-stage weighted mean equals
+    the single-tier Eq. (2) up to float reordering, so the trajectories
+    must stay close over a few rounds."""
+    s_one = FLSimulation(FLConfig(**SMALL))
+    s_h1 = FLSimulation(FLConfig(**SMALL, aggregation="hierarchical",
+                                 tau_global=1))
+    r_one = s_one.run(3, mode="fused")
+    r_h1 = s_h1.run(3, mode="fused")
+    # control plane identical (same key threading)
+    assert [r.n_selected for r in r_h1] == [r.n_selected for r in r_one]
+    np.testing.assert_allclose([r.t_round for r in r_h1],
+                               [r.t_round for r in r_one], rtol=1e-6)
+    assert _max_leaf_diff(s_h1.params, s_one.params) <= 5e-3
+
+
+def test_hierarchical_sync_collapses_edges():
+    """Right after a global sync every edge equals the global model; the
+    accumulated edge weights reset."""
+    sim = FLSimulation(FLConfig(**SMALL, aggregation="hierarchical",
+                                tau_global=3))
+    sim.run(3, mode="fused")                  # rounds 0..2, sync at round 2
+    assert float(jnp.sum(sim.edge_weight)) == 0.0
+    for g, e in zip(jax.tree.leaves(sim.params),
+                    jax.tree.leaves(sim.edge_params)):
+        for k in range(e.shape[0]):
+            np.testing.assert_array_equal(np.asarray(e[k]), np.asarray(g))
+    # mid-interval the edges diverge again
+    sim.run(2, mode="fused")
+    assert float(jnp.sum(sim.edge_weight)) > 0.0
+    diverged = any(
+        float(jnp.max(jnp.abs(e[0] - e[1]))) > 0.0
+        for e in jax.tree.leaves(sim.edge_params))
+    assert diverged
+
+
+def test_hierarchical_handover_accounting():
+    """Handover is geometry-driven: zero on a static world, nonzero under
+    high mobility, and always absent (nan) from single-tier records."""
+    from repro.core.scenario import register_scenario
+    name = "_hfl_static_test"
+    if name not in SCENARIOS:
+        register_scenario(ScenarioSpec(
+            name=name, mobility="static", speed_mps=0.0,
+            aggregation="hierarchical", tau_global=2))
+    sim_static = FLSimulation(FLConfig(**SMALL, scenario=name))
+    recs = sim_static.run(3, mode="fused")
+    assert all(r.handover_rate == 0.0 for r in recs)
+
+    sim_fast = FLSimulation(FLConfig(**SMALL, scenario="hfl-high-mobility"))
+    recs_fast = sim_fast.run(5, mode="fused")
+    assert max(r.handover_rate for r in recs_fast) > 0.0
+    assert all(0.0 <= r.handover_rate <= 1.0 for r in recs_fast)
+
+    sim_single = FLSimulation(FLConfig(**SMALL))
+    recs_single = sim_single.run(1, mode="fused")
+    assert np.isnan(recs_single[0].handover_rate)
+
+
+def test_hierarchical_rejects_host_scheduler_and_eager():
+    with pytest.raises(ValueError, match="traced round step"):
+        FLSimulation(FLConfig(**{**SMALL, "scheduler": "dagsa"},
+                              aggregation="hierarchical"))
+    sim = FLSimulation(FLConfig(**SMALL, aggregation="hierarchical"))
+    with pytest.raises(ValueError, match="traced round step"):
+        sim.run(1, mode="eager")
+
+
+def test_tau_global_guards():
+    with pytest.raises(ValueError, match="tau_global"):
+        FLConfig(**SMALL, tau_global=0)
+    with pytest.raises(ValueError, match="tau_global"):
+        FLSimulation(FLConfig(**SMALL, tau_global=4))   # single-tier + tau
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="_bad", tau_global=3)          # single + tau != 1
+
+
+def test_hfl_scenarios_registered():
+    for name in ("hfl-default", "hfl-high-mobility", "hfl-sparse-bs"):
+        spec = get_scenario(name)
+        assert spec.aggregation == "hierarchical"
+        assert spec.tau_global >= 1
+    # scenario drives the engine without explicit config knobs
+    sim = FLSimulation(FLConfig(**SMALL, scenario="hfl-default"))
+    assert sim.aggregation == "hierarchical"
+    assert sim.tau_global == get_scenario("hfl-default").tau_global
+    # explicit config overrides the scenario
+    sim2 = FLSimulation(FLConfig(**SMALL, scenario="hfl-default",
+                                 aggregation="single"))
+    assert sim2.aggregation == "single"
+
+
+def test_learning_sweep_hierarchical_smoke():
+    """hfl scenario through the batched learning sweep: strict JSON,
+    handover curve present, single-tier record unaffected."""
+    import json
+
+    from repro.launch.sweep import run_learning_sweep
+
+    recs = run_learning_sweep(
+        ["paper-default", "hfl-default"], n_seeds=2, n_rounds=3,
+        cfg=WirelessConfig(n_users=8, n_bs=3), n_train=96, n_test=64,
+        local_epochs=1, batch_size=6, tau_global=2)
+    by_name = {r["scenario"]: r for r in recs}
+    assert by_name["paper-default"]["aggregation"] == "single"
+    assert "handover_rate_mean" not in by_name["paper-default"]
+    h = by_name["hfl-default"]
+    assert h["aggregation"] == "hierarchical" and h["tau_global"] == 2
+    assert "handover_rate" in h["curves"]
+    assert 0.0 <= h["handover_rate_mean"] <= 1.0
+    for r in recs:
+        json.dumps(r, allow_nan=False)
+        wall = r["curves"]["wall_clock_s"]
+        assert len(wall) == 3 and wall[-1] > wall[0] > 0.0

@@ -2,10 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_fallback import given, settings, st
 
-from repro.core import WirelessConfig, bandwidth, channel, mobility
+from repro.core import WirelessConfig, bandwidth, channel, mobility, schedule
 from repro.core.baselines import fedcs_schedule, sa_schedule
+from repro.core.latency import round_latency
+from repro.core.scheduler import SCHEDULERS
 from repro.core.types import SchedulingProblem
 from repro.fl.partition import shard_partition
 
@@ -66,6 +69,43 @@ def test_sa_selects_all(seed, n):
     prob = _mk_problem(seed, n=n, m=3, bw=1.0)
     res = sa_schedule(prob)
     assert int(res.selected.sum()) == n
+
+
+# -- Eq. (3): every scheduler's t_round survives recomputation -------------
+def _random_problem(seed, n, m, necessary="random"):
+    rng = np.random.default_rng(seed)
+    snr = jnp.asarray(rng.lognormal(2.0, 2.0, (n, m)), jnp.float32)
+    if necessary == "all":
+        nec = jnp.ones(n, dtype=bool)
+    elif necessary == "none":
+        nec = jnp.zeros(n, dtype=bool)
+    else:
+        nec = jnp.asarray(rng.random(n) < 0.2)
+    return SchedulingProblem(
+        snr=snr, coeff=0.5 / jnp.log2(1.0 + snr),
+        tcomp=jnp.asarray(rng.uniform(0.05, 0.3, n), jnp.float32),
+        bs_bw=jnp.asarray(rng.uniform(0.4, 1.6, m), jnp.float32),
+        necessary=nec, min_participants=max(1, n // 2))
+
+
+@pytest.mark.parametrize("name", SCHEDULERS)
+def test_round_latency_cross_checks_t_round(name):
+    """The cross-check round_latency's docstring promises: for EVERY
+    registered scheduler, recomputing Eq. (3) from the decided
+    assignment/bandwidth reproduces the reported t_round (float32 tol) —
+    on randomized problems plus the empty-BS (more BSs than users) and
+    all-necessary corner cases."""
+    cases = [_random_problem(s, n=12, m=3) for s in range(4)]
+    cases.append(_random_problem(7, n=3, m=6))            # BSs left empty
+    cases.append(_random_problem(8, n=10, m=3, necessary="all"))
+    cases.append(_random_problem(9, n=10, m=3, necessary="none"))
+    cfg = WirelessConfig()
+    for i, prob in enumerate(cases):
+        res = schedule(name, prob, cfg, jax.random.PRNGKey(i), seed=i)
+        np.testing.assert_allclose(
+            float(round_latency(prob, res)), float(res.t_round),
+            rtol=2e-3, atol=1e-5,
+            err_msg=f"scheduler={name} case={i}")
 
 
 # -- partitioner: equal client sizes, full coverage of used samples --------
