@@ -23,7 +23,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core import WirelessConfig, bandwidth, channel, mobility

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit
 from repro.core import (ParticipationState, WirelessConfig, channel,
                         mobility)
 from repro.core import scheduler as sched

@@ -1,0 +1,101 @@
+"""Device-sharded sweep throughput: cells/sec across the mesh ladder.
+
+Runs the same seeds x scenarios wireless grid through
+``repro.launch.shard_sweep.run_shard_sweep`` on 1/2/4/8-device ``("data",)``
+meshes (rungs above ``jax.device_count()`` are skipped with a note — force
+host devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``),
+plus the unsharded ``run_sweep`` reference, so the d=1 row prices the
+``shard_map`` machinery itself.
+
+On CPU CI every forced host device shares the same physical cores, so the
+ladder mostly measures sharding OVERHEAD staying flat (the regression
+signal); real scaling shows on multi-chip hardware, where each rung owns
+its cores/HBM.  ``cells`` = scenarios x seeds per sweep call.
+
+Each row is emitted twice: the harness CSV contract
+(``name,us_per_call,derived``; value = microseconds per grid cell) and a
+``#json `` line.
+
+JSON record schema (one line per ladder rung + the unsharded reference):
+
+    {"bench": "shard_sweep",
+     "variant": str,            # unsharded | shard_d1 | shard_d2 | ...
+     "setting": str,            # quick | full
+     "n_devices": int,          # mesh size (1 for unsharded)
+     "n_devices_available": int,
+     "n_scenarios": int, "n_seeds": int, "n_rounds": int,
+     "cells": int,              # scenarios x seeds
+     "us_per_cell": float,
+     "cells_per_sec": float,
+     "speedup_vs_unsharded": float}
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+
+from benchmarks.common import emit
+
+SCENARIOS = ["paper-default", "high-mobility"]
+DEVICE_LADDER = (1, 2, 4, 8)
+
+
+def _best_seconds(fn, reps: int) -> float:
+    fn()                                  # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = True) -> None:
+    from repro.launch.mesh import make_data_mesh
+    from repro.launch.shard_sweep import run_shard_sweep
+    from repro.launch.sweep import run_sweep
+
+    setting = "quick" if quick else "full"
+    n_seeds = 8 if quick else 32
+    n_rounds = 3 if quick else 10
+    reps = 2 if quick else 3
+    cells = len(SCENARIOS) * n_seeds
+    avail = jax.device_count()
+
+    def record(variant: str, n_devices: int, sec: float,
+               unsharded_cps: float | None) -> float:
+        cps = cells / sec
+        speedup = cps / (unsharded_cps or cps)
+        emit(f"shard_sweep_{variant}_{setting}", sec / cells * 1e6,
+             f"cells_per_sec={cps:.2f} speedup_vs_unsharded={speedup:.2f}x "
+             f"devices={n_devices}/{avail}")
+        rec = {
+            "bench": "shard_sweep", "variant": variant, "setting": setting,
+            "n_devices": n_devices, "n_devices_available": avail,
+            "n_scenarios": len(SCENARIOS), "n_seeds": n_seeds,
+            "n_rounds": n_rounds, "cells": cells,
+            "us_per_cell": sec / cells * 1e6,
+            "cells_per_sec": cps,
+            "speedup_vs_unsharded": speedup,
+        }
+        print(f"#json {json.dumps(rec)}")
+        return cps
+
+    sec = _best_seconds(
+        lambda: run_sweep(SCENARIOS, n_seeds=n_seeds, n_rounds=n_rounds),
+        reps)
+    unsharded_cps = record("unsharded", 1, sec, None)
+
+    for n_dev in DEVICE_LADDER:
+        if n_dev > avail:
+            print(f"# shard_sweep: skipping d={n_dev} (only {avail} "
+                  f"device(s); run under XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count={n_dev})")
+            continue
+        mesh = make_data_mesh(n_dev)
+        sec = _best_seconds(
+            lambda: run_shard_sweep(SCENARIOS, n_seeds=n_seeds,
+                                    n_rounds=n_rounds, mesh=mesh), reps)
+        record(f"shard_d{n_dev}", n_dev, sec, unsharded_cps)

@@ -1,0 +1,272 @@
+"""CI benchmark-regression gate: extracted records vs committed baselines.
+
+Diffs the ``BENCH_*.json`` record lists CI extracts from the quick bench
+suite (or regenerates in-process when a candidate file is absent) against
+the snapshots in ``benchmarks/baselines/``, with per-metric tolerances, and
+exits non-zero on a regression — the perf safety net the bench trajectory
+was missing.
+
+    python -m benchmarks.compare                 # all gated benches
+    python -m benchmarks.compare --benches fl    # one bench
+    python -m benchmarks.compare --refresh       # rewrite the baselines
+    python -m benchmarks.compare --candidates .  # CI: pre-extracted files
+
+Tolerance policy (documented in ``benchmarks/baselines/README.md``): raw
+wall-clock metrics are machine-dependent, so they gate only order-of-
+magnitude collapses (wide ``rel_tol``); within-run RATIOS (``speedup_vs_*``)
+cancel machine speed and gate tighter; accuracies gate on absolute drops.
+Every comparison is ONE-SIDED — only a worsening beyond tolerance fails;
+an improvement beyond tolerance prints a "stale baseline, consider
+--refresh" warning.  A record present in the baseline but missing from the
+candidate fails (a bench silently stopped emitting), and a gated metric
+going null/missing in the CANDIDATE fails too; a metric the baseline
+snapshot predates only warns (ungated until ``--refresh``).
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import dataclasses
+import importlib
+import io
+import json
+import sys
+from pathlib import Path
+
+BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
+
+_HIGHER, _LOWER = "higher_better", "lower_better"
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """One gated metric: direction + at least one tolerance.
+
+    ``rel_tol`` is relative to the baseline magnitude, ``abs_tol`` absolute;
+    when both are set the LOOSER bound wins (protects ratio metrics whose
+    baseline is near zero).
+    """
+    name: str
+    direction: str
+    rel_tol: float | None = None
+    abs_tol: float | None = None
+
+    def __post_init__(self):
+        if self.direction not in (_HIGHER, _LOWER):
+            raise ValueError(f"direction must be {_HIGHER!r} or {_LOWER!r}, "
+                             f"got {self.direction!r}")
+        if self.rel_tol is None and self.abs_tol is None:
+            raise ValueError(
+                f"metric {self.name!r} needs rel_tol and/or abs_tol — zero "
+                f"slack would gate wall-clock noise on exact equality")
+
+    def slack(self, baseline_value: float) -> float:
+        s = 0.0
+        if self.rel_tol is not None:
+            s = max(s, abs(baseline_value) * self.rel_tol)
+        if self.abs_tol is not None:
+            s = max(s, self.abs_tol)
+        return s
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    """One gated bench: where its records live and what to compare."""
+    file: str                   # extracted/committed file name
+    only: str                   # benchmarks.run --only name (regeneration)
+    bench: str                  # the records' "bench" tag
+    key: tuple[str, ...]        # identity fields (absent fields -> None)
+    metrics: tuple[Metric, ...]
+
+
+SPECS: dict[str, BenchSpec] = {
+    "fl": BenchSpec(
+        file="BENCH_fl.json", only="fl", bench="fl_rounds",
+        key=("variant", "setting"),
+        metrics=(
+            # within-run ratio: the fused engine must stay clearly ahead of
+            # the legacy loop on ANY machine
+            Metric("speedup_vs_legacy", _HIGHER, rel_tol=0.50),
+            # raw wall-clock: catastrophic-regression guard only
+            Metric("us_per_round", _LOWER, rel_tol=1.50),
+        )),
+    "scheduling": BenchSpec(
+        file="BENCH_scheduling.json", only="fig2", bench="scheduling",
+        key=("kind", "setting", "scheduler", "dataset"),
+        metrics=(
+            Metric("us_per_call", _LOWER, rel_tol=1.50),
+            Metric("final_acc", _HIGHER, abs_tol=0.15),
+            Metric("acc_at_budget", _HIGHER, abs_tol=0.20),
+        )),
+    "hfl": BenchSpec(
+        file="BENCH_hfl.json", only="hfl", bench="hfl",
+        key=("scenario", "variant", "setting"),
+        metrics=(
+            Metric("speedup_vs_single", _HIGHER, rel_tol=0.40),
+            Metric("us_per_round", _LOWER, rel_tol=1.50),
+            Metric("final_acc", _HIGHER, abs_tol=0.15),
+        )),
+}
+
+
+# -------------------------------------------------------------- comparison --
+def _index(records: list[dict], spec: BenchSpec) -> dict[tuple, dict]:
+    idx: dict[tuple, dict] = {}
+    for rec in records:
+        idx[tuple(rec.get(k) for k in spec.key)] = rec
+    return idx
+
+
+def compare_records(baseline: list[dict], candidate: list[dict],
+                    spec: BenchSpec) -> tuple[list[str], list[str]]:
+    """Gate one bench's record lists; returns (failures, warnings)."""
+    b_idx, c_idx = _index(baseline, spec), _index(candidate, spec)
+    failures: list[str] = []
+    warnings: list[str] = []
+    for key, brec in b_idx.items():
+        tag = f"{spec.file} {dict(zip(spec.key, key))}"
+        crec = c_idx.get(key)
+        if crec is None:
+            failures.append(f"{tag}: record missing from candidate "
+                            f"(bench stopped emitting it)")
+            continue
+        for m in spec.metrics:
+            if m.name not in brec:
+                if m.name in crec:
+                    # the snapshot predates a metric the bench now emits:
+                    # not a regression, but ungated until --refresh
+                    warnings.append(
+                        f"{tag}: baseline lacks gated metric {m.name!r} — "
+                        f"ungated until --refresh")
+                # absent from both sides: this record KIND just doesn't
+                # carry the metric (e.g. sched_call rows have no final_acc)
+                continue
+            bv, cv = brec.get(m.name), crec.get(m.name)
+            if bv is None and cv is None:
+                continue
+            if bv is None or cv is None:
+                failures.append(f"{tag}: {m.name} went "
+                                f"{bv!r} -> {cv!r}")
+                continue
+            slack = m.slack(bv)
+            worse = (cv > bv + slack if m.direction == _LOWER
+                     else cv < bv - slack)
+            better = (cv < bv - slack if m.direction == _LOWER
+                      else cv > bv + slack)
+            if worse:
+                failures.append(
+                    f"{tag}: {m.name} regressed {bv:.4g} -> {cv:.4g} "
+                    f"(allowed slack {slack:.4g}, {m.direction})")
+            elif better:
+                warnings.append(
+                    f"{tag}: {m.name} improved {bv:.4g} -> {cv:.4g} beyond "
+                    f"tolerance — baseline looks stale, consider --refresh")
+    for key in sorted(set(c_idx) - set(b_idx), key=str):
+        warnings.append(f"{spec.file} {dict(zip(spec.key, key))}: new "
+                        f"record with no baseline — add it via --refresh")
+    return failures, warnings
+
+
+# ------------------------------------------------------------- acquisition --
+def generate_records(spec: BenchSpec, quick: bool = True) -> list[dict]:
+    """Run the producing bench in-process and harvest its ``#json`` lines."""
+    from benchmarks.run import BENCHES
+    module_name = next(mod for name, mod, _ in BENCHES if name == spec.only)
+    module = importlib.import_module(module_name)
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        module.run(quick=quick)
+    records = [json.loads(line[len("#json "):])
+               for line in buf.getvalue().splitlines()
+               if line.startswith("#json ")]
+    return [r for r in records if r.get("bench") == spec.bench]
+
+
+def _load(path: Path) -> list[dict]:
+    with open(path) as f:
+        records = json.load(f)
+    if not isinstance(records, list):
+        raise ValueError(f"{path}: expected a JSON list of records")
+    return records
+
+
+# --------------------------------------------------------------------- CLI --
+def run_compare(benches: list[str], candidates: Path, baselines: Path,
+                refresh: bool = False,
+                log=print) -> tuple[list[str], list[str]]:
+    """Gate (or ``refresh``) the named benches; returns all (failures,
+    warnings).  Missing candidate files are regenerated in-process."""
+    failures: list[str] = []
+    warnings: list[str] = []
+    for name in benches:
+        spec = SPECS[name]
+        cand_path = candidates / spec.file
+        if cand_path.exists():
+            candidate = _load(cand_path)
+            if refresh:
+                log(f"[compare] refreshing from EXISTING {cand_path} — "
+                    f"delete it first if it predates your changes")
+        else:
+            log(f"[compare] {spec.file} not found under {candidates}/ — "
+                f"running `benchmarks.run --only {spec.only}` in-process")
+            candidate = generate_records(spec)
+            if not candidate:
+                failures.append(f"{spec.file}: bench {spec.only!r} emitted "
+                                f"no #json records")
+                continue
+        base_path = baselines / spec.file
+        if refresh:
+            base_path.parent.mkdir(parents=True, exist_ok=True)
+            with open(base_path, "w") as f:
+                json.dump(candidate, f, indent=2)
+                f.write("\n")
+            log(f"[compare] refreshed {base_path} "
+                f"({len(candidate)} records)")
+            continue
+        if not base_path.exists():
+            failures.append(f"{spec.file}: no committed baseline at "
+                            f"{base_path} — create it with --refresh")
+            continue
+        f_new, w_new = compare_records(_load(base_path), candidate, spec)
+        failures.extend(f_new)
+        warnings.extend(w_new)
+        log(f"[compare] {spec.file}: {len(f_new)} regression(s), "
+            f"{len(w_new)} warning(s)")
+    return failures, warnings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Benchmark-regression gate vs benchmarks/baselines/.")
+    ap.add_argument("--benches", default=",".join(SPECS),
+                    help=f"comma-separated subset of {','.join(SPECS)}")
+    ap.add_argument("--candidates", default=".", type=Path,
+                    help="directory holding extracted BENCH_*.json files "
+                         "(missing ones are regenerated in-process)")
+    ap.add_argument("--baselines", default=BASELINE_DIR, type=Path,
+                    help="baseline snapshot directory")
+    ap.add_argument("--refresh", action="store_true",
+                    help="rewrite the baselines from the candidates instead "
+                         "of gating")
+    args = ap.parse_args(argv)
+
+    benches = args.benches.split(",")
+    unknown = [b for b in benches if b not in SPECS]
+    if unknown:
+        ap.error(f"unknown benches {unknown}; choose from {list(SPECS)}")
+    failures, warnings = run_compare(benches, args.candidates,
+                                     args.baselines, refresh=args.refresh)
+    for w in warnings:
+        print(f"WARN  {w}")
+    for f in failures:
+        print(f"FAIL  {f}")
+    if failures:
+        print(f"benchmark regression gate: {len(failures)} failure(s)")
+        return 1
+    print("benchmark regression gate: OK"
+          + (f" ({len(warnings)} warning(s))" if warnings else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

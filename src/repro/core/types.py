@@ -8,7 +8,6 @@ All quantities follow the paper's units:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax.numpy as jnp
 

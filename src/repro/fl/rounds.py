@@ -130,6 +130,14 @@ class FLConfig:
                                        # users pull the new cell's edge model
     tau_global: Optional[int] = None   # global sync period (rounds); only
                                        # meaningful with hierarchical
+    shard: bool = False             # place the client-batched tensors on a
+                                    # ("data",) device mesh so the fleet's
+                                    # local SGD data-parallelises over
+                                    # devices (GSPMD; see docs/SCALING.md).
+                                    # Numerically equivalent, not bit-equal:
+                                    # the FedAvg reduction order changes.
+    mesh_devices: Optional[int] = None  # mesh size for shard (default: all
+                                        # visible devices)
 
     def __post_init__(self):
         if self.compute not in COMPUTE_MODES:
@@ -144,6 +152,9 @@ class FLConfig:
                              f"choose from {AGGREGATIONS}")
         if self.tau_global is not None and self.tau_global < 1:
             raise ValueError("tau_global must be >= 1")
+        if self.mesh_devices is not None and not self.shard:
+            raise ValueError("mesh_devices only applies with shard=True; "
+                             "it would silently do nothing")
 
 
 @dataclasses.dataclass
@@ -333,6 +344,26 @@ class FLSimulation:
         self.x_clients = self.data.x_train[idx]      # [N, n_i, H, W, C]
         self.y_clients = self.data.y_train[idx]      # [N, n_i]
         self.data_sizes = jnp.full((w.n_users,), idx.shape[1])
+        if cfg.shard:
+            # client-dim data parallelism: with the [N, ...] batches placed
+            # on a ("data",) mesh, GSPMD spreads the fleet's local SGD over
+            # devices and all-reduces the FedAvg sum.  (Deferred import:
+            # launch imports fl, so fl cannot import launch at module load.)
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            from repro.launch.mesh import make_data_mesh
+            mesh = make_data_mesh(cfg.mesh_devices)
+            n_dev = mesh.devices.size
+            if w.n_users % n_dev:
+                raise ValueError(
+                    f"shard=True needs n_users ({w.n_users}) divisible by "
+                    f"the mesh size ({n_dev}); pass mesh_devices=D for a "
+                    f"divisor D")
+            client_sharding = NamedSharding(mesh, PartitionSpec("data"))
+            self.x_clients = jax.device_put(self.x_clients, client_sharding)
+            self.y_clients = jax.device_put(self.y_clients, client_sharding)
+            self.data_sizes = jax.device_put(self.data_sizes,
+                                             client_sharding)
 
         h, wd, c = self.data.x_train.shape[1:]
         self.cnn_cfg = cfg.cnn or cnn.CNNConfig(height=h, width=wd, channels=c)

@@ -27,13 +27,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_seq: int, kv_block: int,
     q = q_ref[...].astype(jnp.float32) * scale              # [Qb, D]
 
     m = jnp.full((q_block, 1), -jnp.inf, jnp.float32)
-    l = jnp.zeros((q_block, 1), jnp.float32)
+    ell = jnp.zeros((q_block, 1), jnp.float32)
     acc = jnp.zeros((q_block, q_ref.shape[-1]), jnp.float32)
 
     n_kv = kv_seq // kv_block
 
     def body(j, carry):
-        m, l, acc = carry
+        m, ell, acc = carry
         k = k_ref[pl.dslice(j * kv_block, kv_block), :].astype(jnp.float32)
         v = v_ref[pl.dslice(j * kv_block, kv_block), :].astype(jnp.float32)
         s = q @ k.T                                          # [Qb, KVb]
@@ -50,12 +50,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_seq: int, kv_block: int,
         m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m - m_new)
-        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        l_new = alpha * ell + jnp.sum(p, axis=-1, keepdims=True)
         acc_new = alpha * acc + p @ v
         return m_new, l_new, acc_new
 
-    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m, l, acc))
-    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+    m, ell, acc = jax.lax.fori_loop(0, n_kv, body, (m, ell, acc))
+    o_ref[...] = (acc / jnp.maximum(ell, 1e-30)).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",

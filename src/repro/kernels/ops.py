@@ -7,7 +7,6 @@ kernels in interpret mode against the oracles.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels import flash_attention as fa

@@ -59,6 +59,6 @@ def bandwidth_solve(coeff, tcomp, mask, bw, iters: int | None = None,
     from repro.core.bandwidth import bs_time
     if lo is None:
         lo = jnp.zeros_like(bw)
-    return jax.vmap(lambda c, t, m, b, l: bs_time(
-        c, t, m, b, iters=iters, method=method, lo_hint=l))(
+    return jax.vmap(lambda c, t, m, b, lo_k: bs_time(
+        c, t, m, b, iters=iters, method=method, lo_hint=lo_k))(
         coeff, tcomp, mask, bw, lo)

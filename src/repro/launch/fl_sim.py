@@ -65,6 +65,13 @@ def main() -> None:
                          "inherit the scenario, else single-tier)")
     ap.add_argument("--tau-global", type=int, default=None,
                     help="global sync period in rounds (hierarchical only)")
+    ap.add_argument("--shard", action="store_true",
+                    help="place the client-batched tensors on a (data,) "
+                         "device mesh: the fleet's local SGD "
+                         "data-parallelises over devices (docs/SCALING.md)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="D",
+                    help="mesh size for --shard (default: every visible "
+                         "device; must divide n_users)")
     args = ap.parse_args()
 
     cfg = FLConfig(dataset=args.dataset, scheduler=args.scheduler,
@@ -74,7 +81,8 @@ def main() -> None:
                    hetero_bw=args.hetero_bw, scenario=args.scenario,
                    compute=args.compute, select_cap=args.select_cap,
                    fedavg_backend=args.fedavg_backend,
-                   aggregation=args.aggregation, tau_global=args.tau_global)
+                   aggregation=args.aggregation, tau_global=args.tau_global,
+                   shard=args.shard, mesh_devices=args.mesh)
     sim = FLSimulation(cfg)
     recs = sim.run(args.rounds, mode=args.mode)
     hier = sim.aggregation == "hierarchical"

@@ -38,3 +38,24 @@ def smoke_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     import numpy as np
     devices = np.asarray(jax.devices()[: data * model]).reshape(data, model)
     return jax.sharding.Mesh(devices, ("data", "model"))
+
+
+def make_data_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """1-D ``("data",)`` mesh over the first ``n_devices`` visible devices.
+
+    The sweep/scheduler sharding axis (:mod:`repro.launch.shard_sweep`):
+    independent grid cells / fleet problems scatter over it, so no "model"
+    axis is needed.  Defaults to every visible device; on CPU force more
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` (set before
+    jax initialises).
+    """
+    import numpy as np
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else n_devices
+    if n < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n}")
+    if n > len(devices):
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))

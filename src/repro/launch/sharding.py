@@ -30,6 +30,38 @@ _SSM_LEAVES = {"in_proj", "conv_w", "conv_b", "A_log", "D", "dt_bias",
                "out_proj"}
 
 
+# ------------------------------------------------- grid / fleet sharding ---
+def padded_count(n: int, n_shards: int) -> int:
+    """Smallest multiple of ``n_shards`` that is >= ``n``."""
+    if n < 1 or n_shards < 1:
+        raise ValueError(f"need n >= 1 and n_shards >= 1, got {n}, "
+                         f"{n_shards}")
+    return -(-n // n_shards) * n_shards
+
+
+def pad_leading(tree: PyTree, n_pad: int) -> PyTree:
+    """Pad every leaf's leading axis to ``n_pad`` by cyclic repetition.
+
+    Used by :mod:`repro.launch.shard_sweep` to make an uneven cell grid
+    divide the mesh: the wrapped cells recompute real cells (same shapes,
+    same convergence behaviour under vmap'd ``while_loop`` masking) and are
+    sliced off after the gather, so padding never changes results.
+    """
+    def pad(leaf):
+        n = leaf.shape[0]
+        if n == n_pad:
+            return leaf
+        import jax.numpy as jnp
+        return leaf[jnp.arange(n_pad) % n]
+
+    return jax.tree.map(pad, tree)
+
+
+def unpad_leading(tree: PyTree, n: int) -> PyTree:
+    """Drop the padded tail: the inverse of :func:`pad_leading`."""
+    return jax.tree.map(lambda leaf: leaf[:n], tree)
+
+
 def _rule(path: tuple, shape: tuple, model_size: int) -> P:
     names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
     leaf = names[-1]
@@ -112,9 +144,6 @@ def cache_pspecs(cfg: ModelConfig, cache_shape: PyTree,
     from repro.launch.mesh import data_axes
     dp = data_axes(mesh)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    dp_size = 1
-    for a in dp:
-        dp_size *= sizes[a]
 
     mode = cfg.cache_seq_shard
     if mode == "auto":

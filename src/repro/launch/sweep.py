@@ -24,6 +24,12 @@ CLI (emits per-scenario JSON latency/fairness curves, schema below):
     PYTHONPATH=src python -m repro.launch.sweep --learning \
         --scenarios paper-default,static --seeds 2 --rounds 10
 
+    # same grid sharded over 8 host devices (bit-identical output; see
+    # repro.launch.shard_sweep and docs/SCALING.md)
+    PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.launch.sweep --shard \
+        --scenarios paper-default,high-mobility --seeds 8 --rounds 3
+
 Wireless record schema (one dict per scenario, JSON list on stdout /
 ``--out``):
 
@@ -115,8 +121,45 @@ def _bs_positions(key: jax.Array, layout_id, cfg: WirelessConfig):
 
 
 # ------------------------------------------------------------ compiled core --
+def _dist_and_shadow(pos, bs_pos, shadow_sigma, k_shadow,
+                     cfg: WirelessConfig, user_chunk: int | None):
+    """[N, M] distances + shadowing field, optionally in user blocks.
+
+    The shadowing field evaluates 64 random Fourier features per (user, BS)
+    pair — the O(N x M x F) intermediate that dominates memory at fleet
+    scale.  ``user_chunk`` bounds it: a ``lax.map`` over N/user_chunk user
+    blocks keeps the peak at [user_chunk, M, F] while producing bit-identical
+    values (both terms are per-user independent, and the field's
+    frequencies/phases depend only on ``k_shadow``).
+    """
+    def block(pos_blk):
+        d = MobilityState(user_pos=pos_blk, bs_pos=bs_pos).distances()
+        sh = shadow_sigma * channel.sample_shadowing(
+            k_shadow, pos_blk, bs_pos, cfg, sigma_db=1.0)
+        return d, sh
+
+    n = pos.shape[0]
+    if not user_chunk or user_chunk >= n:
+        return block(pos)
+    d, sh = jax.lax.map(block, pos.reshape(n // user_chunk, user_chunk, 2))
+    return d.reshape(n, -1), sh.reshape(n, -1)
+
+
+def _check_user_chunk(user_chunk: int | None, n_users: int) -> None:
+    if user_chunk is None:
+        return
+    if user_chunk < 1:
+        raise ValueError(f"user_chunk must be >= 1, got {user_chunk}")
+    if n_users % user_chunk:
+        raise ValueError(
+            f"user_chunk={user_chunk} must divide n_users={n_users} "
+            f"(blocks are reshaped, not padded — padding would change the "
+            f"per-user PRNG layout)")
+
+
 def _one_cell(p: dict, key: jax.Array, cfg: WirelessConfig, n_rounds: int,
-              min_participants: int, backend: str) -> dict:
+              min_participants: int, backend: str,
+              user_chunk: int | None = None) -> dict:
     """One (scenario, seed) cell: init world, scan the wireless loop."""
     k_pos, k_bs, k_bw, k_aux, k_shadow, k_run = jax.random.split(key, 6)
     pos0 = jax.random.uniform(k_pos, (cfg.n_users, 2), minval=0.0,
@@ -133,11 +176,10 @@ def _one_cell(p: dict, key: jax.Array, cfg: WirelessConfig, n_rounds: int,
         pos, aux = mobility.step_switch(
             p["model_id"], k_mob, pos, aux, cfg.area_m, cfg.round_duration_s,
             p["speed"], p["pause_s"], p["gm_memory"])
-        dist = MobilityState(user_pos=pos, bs_pos=bs_pos).distances()
         # same k_shadow every round -> the field is consistent over time;
         # sigma 0 (scenario off) makes it a no-op multiplier.
-        shadow_db = p["shadow_sigma"] * channel.sample_shadowing(
-            k_shadow, pos, bs_pos, cfg, sigma_db=1.0)
+        dist, shadow_db = _dist_and_shadow(pos, bs_pos, p["shadow_sigma"],
+                                           k_shadow, cfg, user_chunk)
         snr = channel.sample_snr(k_snr, dist, cfg, shadow_db=shadow_db)
         coeff = channel.bandwidth_time_coeff(snr, cfg)
         u = jax.random.uniform(k_tc, (cfg.n_users,))
@@ -164,10 +206,11 @@ def _one_cell(p: dict, key: jax.Array, cfg: WirelessConfig, n_rounds: int,
 
 @partial(jax.jit, static_argnames=("cfg", "n_rounds", "n_seeds",
                                    "min_participants", "backend",
-                                   "n_models"))
+                                   "user_chunk", "n_models"))
 def _sweep_bucket(params: dict, key: jax.Array, *, cfg: WirelessConfig,
                   n_rounds: int, n_seeds: int, min_participants: int,
-                  backend: str, n_models: int) -> dict:
+                  backend: str, user_chunk: int | None,
+                  n_models: int) -> dict:
     """All scenarios of one shape bucket x all seeds, one compiled call.
 
     Returns a dict of [S, n_seeds, n_rounds] arrays.  ``n_models`` is the
@@ -177,57 +220,83 @@ def _sweep_bucket(params: dict, key: jax.Array, *, cfg: WirelessConfig,
     """
     seed_keys = jax.random.split(key, n_seeds)   # shared: paired comparisons
     run = partial(_one_cell, cfg=cfg, n_rounds=n_rounds,
-                  min_participants=min_participants, backend=backend)
+                  min_participants=min_participants, backend=backend,
+                  user_chunk=user_chunk)
     return jax.vmap(lambda p: jax.vmap(lambda k: run(p, k))(seed_keys))(
         params)
 
 
 # ------------------------------------------------------------------- API ---
-def run_sweep(scenarios: Sequence[str | ScenarioSpec], n_seeds: int = 4,
-              n_rounds: int = 10, cfg: WirelessConfig | None = None,
-              backend: str = "jax", seed: int = 0) -> list[dict]:
-    """Run the batched wireless sweep; one record dict per scenario.
+def _wireless_buckets(specs: Sequence[ScenarioSpec], base: WirelessConfig
+                      ) -> dict[tuple[int, int],
+                                list[tuple[int, ScenarioSpec]]]:
+    """Group (position, spec) pairs by resolved array shape (n_users, n_bs).
 
-    Scenarios are bucketed by resolved array shape (n_users, n_bs); each
-    bucket is ONE jit-compiled call covering all its scenarios x seeds.
-    See the module docstring for the record schema.
-    """
-    specs = [get_scenario(s) if isinstance(s, str) else s for s in scenarios]
-    base = cfg or WirelessConfig()
+    Each bucket compiles once; shared by the single-device sweep and the
+    device-sharded one (:mod:`repro.launch.shard_sweep`)."""
     buckets: dict[tuple[int, int], list[tuple[int, ScenarioSpec]]] = {}
     for pos, spec in enumerate(specs):
         w = spec.wireless(base)
         buckets.setdefault((w.n_users, w.n_bs), []).append((pos, spec))
+    return buckets
 
+
+def _wireless_records(group: list[tuple[int, ScenarioSpec]], outs: dict,
+                      n_seeds: int, n_rounds: int) -> dict[int, dict]:
+    """[S, seeds, R] bucket outputs -> per-scenario record dicts.
+
+    Shared by ``run_sweep`` and ``shard_sweep.run_shard_sweep`` so the two
+    paths emit byte-identical JSON (the parity contract CI diffs)."""
+    t_round = np.asarray(outs["t_round"])            # [S, seeds, R]
+    n_sel = np.asarray(outs["n_selected"])
+    min_pr = np.asarray(outs["min_part_rate"])
+    records: dict[int, dict] = {}
+    for i, (pos, spec) in enumerate(group):
+        records[pos] = {
+            "scenario": spec.name,
+            "mobility": spec.mobility,
+            "speed_mps": spec.speed_mps,
+            "n_seeds": n_seeds,
+            "n_rounds": n_rounds,
+            "t_round_mean_s": float(t_round[i].mean()),
+            "t_round_p95_s": float(np.percentile(t_round[i], 95)),
+            "participants_mean": float(n_sel[i].mean()),
+            "min_part_rate": float(min_pr[i, :, -1].mean()),
+            "curves": {
+                "t_round_s": t_round[i].mean(axis=0).tolist(),
+                "n_selected": n_sel[i].mean(axis=0).tolist(),
+                "min_part_rate": min_pr[i].mean(axis=0).tolist(),
+            },
+        }
+    return records
+
+
+def run_sweep(scenarios: Sequence[str | ScenarioSpec], n_seeds: int = 4,
+              n_rounds: int = 10, cfg: WirelessConfig | None = None,
+              backend: str = "jax", seed: int = 0,
+              user_chunk: int | None = None) -> list[dict]:
+    """Run the batched wireless sweep; one record dict per scenario.
+
+    Scenarios are bucketed by resolved array shape (n_users, n_bs); each
+    bucket is ONE jit-compiled call covering all its scenarios x seeds.
+    ``user_chunk`` bounds the per-round O(N x M x F) channel intermediates
+    (see :func:`_dist_and_shadow`); it must divide every bucket's n_users.
+    See the module docstring for the record schema.
+    """
+    specs = [get_scenario(s) if isinstance(s, str) else s for s in scenarios]
+    base = cfg or WirelessConfig()
     records: dict[int, dict] = {}       # original position -> record
-    for (n_users, n_bs), group in buckets.items():
+    for (n_users, n_bs), group in _wireless_buckets(specs, base).items():
+        _check_user_chunk(user_chunk, n_users)
         bcfg = dataclasses.replace(base, n_bs=n_bs)
         minp = int(np.ceil(bcfg.rho2 * n_users))
         params = _scenario_params([s for _, s in group], bcfg)
         outs = _sweep_bucket(params, jax.random.PRNGKey(seed), cfg=bcfg,
                              n_rounds=n_rounds, n_seeds=n_seeds,
                              min_participants=minp, backend=backend,
+                             user_chunk=user_chunk,
                              n_models=len(mobility.MOBILITY_MODELS))
-        t_round = np.asarray(outs["t_round"])            # [S, seeds, R]
-        n_sel = np.asarray(outs["n_selected"])
-        min_pr = np.asarray(outs["min_part_rate"])
-        for i, (pos, spec) in enumerate(group):
-            records[pos] = {
-                "scenario": spec.name,
-                "mobility": spec.mobility,
-                "speed_mps": spec.speed_mps,
-                "n_seeds": n_seeds,
-                "n_rounds": n_rounds,
-                "t_round_mean_s": float(t_round[i].mean()),
-                "t_round_p95_s": float(np.percentile(t_round[i], 95)),
-                "participants_mean": float(n_sel[i].mean()),
-                "min_part_rate": float(min_pr[i, :, -1].mean()),
-                "curves": {
-                    "t_round_s": t_round[i].mean(axis=0).tolist(),
-                    "n_selected": n_sel[i].mean(axis=0).tolist(),
-                    "min_part_rate": min_pr[i].mean(axis=0).tolist(),
-                },
-            }
+        records.update(_wireless_records(group, outs, n_seeds, n_rounds))
     # preserve the caller's scenario order
     return [records[i] for i in range(len(specs))]
 
@@ -238,7 +307,8 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                        minp: int, epochs: int, batch_size: int, lr: float,
                        eval_every: int, backend: str, fedavg_backend: str,
                        compute: str, select_cap, aggregation: str = "single",
-                       tau_global: int = 1) -> dict:
+                       tau_global: int = 1,
+                       user_chunk: int | None = None) -> dict:
     """One (scenario, seed) FL cell: init world, scan the full round loop
     (wireless control plane + local SGD + Eq. (2) aggregation — single-tier
     or hierarchical per-BS edges with a tau_global sync — + periodic
@@ -267,9 +337,8 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
         pos, aux = mobility.step_switch(
             p["model_id"], k_mob, pos, aux, cfg.area_m, cfg.round_duration_s,
             p["speed"], p["pause_s"], p["gm_memory"])
-        dist = MobilityState(user_pos=pos, bs_pos=bs_pos).distances()
-        shadow_db = p["shadow_sigma"] * channel.sample_shadowing(
-            k_shadow, pos, bs_pos, cfg, sigma_db=1.0)
+        dist, shadow_db = _dist_and_shadow(pos, bs_pos, p["shadow_sigma"],
+                                           k_shadow, cfg, user_chunk)
         snr = channel.sample_snr(k_snr, dist, cfg, shadow_db=shadow_db)
         coeff = channel.bandwidth_time_coeff(snr, cfg)
         u = jax.random.uniform(k_tc, (cfg.n_users,))
@@ -339,13 +408,14 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                                    "batch_size", "lr", "eval_every",
                                    "backend", "fedavg_backend", "compute",
                                    "select_cap", "aggregation", "tau_global",
-                                   "n_models"))
+                                   "user_chunk", "n_models"))
 def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                      x_test, y_test, *, cfg: WirelessConfig, n_rounds: int,
                      minp: int, epochs: int, batch_size: int, lr: float,
                      eval_every: int, backend: str, fedavg_backend: str,
                      compute: str, select_cap, aggregation: str,
-                     tau_global: int, n_models: int) -> dict:
+                     tau_global: int, user_chunk: int | None,
+                     n_models: int) -> dict:
     """All scenarios of one shape bucket x all seeds, one compiled call.
 
     ``x_c``/``y_c``/``w0`` carry a leading seed axis (per-seed Non-IID
@@ -358,7 +428,7 @@ def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                   eval_every=eval_every, backend=backend,
                   fedavg_backend=fedavg_backend, compute=compute,
                   select_cap=select_cap, aggregation=aggregation,
-                  tau_global=tau_global)
+                  tau_global=tau_global, user_chunk=user_chunk)
 
     def per_scenario(p):
         return jax.vmap(lambda k, xc, yc, w: run(p, k, xc, yc, w,
@@ -394,6 +464,107 @@ def _resolve_aggregation(spec: ScenarioSpec, aggregation: str | None,
     return agg, DEFAULT_TAU_GLOBAL
 
 
+def _learning_buckets(specs: Sequence[ScenarioSpec], base: WirelessConfig,
+                      aggregation: str | None, tau_global: int | None
+                      ) -> dict[tuple, list[tuple[int, ScenarioSpec]]]:
+    """Group (position, spec) by (n_users, n_bs, aggregation, tau) — the
+    learning sweep's compile-bucket key (hierarchical buckets carry extra
+    scan state, so they must not share a trace with single-tier ones)."""
+    buckets: dict[tuple, list[tuple[int, ScenarioSpec]]] = {}
+    for pos, spec in enumerate(specs):
+        w = spec.wireless(base)
+        agg, tau = _resolve_aggregation(spec, aggregation, tau_global)
+        buckets.setdefault((w.n_users, w.n_bs, agg, tau), []).append(
+            (pos, spec))
+    return buckets
+
+
+def _learning_seed_inputs(data, cnn_cfg, k_part, k_init, n_seeds: int,
+                          n_users: int, shards_per_user: int):
+    """Per-seed Non-IID partitions + model inits, [seeds, ...] stacked.
+
+    Shared across scenarios within a bucket (paired seeds) and across the
+    single-device / device-sharded sweep paths."""
+    from repro.fl.partition import shard_partition
+    from repro.models import cnn
+
+    pkeys = jax.random.split(k_part, n_seeds)
+    ikeys = jax.random.split(k_init, n_seeds)
+    idx = jax.vmap(partial(shard_partition, labels=data.y_train,
+                           n_users=n_users,
+                           shards_per_user=shards_per_user))(pkeys)
+    x_c, y_c = data.x_train[idx], data.y_train[idx]  # [seeds, N, n_i, ...]
+    w0 = jax.vmap(lambda k: cnn.init(k, cnn_cfg))(ikeys)
+    return x_c, y_c, w0
+
+
+def _learning_records(group: list[tuple[int, ScenarioSpec]], outs: dict,
+                      n_seeds: int, n_rounds: int, dataset: str, agg: str,
+                      tau: int) -> dict[int, dict]:
+    """[S, seeds, R] learning-bucket outputs -> per-scenario record dicts.
+
+    Shared by ``run_learning_sweep`` and
+    ``shard_sweep.run_shard_learning_sweep`` (byte-identical JSON)."""
+    import warnings
+
+    t_round = np.asarray(outs["t_round"])            # [S, seeds, R]
+    n_sel = np.asarray(outs["n_selected"])
+    acc = np.asarray(outs["test_acc"])
+    hand = (np.asarray(outs["handover_rate"])
+            if "handover_rate" in outs else None)
+    wall = np.cumsum(t_round, axis=-1)
+    records: dict[int, dict] = {}
+    for i, (pos, spec) in enumerate(group):
+        finals = []                      # last evaluated acc per seed
+        at_budget = []                   # paper metric per seed
+        budget = float(wall[i, :, -1].mean()) / 2.0
+        for s in range(n_seeds):
+            finite = np.isfinite(acc[i, s])
+            finals.append(acc[i, s][finite][-1] if finite.any()
+                          else np.nan)
+            in_budget = finite & (wall[i, s] <= budget)
+            at_budget.append(acc[i, s][in_budget].max()
+                             if in_budget.any() else np.nan)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            acc_curve = np.nanmean(acc[i], axis=0)
+            at_budget_mean = float(np.nanmean(at_budget))
+            final_mean = float(np.nanmean(finals))
+            final_std = float(np.nanstd(finals))
+        records[pos] = {
+            "scenario": spec.name,
+            "mobility": spec.mobility,
+            "speed_mps": spec.speed_mps,
+            "dataset": dataset,
+            "aggregation": agg,
+            "tau_global": tau,
+            "n_seeds": n_seeds,
+            "n_rounds": n_rounds,
+            "final_acc_mean": _scalar_or_none(final_mean),
+            "final_acc_std": _scalar_or_none(final_std),
+            "wall_clock_mean_s": float(wall[i, :, -1].mean()),
+            "acc_at_budget": {"budget_s": budget,
+                              "acc_mean": _scalar_or_none(
+                                  at_budget_mean)},
+            "curves": {
+                "wall_clock_s": wall[i].mean(axis=0).tolist(),
+                "test_acc": _finite_or_none(acc_curve),
+                "t_round_s": t_round[i].mean(axis=0).tolist(),
+                "n_selected": n_sel[i].mean(axis=0).tolist(),
+            },
+            "seed_curves": {
+                "wall_clock_s": wall[i].tolist(),
+                "test_acc": [_finite_or_none(acc[i, s])
+                             for s in range(n_seeds)],
+            },
+        }
+        if hand is not None:
+            records[pos]["handover_rate_mean"] = float(hand[i].mean())
+            records[pos]["curves"]["handover_rate"] = \
+                hand[i].mean(axis=0).tolist()
+    return records
+
+
 def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                        n_seeds: int = 2, n_rounds: int = 10,
                        cfg: WirelessConfig | None = None,
@@ -405,6 +576,7 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                        compute: str = "full", select_cap: int | None = None,
                        aggregation: str | None = None,
                        tau_global: int | None = None,
+                       user_chunk: int | None = None,
                        seed: int = 0) -> list[dict]:
     """Accuracy-vs-simulated-wall-clock curves, one record per scenario.
 
@@ -419,10 +591,7 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     schema; hierarchical records additionally carry ``tau_global``,
     ``handover_rate_mean`` and a ``handover_rate`` curve.
     """
-    import warnings
-
     from repro.data import make_dataset
-    from repro.fl.partition import shard_partition
     from repro.models import cnn
 
     specs = [get_scenario(s) if isinstance(s, str) else s for s in scenarios]
@@ -431,26 +600,16 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     h, wd, c = data.x_train.shape[1:]
     cnn_cfg = cnn.CNNConfig(height=h, width=wd, channels=c)
 
-    buckets: dict[tuple, list[tuple[int, ScenarioSpec]]] = {}
-    for pos, spec in enumerate(specs):
-        w = spec.wireless(base)
-        agg, tau = _resolve_aggregation(spec, aggregation, tau_global)
-        buckets.setdefault((w.n_users, w.n_bs, agg, tau), []).append(
-            (pos, spec))
-
     k_cells, k_part, k_init = jax.random.split(jax.random.PRNGKey(seed), 3)
     seed_keys = jax.random.split(k_cells, n_seeds)   # paired across scenarios
     records: dict[int, dict] = {}
+    buckets = _learning_buckets(specs, base, aggregation, tau_global)
     for (n_users, n_bs, agg, tau), group in buckets.items():
+        _check_user_chunk(user_chunk, n_users)
         bcfg = dataclasses.replace(base, n_bs=n_bs)
         minp = int(np.ceil(bcfg.rho2 * n_users))
-        pkeys = jax.random.split(k_part, n_seeds)
-        ikeys = jax.random.split(k_init, n_seeds)
-        idx = jax.vmap(partial(shard_partition, labels=data.y_train,
-                               n_users=n_users,
-                               shards_per_user=shards_per_user))(pkeys)
-        x_c, y_c = data.x_train[idx], data.y_train[idx]  # [seeds, N, n_i, ..]
-        w0 = jax.vmap(lambda k: cnn.init(k, cnn_cfg))(ikeys)
+        x_c, y_c, w0 = _learning_seed_inputs(
+            data, cnn_cfg, k_part, k_init, n_seeds, n_users, shards_per_user)
         params = _scenario_params([s for _, s in group], bcfg)
         outs = _learning_bucket(
             params, seed_keys, x_c, y_c, w0, data.x_test, data.y_test,
@@ -458,61 +617,9 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
             batch_size=batch_size, lr=float(lr), eval_every=eval_every,
             backend=backend, fedavg_backend=fedavg_backend, compute=compute,
             select_cap=select_cap, aggregation=agg, tau_global=tau,
-            n_models=len(mobility.MOBILITY_MODELS))
-        t_round = np.asarray(outs["t_round"])            # [S, seeds, R]
-        n_sel = np.asarray(outs["n_selected"])
-        acc = np.asarray(outs["test_acc"])
-        hand = (np.asarray(outs["handover_rate"])
-                if "handover_rate" in outs else None)
-        wall = np.cumsum(t_round, axis=-1)
-        for i, (pos, spec) in enumerate(group):
-            finals = []                      # last evaluated acc per seed
-            at_budget = []                   # paper metric per seed
-            budget = float(wall[i, :, -1].mean()) / 2.0
-            for s in range(n_seeds):
-                finite = np.isfinite(acc[i, s])
-                finals.append(acc[i, s][finite][-1] if finite.any()
-                              else np.nan)
-                in_budget = finite & (wall[i, s] <= budget)
-                at_budget.append(acc[i, s][in_budget].max()
-                                 if in_budget.any() else np.nan)
-            with warnings.catch_warnings():
-                warnings.simplefilter("ignore", RuntimeWarning)
-                acc_curve = np.nanmean(acc[i], axis=0)
-                at_budget_mean = float(np.nanmean(at_budget))
-                final_mean = float(np.nanmean(finals))
-                final_std = float(np.nanstd(finals))
-            records[pos] = {
-                "scenario": spec.name,
-                "mobility": spec.mobility,
-                "speed_mps": spec.speed_mps,
-                "dataset": dataset,
-                "aggregation": agg,
-                "tau_global": tau,
-                "n_seeds": n_seeds,
-                "n_rounds": n_rounds,
-                "final_acc_mean": _scalar_or_none(final_mean),
-                "final_acc_std": _scalar_or_none(final_std),
-                "wall_clock_mean_s": float(wall[i, :, -1].mean()),
-                "acc_at_budget": {"budget_s": budget,
-                                  "acc_mean": _scalar_or_none(
-                                      at_budget_mean)},
-                "curves": {
-                    "wall_clock_s": wall[i].mean(axis=0).tolist(),
-                    "test_acc": _finite_or_none(acc_curve),
-                    "t_round_s": t_round[i].mean(axis=0).tolist(),
-                    "n_selected": n_sel[i].mean(axis=0).tolist(),
-                },
-                "seed_curves": {
-                    "wall_clock_s": wall[i].tolist(),
-                    "test_acc": [_finite_or_none(acc[i, s])
-                                 for s in range(n_seeds)],
-                },
-            }
-            if hand is not None:
-                records[pos]["handover_rate_mean"] = float(hand[i].mean())
-                records[pos]["curves"]["handover_rate"] = \
-                    hand[i].mean(axis=0).tolist()
+            user_chunk=user_chunk, n_models=len(mobility.MOBILITY_MODELS))
+        records.update(_learning_records(group, outs, n_seeds, n_rounds,
+                                         dataset, agg, tau))
     return [records[i] for i in range(len(specs))]
 
 
@@ -527,6 +634,18 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--backend", default="jax", choices=("jax", "pallas"))
     ap.add_argument("--seed", type=int, default=0, help="PRNG root seed")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the seeds x scenarios grid over a (data,) "
+                         "device mesh (repro.launch.shard_sweep); output is "
+                         "bit-identical to the single-device sweep")
+    ap.add_argument("--mesh", type=int, default=None, metavar="D",
+                    help="data-mesh size for --shard (default: every "
+                         "visible device; force host devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=D)")
+    ap.add_argument("--user-chunk", type=int, default=None, metavar="B",
+                    help="compute per-user channel tensors in blocks of B "
+                         "users (bounds the O(N*M*F) shadowing "
+                         "intermediates; must divide n_users)")
     ap.add_argument("--out", default="-",
                     help="output path for the JSON list ('-' = stdout)")
     ap.add_argument("--learning", action="store_true",
@@ -554,22 +673,36 @@ def main() -> None:
 
     names = list(SCENARIOS) if args.scenarios == "all" \
         else args.scenarios.split(",")
+    if args.mesh is not None and not args.shard:
+        ap.error("--mesh only applies with --shard; it would silently "
+                 "do nothing")
+    if args.shard:
+        # local import: shard_sweep imports this module's cell functions
+        from repro.launch import shard_sweep
+        learning_fn = partial(shard_sweep.run_shard_learning_sweep,
+                              n_devices=args.mesh)
+        wireless_fn = partial(shard_sweep.run_shard_sweep,
+                              n_devices=args.mesh)
+    else:
+        learning_fn, wireless_fn = run_learning_sweep, run_sweep
     if args.learning:
-        records = run_learning_sweep(
+        records = learning_fn(
             names, n_seeds=args.seeds, n_rounds=args.rounds,
             dataset=args.dataset, n_train=args.n_train, n_test=args.n_test,
             local_epochs=args.local_epochs, batch_size=args.batch_size,
             lr=args.lr, eval_every=args.eval_every, backend=args.backend,
             fedavg_backend=args.fedavg_backend, compute=args.compute,
             select_cap=args.select_cap, aggregation=args.aggregation,
-            tau_global=args.tau_global, seed=args.seed)
+            tau_global=args.tau_global, user_chunk=args.user_chunk,
+            seed=args.seed)
         summary = " ".join(
             f"{r['scenario']}="
             f"{r['final_acc_mean']:.3f}" if r["final_acc_mean"] is not None
             else f"{r['scenario']}=n/a" for r in records)
     else:
-        records = run_sweep(names, n_seeds=args.seeds, n_rounds=args.rounds,
-                            backend=args.backend, seed=args.seed)
+        records = wireless_fn(names, n_seeds=args.seeds,
+                              n_rounds=args.rounds, backend=args.backend,
+                              user_chunk=args.user_chunk, seed=args.seed)
         summary = " ".join(f"{r['scenario']}={r['t_round_mean_s']:.3f}s"
                            for r in records)
     payload = json.dumps(records, indent=2)

@@ -121,10 +121,10 @@ def sgd_train_step(params, cfg: ModelConfig, batch, lr: float = 1e-2):
 
         def acc_body(carry, mb):
             g_sum, l_sum = carry
-            (l, _), g = grad_fn(params, mb)
+            (loss, _), g = grad_fn(params, mb)
             g_sum = jax.tree.map(
                 lambda s, x: s + x.astype(jnp.float32), g_sum, g)
-            return (g_sum, l_sum + l), None
+            return (g_sum, l_sum + loss), None
 
         g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         (g_sum, l_sum), _ = jax.lax.scan(acc_body, (g0, 0.0), micro)

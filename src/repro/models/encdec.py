@@ -12,7 +12,6 @@ RoPE — so encoder/decoder use a no-rope attention path via cfg copy).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
@@ -138,7 +137,6 @@ def init_cache(cfg: ModelConfig, b: int, s: int, s_enc: int) -> PyTree:
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos):
     """One decoder token against cached self-attn KV + encoder memory."""
-    b = token.shape[0]
     x = layers.embed_apply(params["embed"], token)
     # absolute position embedding for the current index
     posemb = _sinusoidal(cache["k"].shape[2], cfg.d_model)

@@ -15,7 +15,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention, blocks, layers
+from repro.models import blocks, layers
 from repro.models.config import ModelConfig
 
 PyTree = Any

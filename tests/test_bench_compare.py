@@ -1,0 +1,168 @@
+"""The benchmark-regression gate: tolerance logic, file plumbing, CLI.
+
+No benches run here — everything goes through synthetic record lists and
+tmp-dir baseline/candidate files, including the injected-regression case
+the acceptance criteria call for.
+"""
+import copy
+import json
+
+import pytest
+
+from benchmarks.compare import (SPECS, BenchSpec, Metric, compare_records,
+                                main, run_compare)
+
+HFL = SPECS["hfl"]
+
+
+def _hfl_records():
+    return [
+        {"bench": "hfl", "scenario": "paper-default", "variant": "single",
+         "setting": "quick", "us_per_round": 9000.0,
+         "speedup_vs_single": 1.0, "final_acc": 0.8,
+         "handover_rate_mean": None},
+        {"bench": "hfl", "scenario": "paper-default", "variant": "hier_tau5",
+         "setting": "quick", "us_per_round": 8500.0,
+         "speedup_vs_single": 1.1, "final_acc": 0.75,
+         "handover_rate_mean": 0.2},
+    ]
+
+
+# ------------------------------------------------------------- tolerances ---
+def test_identical_records_pass():
+    recs = _hfl_records()
+    failures, warnings = compare_records(recs, copy.deepcopy(recs), HFL)
+    assert failures == []
+    assert warnings == []
+
+
+def test_injected_regression_fails():
+    cand = _hfl_records()
+    cand[0]["us_per_round"] *= 10            # way past the 1.5 rel_tol
+    failures, _ = compare_records(_hfl_records(), cand, HFL)
+    assert len(failures) == 1
+    assert "us_per_round" in failures[0] and "regressed" in failures[0]
+
+
+def test_within_tolerance_noise_passes():
+    cand = _hfl_records()
+    cand[0]["us_per_round"] *= 1.4           # inside the 1.5 rel_tol
+    cand[1]["speedup_vs_single"] = 0.9       # drop 0.2 < 0.44 slack
+    failures, _ = compare_records(_hfl_records(), cand, HFL)
+    assert failures == []
+
+
+def test_one_sided_improvement_warns_not_fails():
+    cand = _hfl_records()
+    cand[1]["speedup_vs_single"] = 2.0       # way past the 0.44 slack, up
+    failures, warnings = compare_records(_hfl_records(), cand, HFL)
+    assert failures == []
+    assert any("stale" in w for w in warnings)
+
+
+def test_accuracy_gates_on_absolute_drop():
+    cand = _hfl_records()
+    cand[0]["final_acc"] = 0.6               # -0.2 < abs_tol 0.15
+    failures, _ = compare_records(_hfl_records(), cand, HFL)
+    assert any("final_acc" in f for f in failures)
+    cand = _hfl_records()
+    cand[0]["final_acc"] = 0.7               # -0.1 within abs_tol
+    failures, _ = compare_records(_hfl_records(), cand, HFL)
+    assert failures == []
+
+
+def test_missing_record_fails_extra_warns():
+    base, cand = _hfl_records(), _hfl_records()
+    dropped = cand.pop(0)
+    failures, _ = compare_records(base, cand, HFL)
+    assert any("missing" in f for f in failures)
+    extra = dict(dropped, variant="hier_tau9")
+    failures, warnings = compare_records(base, _hfl_records() + [extra], HFL)
+    assert failures == []
+    assert any("no baseline" in w for w in warnings)
+
+
+def test_metric_going_null_fails():
+    cand = _hfl_records()
+    cand[1]["speedup_vs_single"] = None
+    failures, _ = compare_records(_hfl_records(), cand, HFL)
+    assert any("speedup_vs_single" in f for f in failures)
+    # null on BOTH sides is fine (e.g. single-tier handover_rate_mean)
+    spec = BenchSpec(file="x.json", only="hfl", bench="hfl",
+                     key=("variant",),
+                     metrics=(Metric("handover_rate_mean", "higher_better",
+                                     abs_tol=0.5),))
+    failures, _ = compare_records(_hfl_records(), _hfl_records(), spec)
+    assert failures == []
+
+
+def test_baseline_predating_metric_warns_not_fails():
+    base = _hfl_records()
+    for rec in base:
+        del rec["final_acc"]                 # snapshot predates the metric
+    failures, warnings = compare_records(base, _hfl_records(), HFL)
+    assert failures == []
+    assert any("ungated" in w for w in warnings)
+
+
+def test_metric_absent_from_record_kind_is_silent():
+    """bench_scheduling emits disjoint kinds (sched_call rows carry no
+    accuracy fields); a self-compare must be completely quiet."""
+    recs = [{"bench": "scheduling", "kind": "sched_call",
+             "setting": "quick", "scheduler": "rs", "dataset": None,
+             "us_per_call": 100.0}]
+    failures, warnings = compare_records(recs, copy.deepcopy(recs),
+                                         SPECS["scheduling"])
+    assert failures == []
+    assert warnings == []
+
+
+def test_metric_requires_a_tolerance():
+    with pytest.raises(ValueError, match="slack"):
+        Metric("rounds_per_sec", "lower_better")
+    with pytest.raises(ValueError, match="direction"):
+        Metric("rounds_per_sec", "sideways", rel_tol=0.5)
+
+
+def test_looser_of_rel_and_abs_tol_wins():
+    m = Metric("x", "higher_better", rel_tol=0.5, abs_tol=0.4)
+    assert m.slack(0.1) == pytest.approx(0.4)      # abs floor near zero
+    assert m.slack(10.0) == pytest.approx(5.0)     # rel dominates at scale
+
+
+# ---------------------------------------------------------- file plumbing ---
+def _write(path, records):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(records))
+
+
+def test_run_compare_and_cli_roundtrip(tmp_path):
+    cands, bases = tmp_path / "cand", tmp_path / "base"
+    _write(cands / HFL.file, _hfl_records())
+    # no baseline yet -> failure pointing at --refresh
+    failures, _ = run_compare(["hfl"], cands, bases, log=lambda *a: None)
+    assert any("--refresh" in f for f in failures)
+    # refresh writes it; the gate then passes through the CLI too
+    failures, _ = run_compare(["hfl"], cands, bases, refresh=True,
+                              log=lambda *a: None)
+    assert failures == []
+    assert json.loads((bases / HFL.file).read_text()) == _hfl_records()
+    argv = ["--benches", "hfl", "--candidates", str(cands),
+            "--baselines", str(bases)]
+    assert main(argv) == 0
+    # injected regression flips the exit code
+    doctored = _hfl_records()
+    doctored[0]["speedup_vs_single"] = 0.01
+    _write(cands / HFL.file, doctored)
+    assert main(argv) == 1
+
+
+def test_cli_rejects_unknown_bench(tmp_path):
+    with pytest.raises(SystemExit):
+        main(["--benches", "nope", "--candidates", str(tmp_path)])
+
+
+def test_specs_cover_all_extracted_files():
+    """Every gated file name matches what CI extracts + commits."""
+    assert {s.file for s in SPECS.values()} == {
+        "BENCH_fl.json", "BENCH_scheduling.json", "BENCH_hfl.json"}

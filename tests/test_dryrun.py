@@ -8,12 +8,11 @@ and the HLO collective parser.
 import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.launch import sharding
 from repro.launch.mesh import smoke_mesh
 from repro.models import api

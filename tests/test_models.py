@@ -6,7 +6,6 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import api, lm, moe as moe_mod, ssm
-from repro.models.config import ModelConfig
 
 KEY = jax.random.PRNGKey(0)
 

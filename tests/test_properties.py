@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from _hypothesis_fallback import given, settings, st
 
-from repro.core import WirelessConfig, bandwidth, channel, mobility, schedule
+from repro.core import WirelessConfig, bandwidth, mobility, schedule
 from repro.core.baselines import fedcs_schedule, sa_schedule
 from repro.core.latency import round_latency
 from repro.core.scheduler import SCHEDULERS

@@ -1,6 +1,5 @@
 """Roofline report unit tests: extrapolation math, param counts, tuned cfg."""
 import numpy as np
-import pytest
 
 from repro.launch.tuned import overrides_for
 from repro.roofline import report

@@ -1,0 +1,220 @@
+"""Device-sharded sweep engine: parity, padding, mesh plumbing.
+
+The bit-identity contract: ``shard_sweep`` routes every grid cell through
+the SAME per-cell scan as the single-device sweep, so curves and schedules
+must match byte-for-byte, padding corners included.  Single-mesh variants
+run at any device count (the shard_map/padding machinery is exercised even
+on one device); the ``needs 8 devices`` tests are the CI multi-device
+matrix leg (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel, mobility
+from repro.core.dagsa_jit import dagsa_schedule_batch, stack_problems
+from repro.core.types import WirelessConfig
+from repro.launch.mesh import make_data_mesh
+from repro.launch.shard_sweep import (run_shard_learning_sweep,
+                                      run_shard_sweep, shard_schedule_batch)
+from repro.launch.sharding import pad_leading, padded_count, unpad_leading
+from repro.launch.sweep import run_learning_sweep, run_sweep
+
+N_DEV = jax.device_count()
+
+multi_device = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+# one shape bucket (default n_users/n_bs), three mobility behaviours
+THREE_SCENARIOS = ["paper-default", "high-mobility", "static"]
+
+LEARN_KW = dict(n_rounds=2, n_train=400, n_test=32, local_epochs=1,
+                batch_size=4)
+
+
+def _same(a, b):
+    """Byte-level record equality (the contract CI's diff step relies on)."""
+    return json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+# ----------------------------------------------------------------- padding --
+def test_padded_count():
+    assert padded_count(15, 8) == 16
+    assert padded_count(16, 8) == 16
+    assert padded_count(1, 8) == 8
+    assert padded_count(7, 1) == 7
+    with pytest.raises(ValueError):
+        padded_count(0, 8)
+    with pytest.raises(ValueError):
+        padded_count(8, 0)
+
+
+def test_pad_leading_wraps_cyclically():
+    tree = {"a": jnp.arange(5), "b": jnp.arange(10).reshape(5, 2)}
+    padded = pad_leading(tree, 8)
+    assert padded["a"].shape == (8,)
+    assert padded["b"].shape == (8, 2)
+    # wrapped tail repeats from the start, so padded cells recompute
+    # real cells
+    np.testing.assert_array_equal(np.asarray(padded["a"]), [0, 1, 2, 3, 4,
+                                                            0, 1, 2])
+    restored = unpad_leading(padded, 5)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(restored["b"]),
+                                  np.asarray(tree["b"]))
+
+
+def test_pad_leading_noop_when_exact():
+    x = jnp.arange(4)
+    assert pad_leading(x, 4) is x
+
+
+# -------------------------------------------------------------------- mesh --
+def test_make_data_mesh_validates():
+    mesh = make_data_mesh(1)
+    assert mesh.axis_names == ("data",)
+    assert mesh.devices.size == 1
+    with pytest.raises(ValueError):
+        make_data_mesh(0)
+    with pytest.raises(RuntimeError):
+        make_data_mesh(N_DEV + 1)
+
+
+# -------------------------------------------------------- wireless parity ---
+def test_shard_sweep_matches_unsharded_any_devices():
+    """Uneven grid (2x3 cells) through shard_sweep == run_sweep, on
+    whatever mesh this machine offers."""
+    kw = dict(n_seeds=3, n_rounds=2)
+    plain = run_sweep(["paper-default", "high-mobility"], **kw)
+    sharded = run_shard_sweep(["paper-default", "high-mobility"], **kw)
+    assert _same(plain, sharded)
+
+
+@multi_device
+def test_shard_sweep_uneven_grid_8dev():
+    """The padding corner from the issue: 3 scenarios x 5 seeds = 15 cells
+    pad to 16 on 8 devices — still bit-identical."""
+    kw = dict(n_seeds=5, n_rounds=2)
+    plain = run_sweep(THREE_SCENARIOS, **kw)
+    sharded = run_shard_sweep(THREE_SCENARIOS, **kw,
+                              mesh=make_data_mesh(8))
+    assert _same(plain, sharded)
+
+
+@multi_device
+def test_shard_sweep_acceptance_grid_8dev():
+    """The CI acceptance command's grid: 2 scenarios x 8 seeds x 3 rounds."""
+    kw = dict(n_seeds=8, n_rounds=3)
+    plain = run_sweep(["paper-default", "high-mobility"], **kw)
+    sharded = run_shard_sweep(["paper-default", "high-mobility"], **kw)
+    assert _same(plain, sharded)
+
+
+@multi_device
+def test_shard_sweep_smaller_mesh_same_answer():
+    """Mesh size is a pure execution detail: 2-device and 8-device meshes
+    agree with each other (and with the unsharded path, above)."""
+    kw = dict(n_seeds=3, n_rounds=2)
+    on2 = run_shard_sweep(["paper-default"], **kw, mesh=make_data_mesh(2))
+    on8 = run_shard_sweep(["paper-default"], **kw, mesh=make_data_mesh(8))
+    assert _same(on2, on8)
+
+
+# ------------------------------------------------------------- user chunk ---
+def test_user_chunk_bit_identical():
+    """Chunked channel-tensor construction must not move a single bit —
+    shadowed scenario so the chunked shadowing path is actually on."""
+    kw = dict(n_seeds=2, n_rounds=2)
+    n_users = WirelessConfig().n_users
+    full = run_sweep(["shadowed"], **kw)
+    chunked = run_sweep(["shadowed"], **kw, user_chunk=n_users // 2)
+    assert _same(full, chunked)
+    shard_chunked = run_shard_sweep(["shadowed"], **kw,
+                                    user_chunk=n_users // 2)
+    assert _same(full, shard_chunked)
+
+
+def test_user_chunk_must_divide():
+    with pytest.raises(ValueError, match="must divide"):
+        run_sweep(["paper-default"], n_seeds=1, n_rounds=1, user_chunk=7)
+    with pytest.raises(ValueError, match="must divide"):
+        run_shard_sweep(["paper-default"], n_seeds=1, n_rounds=1,
+                        user_chunk=7)
+
+
+# -------------------------------------------------------- learning parity ---
+@multi_device
+def test_shard_learning_sweep_bit_identical():
+    kw = dict(n_seeds=3, **LEARN_KW)
+    plain = run_learning_sweep(["paper-default"], **kw)
+    sharded = run_shard_learning_sweep(["paper-default"], **kw)
+    assert _same(plain, sharded)
+
+
+@multi_device
+def test_shard_learning_sweep_hierarchical_bit_identical():
+    kw = dict(n_seeds=2, **LEARN_KW)
+    plain = run_learning_sweep(["hfl-default"], **kw)
+    sharded = run_shard_learning_sweep(["hfl-default"], **kw)
+    assert _same(plain, sharded)
+
+
+# --------------------------------------------------- fleet-axis scheduler ---
+def _fleet_problems(n: int):
+    cfg = WirelessConfig()
+    key = jax.random.PRNGKey(0)
+    probs = []
+    for s in range(n):
+        k0, k1 = jax.random.split(jax.random.fold_in(key, s))
+        st = mobility.init_positions_grid_bs(k0, cfg)
+        # one prior participation each so the greedy does real work
+        probs.append(channel.make_problem(k1, st, cfg,
+                                          jnp.ones((cfg.n_users,)), 0))
+    return stack_problems(probs)
+
+
+def test_shard_schedule_batch_matches_batch():
+    """Fleet of 5 (uneven vs any mesh) through the sharded batch ==
+    dagsa_schedule_batch, field for field."""
+    stacked = _fleet_problems(5)
+    keys = jax.random.split(jax.random.PRNGKey(1), 5)
+    ref = dagsa_schedule_batch(stacked, keys)
+    out = shard_schedule_batch(stacked, keys)
+    for field in ("assign", "selected", "bw", "bs_time", "t_round"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, field)),
+                                      np.asarray(getattr(out, field)),
+                                      err_msg=field)
+
+
+@multi_device
+def test_shard_schedule_batch_8dev():
+    stacked = _fleet_problems(11)          # pads 11 -> 16 on 8 devices
+    keys = jax.random.split(jax.random.PRNGKey(2), 11)
+    ref = dagsa_schedule_batch(stacked, keys)
+    out = shard_schedule_batch(stacked, keys, mesh=make_data_mesh(8))
+    for field in ("assign", "selected", "bw", "bs_time", "t_round"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, field)),
+                                      np.asarray(getattr(out, field)),
+                                      err_msg=field)
+
+
+# ------------------------------------------------------------ fl_sim shard --
+def test_flconfig_mesh_devices_requires_shard():
+    from repro.fl import FLConfig
+    with pytest.raises(ValueError, match="mesh_devices"):
+        FLConfig(mesh_devices=2)
+
+
+@multi_device
+def test_fl_sim_shard_rejects_indivisible_users():
+    from repro.fl import FLConfig, FLSimulation
+    # default world has 50 users; an 8-device mesh cannot split them evenly
+    with pytest.raises(ValueError, match="divisible"):
+        FLSimulation(FLConfig(scheduler="dagsa_jit", n_train=400,
+                              n_test=32, batch_size=4, shard=True,
+                              mesh_devices=8))

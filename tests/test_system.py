@@ -1,6 +1,5 @@
 """End-to-end behaviour tests for the whole system (control + data plane)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
