@@ -106,6 +106,20 @@ SPECS: dict[str, BenchSpec] = {
             Metric("us_per_round", _LOWER, rel_tol=1.50),
             Metric("final_acc", _HIGHER, abs_tol=0.15),
         )),
+    "faults": BenchSpec(
+        file="BENCH_faults.json", only="faults", bench="faults",
+        key=("scenario", "scheduler", "setting"),
+        metrics=(
+            # deterministic fused-scan trajectories: the dagsa-r vs dagsa
+            # delivered-rate ratio only moves if scheduling/fault semantics
+            # change — a tight absolute gate keeps "dagsa-r beats plain
+            # DAGSA where the hazard is per-user" from silently regressing
+            Metric("delivered_gain_vs_dagsa", _HIGHER, abs_tol=0.02),
+            Metric("delivered_rate_mean", _HIGHER, abs_tol=0.05),
+            Metric("final_acc", _HIGHER, abs_tol=0.15),
+            # raw wall-clock: catastrophic-regression guard only
+            Metric("us_per_round", _LOWER, rel_tol=1.50),
+        )),
 }
 
 

@@ -22,6 +22,8 @@ BENCHES = [
      "device-sharded sweep scaling"),
     ("fl", "benchmarks.bench_fl_rounds", "FL round engine rounds/sec"),
     ("hfl", "benchmarks.bench_hfl", "hierarchical vs single-tier FL"),
+    ("faults", "benchmarks.bench_faults",
+     "failure-aware scheduling under injected faults"),
     ("roofline", "benchmarks.bench_roofline", "dry-run roofline terms"),
 ]
 

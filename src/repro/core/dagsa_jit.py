@@ -178,13 +178,19 @@ def stack_problems(problems: Sequence[SchedulingProblem]) -> SchedulingProblem:
     mins = {int(p.min_participants) for p in problems}
     if len(mins) != 1:
         raise ValueError(f"fleet min_participants must agree, got {mins}")
+    have_p = [p.p_deliver is not None for p in problems]
+    if any(have_p) and not all(have_p):
+        raise ValueError("fleet p_deliver must be set on all problems or "
+                         "none")
     return SchedulingProblem(
         snr=jnp.stack([p.snr for p in problems]),
         tcomp=jnp.stack([p.tcomp for p in problems]),
         bs_bw=jnp.stack([p.bs_bw for p in problems]),
         coeff=jnp.stack([p.coeff for p in problems]),
         necessary=jnp.stack([p.necessary for p in problems]),
-        min_participants=mins.pop())
+        min_participants=mins.pop(),
+        p_deliver=(jnp.stack([p.p_deliver for p in problems])
+                   if all(have_p) else None))
 
 
 @partial(jax.jit, static_argnames=("min_participants", "method", "iters",

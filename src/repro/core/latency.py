@@ -1,7 +1,14 @@
-"""Round latency assembly — paper Eq. (3)-(5).
+"""Round latency assembly — paper Eq. (3)-(5), plus the deadline-truncated
+variant the fault model introduces.
 
 t_round = max_i a_i (tcomp_i + t_up_i);  t_up_i = c_{i,k(i)} / B_i.
 Download latency is negligible (paper §II-C) and omitted, matching Eq. (9).
+
+Under a round deadline T_dl (repro.fl.faults.FaultSpec.deadline_s) the
+server stops waiting: t_round = min(T_dl, max_i a_i (tcomp_i + t_up_i)),
+and clients whose realized latency exceeds T_dl are dropped from the
+aggregation rather than waited for (:func:`deadline_round_latency` /
+:func:`on_time`).
 """
 from __future__ import annotations
 
@@ -23,3 +30,29 @@ def round_latency(problem: SchedulingProblem,
     """Recompute Eq. (3) from first principles (cross-checks result.t_round)."""
     t_user = problem.tcomp + upload_latency(problem, result)
     return jnp.max(jnp.where(result.selected, t_user, 0.0))
+
+
+def per_user_latency(problem: SchedulingProblem, result: ScheduleResult,
+                     tcomp: jnp.ndarray | None = None) -> jnp.ndarray:
+    """[N] realized end-to-end latency of each scheduled user.
+
+    ``tcomp`` overrides the problem's nominal compute times with realized
+    ones (e.g. after the straggler multiplier); unscheduled users report
+    their compute time only (their upload latency is 0 by construction).
+    """
+    t_c = problem.tcomp if tcomp is None else tcomp
+    return t_c + upload_latency(problem, result)
+
+
+def deadline_round_latency(t_user: jnp.ndarray, selected: jnp.ndarray,
+                           deadline_s) -> jnp.ndarray:
+    """Deadline-truncated Eq. (3): the server waits for the slowest
+    scheduled client or the deadline, whichever comes first.  An empty
+    selection costs 0 (nothing to wait for); always <= deadline_s."""
+    slowest = jnp.max(jnp.where(selected, t_user, 0.0))
+    return jnp.minimum(slowest, deadline_s)
+
+
+def on_time(t_user: jnp.ndarray, deadline_s) -> jnp.ndarray:
+    """[N] bool: the user's update arrives before the server stops waiting."""
+    return t_user <= deadline_s

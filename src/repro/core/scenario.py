@@ -72,8 +72,17 @@ class ScenarioSpec:
     # -- FL aggregation architecture ---------------------------------------
     aggregation: str = "single"         # single | hierarchical
     tau_global: int = 1                 # global sync period (hierarchical)
+    # -- fault model -------------------------------------------------------
+    # A repro.fl.faults.FaultSpec (frozen/hashable) or None for the perfect
+    # world.  Typed loosely because fl.faults imports this module to
+    # register the faulty built-ins — the FL engine and sweeps resolve it.
+    faults: Optional[object] = None
 
     def __post_init__(self):
+        if self.faults is not None and not hasattr(self.faults, "active"):
+            raise ValueError(
+                "faults must be a repro.fl.faults.FaultSpec (or None), got "
+                f"{type(self.faults).__name__}")
         if self.mobility not in MOBILITY_MODELS:
             raise ValueError(f"unknown mobility model {self.mobility!r}; "
                              f"choose from {tuple(MOBILITY_MODELS)}")

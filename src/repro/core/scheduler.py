@@ -9,11 +9,11 @@ import jax.numpy as jnp
 from repro.core import baselines, dagsa
 from repro.core.types import ScheduleResult, SchedulingProblem, WirelessConfig
 
-SCHEDULERS = ("dagsa", "dagsa_jit", "rs", "ub", "fedcs_low", "fedcs_high",
-              "sa")
+SCHEDULERS = ("dagsa", "dagsa_jit", "dagsa-r", "dagsa-r-host", "rs", "ub",
+              "fedcs_low", "fedcs_high", "sa")
 
 # Schedulers with a fleet-batched entry point (see schedule_batch).
-BATCH_SCHEDULERS = ("dagsa_jit",)
+BATCH_SCHEDULERS = ("dagsa_jit", "dagsa-r")
 
 # FedCS time thresholds from paper §IV.
 FEDCS_LOW_S = 0.6
@@ -37,6 +37,26 @@ class ParticipationState:
             round_idx=self.round_idx + 1)
 
 
+def delivery_discounted(problem: SchedulingProblem) -> SchedulingProblem:
+    """The ``dagsa-r`` transform: scale each user's SNR row by its
+    estimated delivery probability.
+
+    DAGSA consumes SNR only as a *ranking* score (best-BS choice and
+    greedy candidate order; the latency math runs on ``coeff``), so
+    discounting the score by ``p_deliver`` makes the greedy prefer users
+    whose updates will actually arrive — expected-delivered-contribution
+    ordering — without touching the Eq. (11) bandwidth solve.  The per-user
+    scale leaves each user's argmax BS unchanged.  A problem without a
+    ``p_deliver`` estimate is returned as-is (dagsa-r == dagsa_jit in the
+    perfect world).
+    """
+    if problem.p_deliver is None:
+        return problem
+    p = jnp.clip(problem.p_deliver, 0.0, 1.0)
+    scaled = problem.snr * p[..., None]
+    return dataclasses.replace(problem, snr=scaled)
+
+
 def schedule(name: str, problem: SchedulingProblem, cfg: WirelessConfig,
              key: jax.Array, seed: int = 0) -> ScheduleResult:
     """Dispatch one round of scheduling by algorithm name."""
@@ -45,6 +65,11 @@ def schedule(name: str, problem: SchedulingProblem, cfg: WirelessConfig,
     if name == "dagsa_jit":
         from repro.core import dagsa_jit
         return dagsa_jit.dagsa_schedule_jit(problem, key)
+    if name == "dagsa-r":
+        from repro.core import dagsa_jit
+        return dagsa_jit.dagsa_schedule_jit(delivery_discounted(problem), key)
+    if name == "dagsa-r-host":
+        return dagsa.dagsa_schedule(delivery_discounted(problem), seed=seed)
     if name == "rs":
         return baselines.rs_schedule(problem, key, cfg.rho2)
     if name == "ub":
@@ -70,5 +95,11 @@ def schedule_batch(name: str, problems, keys: jax.Array,
     if name == "dagsa_jit":
         from repro.core import dagsa_jit
         return dagsa_jit.dagsa_schedule_batch(problems, keys, **kwargs)
+    if name == "dagsa-r":
+        from repro.core import dagsa_jit
+        if not isinstance(problems, SchedulingProblem):
+            problems = dagsa_jit.stack_problems(problems)
+        return dagsa_jit.dagsa_schedule_batch(delivery_discounted(problems),
+                                              keys, **kwargs)
     raise ValueError(f"unknown batch scheduler {name!r}; "
                      f"choose from {BATCH_SCHEDULERS}")

@@ -48,6 +48,10 @@ class SchedulingProblem:
               i.e. MHz*seconds needed to push the model through that link.
       necessary: [N] bool, users that MUST be scheduled to keep Eq. (8g).
       min_participants: int, N * rho2 ceil, Eq. (8h).
+      p_deliver: optional [N] estimated probability that a scheduled user's
+              update is actually delivered (outage/crash hazard, see
+              repro.fl.faults.delivery_probability).  None in the perfect
+              world; only failure-aware schedulers (``dagsa-r``) read it.
     """
 
     snr: jnp.ndarray
@@ -56,6 +60,7 @@ class SchedulingProblem:
     coeff: jnp.ndarray
     necessary: jnp.ndarray
     min_participants: int
+    p_deliver: jnp.ndarray | None = None
 
 
 @dataclasses.dataclass

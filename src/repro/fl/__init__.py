@@ -2,6 +2,8 @@
 and the mobility-aware round engine that couples the control plane (core/)
 to the data plane.  The engine runs fused (one ``lax.scan`` over rounds),
 per-round jitted, or eager — see :class:`repro.fl.rounds.FLSimulation`."""
+from repro.fl.faults import (FAULT_PRESETS, FaultSpec, NO_FAULTS,
+                             get_faults)
 from repro.fl.partition import shard_partition
 from repro.fl.rounds import (DEFAULT_TAU_GLOBAL, FLConfig, FLSimulation,
                              FUSED_SCHEDULERS, RoundRecord,
@@ -10,4 +12,5 @@ from repro.fl.rounds import (DEFAULT_TAU_GLOBAL, FLConfig, FLSimulation,
 
 __all__ = ["shard_partition", "FLConfig", "FLSimulation", "RoundRecord",
            "FUSED_SCHEDULERS", "DEFAULT_TAU_GLOBAL", "accuracy_at_budget",
-           "hierarchical_round", "train_and_aggregate"]
+           "hierarchical_round", "train_and_aggregate", "FaultSpec",
+           "FAULT_PRESETS", "NO_FAULTS", "get_faults"]

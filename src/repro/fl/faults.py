@@ -1,0 +1,288 @@
+"""Fault injection + failure-aware round semantics (robustness layer).
+
+The paper's premise is that *unreliable access caused by user mobility
+degrades training* — yet an idealized simulator delivers every scheduled
+update.  This module makes failure a first-class, traced citizen of the
+round engine: a declarative :class:`FaultSpec` rides on a
+:class:`~repro.core.scenario.ScenarioSpec` (or an
+:class:`~repro.fl.rounds.FLConfig`), and per-round fault realizations are
+sampled *inside* the fused ``lax.scan`` from the scan's own PRNG — no host
+callbacks, bit-reproducible, shard-invariant.
+
+Fault taxonomy (all independent per user per round):
+
+  * **uplink outage** — the update is lost in the air.  The hazard is
+    mobility-coupled: ``p = base + edge * (d_serv / r_cell) + handover``
+    (clipped to [0, 1]), where ``d_serv`` is the distance to the camped
+    (nearest) BS, ``r_cell = area / (2 sqrt(M))`` is the nominal cell
+    radius, and the handover term fires on users whose camped BS changed
+    this round — re-association is exactly when uplinks drop.
+  * **straggler** — the local computation time is multiplied by a
+    log-normal draw ``exp(sigma * N(0,1))`` (wireless-FL's standard
+    heavy-tailed compute model).  Interacts with the round deadline.
+  * **crash** — the client dies mid-round (uniform Bernoulli); its update
+    never reaches the server.
+  * **corrupted update** — the delivered parameters are poisoned: NaN,
+    Inf, or a large-norm scaling of the honest update.  Screened by the
+    server (see :func:`repro.fl.server.finite_update_mask` and the
+    ``clip_norm`` defense), so one poisoned client can never NaN the scan
+    carry.
+
+Graceful degradation (deadline semantics, Eq. (1)/(3) truncated): the
+server stops waiting at ``deadline_s`` — round latency becomes
+``min(deadline, slowest scheduled client)`` and late clients' updates are
+dropped, not waited for (:func:`repro.core.latency.deadline_round_latency`).
+If *every* scheduled client fails the previous global model carries forward
+(the Eq. (2) zero-total guard).
+
+Delivery-probability estimate (the ``dagsa-r`` scheduler's discount): the
+server can estimate, *before* scheduling, each user's probability of
+delivering from the geometry it already observes — outage hazard and crash
+rate, via :func:`delivery_probability`.  Stragglers/deadline are not in the
+estimate (they need the not-yet-decided bandwidth split); the discount is
+deliberately the cheap, causally-available part of the hazard.
+
+See docs/ROBUSTNESS.md for the authoring guide.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scenario import ScenarioSpec, register_scenario
+from repro.core.types import WirelessConfig
+
+# Corruption modes, lowered to an int id so a sweep can vary the mode
+# across scenarios inside one compiled bucket.
+CORRUPT_MODES = ("nan", "inf", "scale")
+_MODE_NAN, _MODE_INF, _MODE_SCALE = range(3)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Declarative per-round fault model (all plain hashable scalars).
+
+    Probabilities are per user per round; ``deadline_s=inf`` disables the
+    deadline; ``clip_norm=None`` disables the server's norm-clipping
+    defense.  A default-constructed spec (:data:`NO_FAULTS`) is inert: the
+    round engine detects ``active == False`` and compiles the exact
+    fault-free graph (no extra PRNG splits, bit-identical trajectories).
+    """
+
+    # -- mobility-coupled uplink outage hazard -----------------------------
+    outage_base: float = 0.0       # distance-independent loss floor
+    outage_edge: float = 0.0       # extra hazard at the nominal cell edge
+    outage_handover: float = 0.0   # extra hazard on a camped-BS change
+    # -- compute stragglers ------------------------------------------------
+    straggler_sigma: float = 0.0   # tcomp *= exp(sigma * N(0,1))
+    # -- hard failures -----------------------------------------------------
+    crash_prob: float = 0.0
+    # -- poisoned updates --------------------------------------------------
+    corrupt_prob: float = 0.0
+    corrupt_mode: str = "nan"      # nan | inf | scale
+    corrupt_scale: float = 1e3     # multiplier for mode="scale"
+    # -- server-side degradation / defenses --------------------------------
+    deadline_s: float = math.inf   # T_dl: server stops waiting here
+    clip_norm: Optional[float] = None  # L2 clip of (update - reference)
+
+    def __post_init__(self):
+        for f in ("outage_base", "outage_edge", "outage_handover",
+                  "crash_prob", "corrupt_prob"):
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{f} must be in [0, 1], got {v}")
+        if self.straggler_sigma < 0.0:
+            raise ValueError("straggler_sigma must be >= 0")
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(f"unknown corrupt_mode {self.corrupt_mode!r}; "
+                             f"choose from {CORRUPT_MODES}")
+        if not self.deadline_s > 0.0:
+            raise ValueError("deadline_s must be > 0 (inf disables)")
+        if self.clip_norm is not None and not self.clip_norm > 0.0:
+            raise ValueError("clip_norm must be > 0 (None disables)")
+
+    @property
+    def active(self) -> bool:
+        """Whether this spec changes round semantics at all.  The engine
+        keys its static graph choice on this, so an inert spec compiles
+        the exact fault-free computation (same PRNG splits)."""
+        return (self.outage_base > 0.0 or self.outage_edge > 0.0
+                or self.outage_handover > 0.0 or self.straggler_sigma > 0.0
+                or self.crash_prob > 0.0 or self.corrupt_prob > 0.0
+                or math.isfinite(self.deadline_s)
+                or self.clip_norm is not None)
+
+    def to_json(self) -> dict:
+        """Strict-JSON-safe dict (``inf`` deadline -> None) for records."""
+        d = dataclasses.asdict(self)
+        if not math.isfinite(d["deadline_s"]):
+            d["deadline_s"] = None
+        return d
+
+
+NO_FAULTS = FaultSpec()
+
+# Key order of :func:`fault_params` — the sweep's per-scenario lowering and
+# the traced samplers agree on names through this tuple.
+FAULT_PARAM_KEYS = ("outage_base", "outage_edge", "outage_handover",
+                    "straggler_sigma", "crash_prob", "corrupt_prob",
+                    "corrupt_mode_id", "corrupt_scale", "deadline_s",
+                    "clip_norm")
+
+
+def fault_params(spec: FaultSpec) -> dict:
+    """Lower a spec to the flat scalar dict the traced samplers consume.
+
+    The sweep stacks these per scenario into [S] arrays (the same lowering
+    pattern as ``_scenario_params``), so fault severity varies *inside* one
+    compiled bucket; the round engine passes the plain floats through as
+    trace constants.  ``clip_norm=None`` lowers to ``inf`` (a no-op scale).
+    """
+    return {
+        "outage_base": spec.outage_base,
+        "outage_edge": spec.outage_edge,
+        "outage_handover": spec.outage_handover,
+        "straggler_sigma": spec.straggler_sigma,
+        "crash_prob": spec.crash_prob,
+        "corrupt_prob": spec.corrupt_prob,
+        "corrupt_mode_id": CORRUPT_MODES.index(spec.corrupt_mode),
+        "corrupt_scale": spec.corrupt_scale,
+        "deadline_s": spec.deadline_s,
+        "clip_norm": math.inf if spec.clip_norm is None else spec.clip_norm,
+    }
+
+
+# ------------------------------------------------------- traced samplers --
+def nominal_cell_radius(cfg: WirelessConfig) -> float:
+    """Half the pitch of a sqrt(M) x sqrt(M) grid over the area (host
+    float): the distance at which the edge hazard saturates."""
+    return 0.5 * cfg.area_m / math.sqrt(cfg.n_bs)
+
+
+def edge_proximity(dist: jnp.ndarray, serving: jnp.ndarray,
+                   cfg: WirelessConfig) -> jnp.ndarray:
+    """[N] in [0, 1]: how close each user is to its camped cell's edge.
+
+    0 at the BS, 1 at (or beyond) the nominal cell radius — the normalized
+    abscissa of the outage hazard.
+    """
+    d_serv = jnp.take_along_axis(dist, serving[:, None], axis=1)[:, 0]
+    return jnp.clip(d_serv / nominal_cell_radius(cfg), 0.0, 1.0)
+
+
+def outage_probability(fp: dict, edge_frac: jnp.ndarray,
+                       handover: jnp.ndarray) -> jnp.ndarray:
+    """[N] per-user uplink outage probability this round."""
+    p = (fp["outage_base"] + fp["outage_edge"] * edge_frac
+         + fp["outage_handover"] * handover.astype(jnp.float32))
+    return jnp.clip(p, 0.0, 1.0)
+
+
+def delivery_probability(fp: dict, edge_frac: jnp.ndarray,
+                         handover: jnp.ndarray) -> jnp.ndarray:
+    """[N] estimated P(update delivered) from pre-scheduling observables.
+
+    Outage hazard (geometry + handover) and the crash rate; straggler /
+    deadline effects are excluded — they depend on the bandwidth split the
+    scheduler has not decided yet.  This is the ``dagsa-r`` discount.
+    """
+    return (1.0 - outage_probability(fp, edge_frac, handover)) \
+        * (1.0 - fp["crash_prob"])
+
+
+def sample_round_faults(key: jax.Array, fp: dict, edge_frac: jnp.ndarray,
+                        handover: jnp.ndarray, tcomp: jnp.ndarray):
+    """Realize one round's faults.  Returns ``(tcomp_eff, alive, corrupt)``:
+
+    * ``tcomp_eff`` [N] — compute latency with the log-normal straggler
+      multiplier applied,
+    * ``alive``     [N] bool — uplink survived (no outage, no crash),
+    * ``corrupt``   [N] bool — the delivered update is poisoned.
+
+    Exactly three independent Bernoulli draws + one normal, all from
+    ``key``; the caller owns the split discipline (the fused scan splits
+    one extra subkey per round iff faults are active).
+    """
+    k_strag, k_out, k_crash, k_corr = jax.random.split(key, 4)
+    mult = jnp.exp(fp["straggler_sigma"]
+                   * jax.random.normal(k_strag, tcomp.shape))
+    tcomp_eff = tcomp * mult
+    p_out = outage_probability(fp, edge_frac, handover)
+    outage = jax.random.uniform(k_out, tcomp.shape) < p_out
+    crash = jax.random.uniform(k_crash, tcomp.shape) < fp["crash_prob"]
+    corrupt = jax.random.uniform(k_corr, tcomp.shape) < fp["corrupt_prob"]
+    return tcomp_eff, ~(outage | crash), corrupt
+
+
+def corrupt_updates(client_params, corrupt: jnp.ndarray, mode_id,
+                    scale):
+    """Poison the flagged clients' parameter pytree ([N, ...] leaves).
+
+    ``mode_id``/``scale`` may be host scalars or traced (the sweep varies
+    them per scenario inside one compiled bucket): NaN / Inf overwrite the
+    update outright, "scale" multiplies it into a large-norm but finite
+    attack that only the ``clip_norm`` defense catches.
+    """
+    mode_id = jnp.asarray(mode_id)
+
+    def leaf(c):
+        flag = corrupt.reshape((-1,) + (1,) * (c.ndim - 1))
+        bad_const = jnp.where(mode_id == _MODE_INF, jnp.inf, jnp.nan)
+        poisoned = jnp.where(
+            mode_id == _MODE_SCALE,
+            (c.astype(jnp.float32) * scale).astype(c.dtype),
+            jnp.asarray(bad_const, c.dtype))
+        return jnp.where(flag, poisoned, c)
+
+    return jax.tree.map(leaf, client_params)
+
+
+# ------------------------------------------------------ presets / registry --
+FAULT_PRESETS: dict[str, FaultSpec] = {
+    "none": NO_FAULTS,
+    "faulty-uplink": FaultSpec(outage_base=0.05, outage_edge=0.5,
+                               outage_handover=0.4),
+    "straggler-heavy": FaultSpec(straggler_sigma=0.8, crash_prob=0.05,
+                                 deadline_s=1.5),
+    "adversarial-updates": FaultSpec(corrupt_prob=0.15, corrupt_mode="nan",
+                                     clip_norm=25.0),
+}
+
+
+def get_faults(name: str) -> FaultSpec:
+    try:
+        return FAULT_PRESETS[name]
+    except KeyError:
+        raise ValueError(f"unknown fault preset {name!r}; choose from "
+                         f"{tuple(FAULT_PRESETS)}") from None
+
+
+# Faulty worlds in the scenario registry — the paper-default world with one
+# fault preset switched on each, so every sweep/CLI can name them directly.
+_FAULT_SCENARIOS = (
+    ScenarioSpec(
+        name="faulty-uplink",
+        description="Paper-default world with mobility-coupled uplink "
+                    "outage: 5% floor, +50% hazard at the cell edge, +40% "
+                    "on handover.  The dagsa-r regime.",
+        speed_mps=50.0, faults=FAULT_PRESETS["faulty-uplink"]),
+    ScenarioSpec(
+        name="straggler-heavy",
+        description="Log-normal compute stragglers (sigma=0.8) + 5% "
+                    "crashes under a 1.5 s round deadline: late updates "
+                    "are dropped, not waited for.",
+        faults=FAULT_PRESETS["straggler-heavy"]),
+    ScenarioSpec(
+        name="adversarial-updates",
+        description="15% of delivered updates poisoned with NaNs; the "
+                    "server's finite-screening + norm-clip defenses keep "
+                    "the global model finite.",
+        faults=FAULT_PRESETS["adversarial-updates"]),
+)
+for _spec in _FAULT_SCENARIOS:
+    register_scenario(_spec)
+del _spec

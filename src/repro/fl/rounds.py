@@ -57,18 +57,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (MobilityState, ParticipationState, WirelessConfig,
-                        channel, mobility, scheduler as sched)
+                        channel, latency, mobility, scheduler as sched)
 from repro.core.scenario import AGGREGATIONS, get_scenario
 from repro.data import make_dataset
 from repro.fl import client as fl_client
+from repro.fl import faults as fl_faults
 from repro.fl import server as fl_server
 from repro.fl.partition import shard_partition
 from repro.models import cnn
 
 PyTree = Any
 
-# Schedulers whose round step traces (everything but the host-numpy greedy).
-FUSED_SCHEDULERS = ("dagsa_jit", "rs", "ub", "fedcs_low", "fedcs_high", "sa")
+# Schedulers whose round step traces (everything but the host-numpy
+# greedies; "dagsa-r-host" is the host-side parity twin of "dagsa-r").
+FUSED_SCHEDULERS = ("dagsa_jit", "dagsa-r", "rs", "ub", "fedcs_low",
+                    "fedcs_high", "sa")
 
 COMPUTE_MODES = ("full", "selected")
 FEDAVG_BACKENDS = ("jax", "pallas")
@@ -138,6 +141,14 @@ class FLConfig:
                                     # the FedAvg reduction order changes.
     mesh_devices: Optional[int] = None  # mesh size for shard (default: all
                                         # visible devices)
+    faults: Any = None              # fault model: a repro.fl.faults.FaultSpec,
+                                    # a FAULT_PRESETS name, or None to inherit
+                                    # the scenario's fault model (default: the
+                                    # perfect world).  docs/ROBUSTNESS.md
+    deadline_s: Optional[float] = None  # round deadline T_dl override (s);
+                                        # late clients are dropped, not
+                                        # waited for (deadline-truncated
+                                        # Eq. (3))
 
     def __post_init__(self):
         if self.compute not in COMPUTE_MODES:
@@ -155,6 +166,13 @@ class FLConfig:
         if self.mesh_devices is not None and not self.shard:
             raise ValueError("mesh_devices only applies with shard=True; "
                              "it would silently do nothing")
+        if self.deadline_s is not None and not self.deadline_s > 0.0:
+            raise ValueError("deadline_s must be > 0")
+        if (self.faults is not None and not isinstance(self.faults, str)
+                and not hasattr(self.faults, "active")):
+            raise ValueError(
+                "faults must be a repro.fl.faults.FaultSpec, a preset name, "
+                f"or None; got {type(self.faults).__name__}")
 
 
 @dataclasses.dataclass
@@ -168,13 +186,20 @@ class RoundRecord:
     handover_rate: float = float("nan")  # fraction of users whose serving
                                          # BS changed this round
                                          # (hierarchical runs only)
+    n_delivered: int = -1     # scheduled clients whose update arrived
+                              # (-1 when the fault layer is off)
+    delivered_rate: float = float("nan")   # n_delivered / n_selected
+    goodput_mbit_s: float = float("nan")   # delivered uplink Mbit per
+                                           # simulated second this round
 
 
 def train_and_aggregate(loss_fn, params: PyTree, x_clients, y_clients, keys,
                         selected, data_sizes, *, epochs: int, batch_size: int,
                         lr: float, compute: str = "full",
                         select_cap: int | None = None,
-                        fedavg_backend: str = "jax") -> PyTree:
+                        fedavg_backend: str = "jax",
+                        delivered=None, corrupt=None, corrupt_mode_id=0,
+                        corrupt_scale=1.0, clip_norm=None) -> PyTree:
     """One round of the data plane: local SGD + masked FedAvg (Eq. 2).
 
     ``compute="full"`` trains every client and masks at aggregation (the
@@ -183,6 +208,13 @@ def train_and_aggregate(loss_fn, params: PyTree, x_clients, y_clients, keys,
     keys travel with their original index, so a covering cap reproduces the
     full-fleet result exactly).  Shared by the round engine and the batched
     learning-curve sweep.
+
+    Fault layer: ``delivered`` ([N] bool) replaces ``selected`` as the
+    aggregation mask (scheduling decides who *trains*, delivery decides who
+    *aggregates*); ``corrupt`` ([N] bool) poisons those clients' updates
+    post-SGD (see :func:`repro.fl.faults.corrupt_updates`); ``clip_norm``
+    enables the server's norm-clip defense.  All default to the perfect
+    world.
     """
     if compute == "selected":
         n = x_clients.shape[0]
@@ -191,19 +223,27 @@ def train_and_aggregate(loss_fn, params: PyTree, x_clients, y_clients, keys,
         client_params = fl_client.fleet_local_sgd(
             loss_fn, params, x_clients[idx], y_clients[idx], keys[idx],
             epochs=epochs, batch_size=batch_size, lr=lr)
-        sel, sizes = selected[idx], data_sizes[idx]
+        mask = selected if delivered is None else delivered
+        sel, sizes = mask[idx], data_sizes[idx]
+        corr = None if corrupt is None else corrupt[idx]
     elif compute == "full":
         client_params = fl_client.fleet_local_sgd(
             loss_fn, params, x_clients, y_clients, keys,
             epochs=epochs, batch_size=batch_size, lr=lr)
-        sel, sizes = selected, data_sizes
+        sel = selected if delivered is None else delivered
+        sizes, corr = data_sizes, corrupt
     else:
         raise ValueError(f"unknown compute mode {compute!r}; "
                          f"choose from {COMPUTE_MODES}")
+    if corr is not None:
+        client_params = fl_faults.corrupt_updates(
+            client_params, corr, corrupt_mode_id, corrupt_scale)
     if fedavg_backend == "pallas":
         from repro.kernels.fedavg_reduce import fedavg_reduce
-        return fedavg_reduce(params, client_params, sel, sizes)
-    return fl_server.fedavg(params, client_params, sel, sizes)
+        return fedavg_reduce(params, client_params, sel, sizes,
+                             clip_norm=clip_norm)
+    return fl_server.fedavg(params, client_params, sel, sizes,
+                            clip_norm=clip_norm)
 
 
 def camped_bs(dist: jnp.ndarray) -> jnp.ndarray:
@@ -223,7 +263,9 @@ def hierarchical_round(loss_fn, global_params: PyTree, edge_params: PyTree,
                        data_sizes, r, *, tau_global: int, epochs: int,
                        batch_size: int, lr: float, compute: str = "full",
                        select_cap: int | None = None,
-                       fedavg_backend: str = "jax"):
+                       fedavg_backend: str = "jax",
+                       delivered=None, corrupt=None, corrupt_mode_id=0,
+                       corrupt_scale=1.0, clip_norm=None):
     """One hierarchical data-plane round (arXiv 2108.09103's architecture).
 
     Each client pulls the edge model of its serving (camped) cell — so a
@@ -247,6 +289,9 @@ def hierarchical_round(loss_fn, global_params: PyTree, edge_params: PyTree,
     moved = (serving != prev_bs) & (prev_bs >= 0)
     handover_rate = jnp.mean(moved.astype(jnp.float32))
     init = jax.tree.map(lambda e: e[serving], edge_params)
+    # delivery masks the assignment: an undelivered client's upload reaches
+    # no BS (its assignment column zeroes out of the segment weights)
+    assign_eff = assign if delivered is None else assign & delivered[:, None]
 
     if compute == "selected":
         n = x_clients.shape[0]
@@ -256,24 +301,30 @@ def hierarchical_round(loss_fn, global_params: PyTree, edge_params: PyTree,
             loss_fn, jax.tree.map(lambda a: a[idx], init),
             x_clients[idx], y_clients[idx], keys[idx],
             epochs=epochs, batch_size=batch_size, lr=lr)
-        assign_r, sizes = assign[idx], data_sizes[idx]
+        assign_r, sizes = assign_eff[idx], data_sizes[idx]
+        corr = None if corrupt is None else corrupt[idx]
     elif compute == "full":
         client_params = fl_client.fleet_local_sgd_per_client(
             loss_fn, init, x_clients, y_clients, keys,
             epochs=epochs, batch_size=batch_size, lr=lr)
-        assign_r, sizes = assign, data_sizes
+        assign_r, sizes, corr = assign_eff, data_sizes, corrupt
     else:
         raise ValueError(f"unknown compute mode {compute!r}; "
                          f"choose from {COMPUTE_MODES}")
+    if corr is not None:
+        client_params = fl_faults.corrupt_updates(
+            client_params, corr, corrupt_mode_id, corrupt_scale)
 
     # edge Eq. (2): every BS aggregates its users in one segment-reduce
     if fedavg_backend == "pallas":
         from repro.kernels.fedavg_reduce import fedavg_segment_reduce
         edge_params = fedavg_segment_reduce(edge_params, client_params,
-                                            assign_r, sizes)
+                                            assign_r, sizes,
+                                            clip_norm=clip_norm)
     else:
         edge_params = fl_server.fedavg_segmented(edge_params, client_params,
-                                                 assign_r, sizes)
+                                                 assign_r, sizes,
+                                                 clip_norm=clip_norm)
     _, bs_totals = fl_server.segment_weights(assign_r, sizes)
     edge_weight = edge_weight + bs_totals
 
@@ -331,6 +382,21 @@ class FLSimulation:
             tau = 1
         self.aggregation, self.tau_global = agg, tau
         self._hier = agg == "hierarchical"
+
+        # -- fault model (explicit config beats the scenario) ---------------
+        fs = cfg.faults
+        if isinstance(fs, str):
+            fs = fl_faults.get_faults(fs)
+        if fs is None:
+            fs = (spec.faults if spec is not None and spec.faults is not None
+                  else fl_faults.NO_FAULTS)
+        if cfg.deadline_s is not None:
+            fs = dataclasses.replace(fs, deadline_s=cfg.deadline_s)
+        self.faults: fl_faults.FaultSpec = fs
+        # STATIC switch: an inert spec compiles the exact fault-free graph
+        # (same PRNG split count -> bit-identical baseline trajectories).
+        self._faulty = fs.active
+        self._fault_params = fl_faults.fault_params(fs)
 
         key = jax.random.PRNGKey(cfg.seed)
         (k_data, k_part, k_pos, k_model, k_bw, self._key) = \
@@ -401,10 +467,13 @@ class FLSimulation:
         # hierarchical state: per-BS edge models (all start at the global
         # model), the data weight each edge aggregated since the last
         # global sync, and last round's serving BS for handover detection.
+        # The fault layer needs prev_bs too (handover outage hazard), so it
+        # rides the carry whenever either feature is on.
         if self._hier:
             self.edge_params = jax.tree.map(
                 lambda p: jnp.repeat(p[None], w.n_bs, axis=0), self.params)
             self.edge_weight = jnp.zeros((w.n_bs,), jnp.float32)
+        if self._hier or self._faulty:
             self._prev_bs = jnp.full((w.n_users,), -1, jnp.int32)
 
         # one compiled graph for the whole fleet's local training (eager path)
@@ -427,6 +496,8 @@ class FLSimulation:
                 self.part.counts, self._key)
         if self._hier:
             return base + (self.edge_params, self.edge_weight, self._prev_bs)
+        if self._faulty:
+            return base + (self._prev_bs,)
         return base
 
     def _set_carry(self, carry: tuple) -> None:
@@ -439,6 +510,8 @@ class FLSimulation:
         self._key = key
         if self._hier:
             self.edge_params, self.edge_weight, self._prev_bs = carry[5:]
+        elif self._faulty:
+            self._prev_bs = carry[5]
 
     def _round_step(self, carry: tuple, r) -> tuple[tuple, dict]:
         """One fully-traced round: mobility -> channel -> schedule -> local
@@ -447,29 +520,61 @@ class FLSimulation:
         may be a host int (per-round step) or a traced counter (fused
         scan)."""
         cfg, w = self.cfg, self.wireless
+        fp = self._fault_params
         params, pos, aux, counts, key = carry[:5]
-        key, k_mob, k_prob, k_sched, k_fleet = jax.random.split(key, 5)
+        if self._faulty:
+            # one extra subkey for the fault realization — gated statically
+            # so fault-free runs keep the seed's exact PRNG trajectory
+            key, k_mob, k_prob, k_sched, k_fleet, k_fault = \
+                jax.random.split(key, 6)
+        else:
+            key, k_mob, k_prob, k_sched, k_fleet = jax.random.split(key, 5)
 
         # 1. mobility (model chosen by the scenario; plain RD by default)
         pos, aux = mobility.step_named(
             self._mob_model, k_mob, pos, aux, w,
             pause_s=self._mob_pause, gm_memory=self._mob_gm)
+        state = MobilityState(user_pos=pos, bs_pos=self.mob.bs_pos)
         # 2. observe channels (shadowing field is consistent across rounds)
         shadow_db = None
         if self._shadow_sigma > 0.0:
             shadow_db = self._shadow_sigma * channel.sample_shadowing(
                 self._k_shadow, pos, self.mob.bs_pos, w, sigma_db=1.0)
-        prob = channel.make_problem(
-            k_prob, MobilityState(user_pos=pos, bs_pos=self.mob.bs_pos), w,
-            counts, r, bs_bw=self.bs_bw, shadow_db=shadow_db)
+        prob = channel.make_problem(k_prob, state, w, counts, r,
+                                    bs_bw=self.bs_bw, shadow_db=shadow_db)
+        # 2b. geometry the hierarchy / fault layer observes (CSE'd against
+        # make_problem's internal distance computation)
+        if self._hier or self._faulty:
+            dist = state.distances()
+            serving = camped_bs(dist)
+            prev_bs = carry[-1]
+        if self._faulty:
+            edge_frac = fl_faults.edge_proximity(dist, serving, w)
+            handover = (serving != prev_bs) & (prev_bs >= 0)
+            # pre-scheduling delivery estimate — what dagsa-r discounts by
+            prob = dataclasses.replace(
+                prob, p_deliver=fl_faults.delivery_probability(
+                    fp, edge_frac, handover))
         # 3. schedule (static dispatch by name; jit-able schedulers only)
         res = sched.schedule(cfg.scheduler, prob, w, k_sched)
+        # 3b. realize faults: stragglers stretch tcomp, outages/crashes kill
+        # uplinks, the deadline drops late survivors (truncated Eq. (3))
+        if self._faulty:
+            tcomp_eff, alive, corrupt = fl_faults.sample_round_faults(
+                k_fault, fp, edge_frac, handover, prob.tcomp)
+            t_user = latency.per_user_latency(prob, res, tcomp=tcomp_eff)
+            delivered = (res.selected & alive
+                         & latency.on_time(t_user, fp["deadline_s"]))
+            t_round = latency.deadline_round_latency(t_user, res.selected,
+                                                     fp["deadline_s"])
+            clip = self.faults.clip_norm
+        else:
+            delivered, corrupt, clip = res.selected, None, None
+            t_round = res.t_round
         # 4. data plane: local SGD + Eq. (2) aggregation
         keys = jax.random.split(k_fleet, w.n_users)
         if self._hier:
-            edge, edge_w, prev_bs = carry[5:]
-            serving = camped_bs(MobilityState(
-                user_pos=pos, bs_pos=self.mob.bs_pos).distances())
+            edge, edge_w = carry[5:7]
             (params, edge, edge_w, prev_bs, handover_rate) = \
                 hierarchical_round(
                     cnn.loss_fn, params, edge, edge_w, prev_bs,
@@ -478,7 +583,10 @@ class FLSimulation:
                     tau_global=self.tau_global, epochs=cfg.local_epochs,
                     batch_size=cfg.batch_size, lr=cfg.lr,
                     compute=cfg.compute, select_cap=self._select_cap,
-                    fedavg_backend=cfg.fedavg_backend)
+                    fedavg_backend=cfg.fedavg_backend,
+                    delivered=delivered if self._faulty else None,
+                    corrupt=corrupt, corrupt_mode_id=fp["corrupt_mode_id"],
+                    corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
             # eval sees the virtual global (edge mixture); built inside the
             # cond so non-eval rounds skip the O(M x model) reduction
             eval_args = (params, edge, edge_w)
@@ -489,10 +597,15 @@ class FLSimulation:
                 res.selected, self.data_sizes, epochs=cfg.local_epochs,
                 batch_size=cfg.batch_size, lr=cfg.lr, compute=cfg.compute,
                 select_cap=self._select_cap,
-                fedavg_backend=cfg.fedavg_backend)
+                fedavg_backend=cfg.fedavg_backend,
+                delivered=delivered if self._faulty else None,
+                corrupt=corrupt, corrupt_mode_id=fp["corrupt_mode_id"],
+                corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
             eval_args, eval_model = params, lambda p: p
-        # 5. bookkeeping — everything stays on device
-        counts = counts + res.selected.astype(counts.dtype)
+        # 5. bookkeeping — everything stays on device.  Participation
+        # follows DELIVERY under faults: a user whose update was lost stays
+        # "necessary" (Eq. 8g), so the fairness loop self-heals failures.
+        counts = counts + delivered.astype(counts.dtype)
         if cfg.eval_every:
             acc = jax.lax.cond(
                 (r + 1) % cfg.eval_every == 0,
@@ -502,15 +615,26 @@ class FLSimulation:
         else:
             acc = jnp.float32(jnp.nan)
         out = {
-            "t_round": res.t_round,
+            "t_round": t_round,
             "n_selected": jnp.sum(res.selected).astype(jnp.int32),
             "test_acc": acc,
             "min_part_rate": jnp.min(counts) / (r + 1.0),
         }
+        if self._faulty:
+            n_del = jnp.sum(delivered)
+            out["n_delivered"] = n_del.astype(jnp.int32)
+            out["delivered_rate"] = (
+                n_del / jnp.maximum(jnp.sum(res.selected), 1)
+            ).astype(jnp.float32)
+            out["goodput_mbit_s"] = (
+                n_del * w.model_mbit / jnp.maximum(t_round, 1e-9)
+            ).astype(jnp.float32)
         new_carry = (params, pos, aux, counts, key)
         if self._hier:
             out["handover_rate"] = handover_rate
             new_carry = new_carry + (edge, edge_w, prev_bs)
+        elif self._faulty:
+            new_carry = new_carry + (serving,)
         return new_carry, out
 
     def _run_scan(self, carry: tuple, r0, n_rounds: int):
@@ -565,6 +689,7 @@ class FLSimulation:
         wall = self.wall_clock + np.cumsum(outs["t_round"], dtype=np.float64)
         first = self.round_idx - n_rounds + 1  # round_idx already advanced
         hand = outs.get("handover_rate")
+        n_del = outs.get("n_delivered")
         recs = [RoundRecord(round_idx=first + i,
                             t_round=float(outs["t_round"][i]),
                             wall_clock=float(wall[i]),
@@ -572,7 +697,15 @@ class FLSimulation:
                             test_acc=float(outs["test_acc"][i]),
                             min_part_rate=float(outs["min_part_rate"][i]),
                             handover_rate=(float(hand[i]) if hand is not None
-                                           else float("nan")))
+                                           else float("nan")),
+                            n_delivered=(int(n_del[i]) if n_del is not None
+                                         else -1),
+                            delivered_rate=(
+                                float(outs["delivered_rate"][i])
+                                if n_del is not None else float("nan")),
+                            goodput_mbit_s=(
+                                float(outs["goodput_mbit_s"][i])
+                                if n_del is not None else float("nan")))
                 for i in range(n_rounds)]
         self.wall_clock = float(wall[-1])
         return recs
@@ -594,8 +727,13 @@ class FLSimulation:
         the host-numpy ``dagsa`` scheduler; kept verbatim as the benchmark
         baseline for the fused engine."""
         cfg, w = self.cfg, self.wireless
-        self._key, k_mob, k_prob, k_sched, k_fleet = \
-            jax.random.split(self._key, 5)
+        fp = self._fault_params
+        if self._faulty:
+            self._key, k_mob, k_prob, k_sched, k_fleet, k_fault = \
+                jax.random.split(self._key, 6)
+        else:
+            self._key, k_mob, k_prob, k_sched, k_fleet = \
+                jax.random.split(self._key, 5)
 
         pos, self._mob_aux = mobility.step_named(
             self._mob_model, k_mob, self.mob.user_pos, self._mob_aux, w,
@@ -608,16 +746,43 @@ class FLSimulation:
         prob = channel.make_problem(k_prob, self.mob, w, self.part.counts,
                                     self.part.round_idx, bs_bw=self.bs_bw,
                                     shadow_db=shadow_db)
+        if self._faulty:
+            dist = self.mob.distances()
+            serving = camped_bs(dist)
+            handover = (serving != self._prev_bs) & (self._prev_bs >= 0)
+            edge_frac = fl_faults.edge_proximity(dist, serving, w)
+            prob = dataclasses.replace(
+                prob, p_deliver=fl_faults.delivery_probability(
+                    fp, edge_frac, handover))
         res = sched.schedule(cfg.scheduler, prob, w, k_sched,
                              seed=cfg.seed * 100003 + self.round_idx)
+        if self._faulty:
+            tcomp_eff, alive, corrupt = fl_faults.sample_round_faults(
+                k_fault, fp, edge_frac, handover, prob.tcomp)
+            t_user = latency.per_user_latency(prob, res, tcomp=tcomp_eff)
+            delivered = (res.selected & alive
+                         & latency.on_time(t_user, fp["deadline_s"]))
+            t_round = float(latency.deadline_round_latency(
+                t_user, res.selected, fp["deadline_s"]))
+        else:
+            delivered = res.selected
+            t_round = float(res.t_round)
         keys = jax.random.split(k_fleet, w.n_users)
         client_params = self._fleet(self.params, self.x_clients,
                                     self.y_clients, keys)
+        if self._faulty:
+            client_params = fl_faults.corrupt_updates(
+                client_params, corrupt, fp["corrupt_mode_id"],
+                fp["corrupt_scale"])
+            self._prev_bs = serving
         # donated: the fleet's [N, ...] buffers die into the reduction
         self.params = fl_server.fedavg_donating(
-            self.params, client_params, res.selected, self.data_sizes)
-        self.part = self.part.update(res)
-        t_round = float(res.t_round)
+            self.params, client_params, delivered, self.data_sizes,
+            clip_norm=self.faults.clip_norm)
+        # participation follows delivery (lost updates stay necessary)
+        self.part = ParticipationState(
+            counts=self.part.counts + delivered.astype(self.part.counts.dtype),
+            round_idx=self.part.round_idx + 1)
         self.wall_clock += t_round
         self.round_idx += 1
 
@@ -626,10 +791,17 @@ class FLSimulation:
             acc = float(self._acc(self.params, self.data.x_test,
                                   self.data.y_test))
         min_rate = float(jnp.min(self.part.counts)) / max(self.round_idx, 1)
-        return RoundRecord(round_idx=self.round_idx, t_round=t_round,
-                           wall_clock=self.wall_clock,
-                           n_selected=int(res.selected.sum()),
-                           test_acc=acc, min_part_rate=min_rate)
+        rec = RoundRecord(round_idx=self.round_idx, t_round=t_round,
+                          wall_clock=self.wall_clock,
+                          n_selected=int(res.selected.sum()),
+                          test_acc=acc, min_part_rate=min_rate)
+        if self._faulty:
+            n_sel = max(int(res.selected.sum()), 1)
+            n_del = int(delivered.sum())
+            rec = dataclasses.replace(
+                rec, n_delivered=n_del, delivered_rate=n_del / n_sel,
+                goodput_mbit_s=n_del * w.model_mbit / max(t_round, 1e-9))
+        return rec
 
 
 def accuracy_at_budget(records: list[RoundRecord],

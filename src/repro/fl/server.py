@@ -17,6 +17,19 @@ Two aggregation granularities share the math:
     independently per BS over the ``[N, M]`` assignment (a segment-reduce
     with the BS as the segment id); a BS that aggregated nobody keeps its
     current edge model, mirroring the empty-selection guard.
+
+Robustness (the fault layer, docs/ROBUSTNESS.md): both paths screen
+non-finite client updates — a client whose update contains any NaN/Inf
+gets zero weight AND its values are zeroed before the weighted sum,
+because a zero weight alone does not protect the sum (``0 * NaN = NaN``
+propagates through the accumulator).  With every update screened out the
+zero-total guard keeps the current model — the all-clients-failed
+fallback.  ``clip_norm`` additionally clips each update's L2 distance from
+the reference model (the norm-attack defense): client i's weight becomes
+``w_i * s_i`` with ``s_i = min(1, clip / ||x_i - ref||)`` and the removed
+mass is given back to the reference, i.e. the result equals
+``ref + sum_i w_i s_i (x_i - ref) / sum_i w_i`` while still costing ONE
+weighted reduction (the identity the Pallas kernels exploit).
 """
 from __future__ import annotations
 
@@ -36,20 +49,82 @@ def fedavg_weights(selected: jnp.ndarray,
     return w, jnp.sum(w)
 
 
+def finite_update_mask(client_params: PyTree) -> jnp.ndarray:
+    """[N] bool: client i's update is finite in EVERY leaf entry.
+
+    The screening mask of the poisoned-update defense: a client with any
+    NaN/Inf anywhere gets zero aggregation weight (and its values are
+    additionally zeroed inside the reductions — zero weight alone cannot
+    stop ``0 * NaN = NaN`` from poisoning the sum).
+    """
+    leaves = jax.tree.leaves(client_params)
+    ok = jnp.ones((leaves[0].shape[0],), dtype=bool)
+    for c in leaves:
+        ok = ok & jnp.all(jnp.isfinite(c.astype(jnp.float32)),
+                          axis=tuple(range(1, c.ndim)))
+    return ok
+
+
+def _screen(c: jnp.ndarray) -> jnp.ndarray:
+    """Zero the non-finite entries of a leaf (f32) so masked-out poison
+    cannot reach the accumulator."""
+    cf = c.astype(jnp.float32)
+    return jnp.where(jnp.isfinite(cf), cf, 0.0)
+
+
+def clip_scales(ref_params: PyTree, client_params: PyTree,
+                clip_norm) -> jnp.ndarray:
+    """[N] per-client norm-clip factors s_i = min(1, clip / ||x_i - ref||).
+
+    ``ref_params`` is the model the updates deviate from — the global model
+    (single-tier) or each client's serving edge model gathered to [N, ...]
+    leaves (hierarchical).  Non-finite entries are screened before the norm
+    so a NaN client doesn't produce a NaN scale.  ``clip_norm`` may be a
+    traced scalar; ``inf`` is a no-op (s_i = 1).
+    """
+    sq = 0.0
+    for r, c in zip(jax.tree.leaves(ref_params),
+                    jax.tree.leaves(client_params)):
+        rf = r.astype(jnp.float32)
+        if rf.ndim < c.ndim:            # shared reference -> broadcast over N
+            rf = rf[None]
+        delta = _screen(c) - rf
+        sq = sq + jnp.sum(jnp.square(delta),
+                          axis=tuple(range(1, c.ndim)))
+    norm = jnp.sqrt(sq)
+    return jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+
+
 def fedavg(global_params: PyTree, client_params: PyTree,
-           selected: jnp.ndarray, data_sizes: jnp.ndarray) -> PyTree:
+           selected: jnp.ndarray, data_sizes: jnp.ndarray,
+           clip_norm=None) -> PyTree:
     """w^n = sum_i a_i |D_i| w_i / sum_i a_i |D_i|  (Eq. 2).
 
     client_params leaves: [N, ...]; selected: [N] bool; data_sizes: [N].
     If nothing was selected the global model is kept (guarded denominator).
     Accumulation runs in float32; the result is cast back to the leaf dtype.
+
+    Non-finite client updates are screened out (zero weight + zeroed
+    values), so a poisoned client can never NaN the global model; with
+    ``clip_norm`` set each surviving update's L2 deviation from the global
+    model is clipped to that radius (see the module docstring identity).
     """
-    w, total = fedavg_weights(selected, data_sizes)
+    ok = finite_update_mask(client_params)
+    w, _ = fedavg_weights(selected & ok, data_sizes)
+    total = jnp.sum(w)
+    if clip_norm is not None:
+        s = clip_scales(global_params, client_params, clip_norm)
+        v = w * s
+        v_total = jnp.sum(v)
+    else:
+        v, v_total = w, total
     safe_total = jnp.maximum(total, 1e-9)
 
     def agg(g, c):
-        wb = w.reshape((-1,) + (1,) * (c.ndim - 1))
-        acc = jnp.sum(wb * c.astype(jnp.float32), axis=0)
+        vb = v.reshape((-1,) + (1,) * (c.ndim - 1))
+        acc = jnp.sum(vb * _screen(c), axis=0)
+        if clip_norm is not None:
+            acc = acc + (total - v_total) * g.astype(jnp.float32)
         avg = (acc / safe_total).astype(c.dtype)
         return jnp.where(total > 0, avg, g)
 
@@ -67,7 +142,8 @@ def segment_weights(assign: jnp.ndarray,
 
 
 def fedavg_segmented(edge_params: PyTree, client_params: PyTree,
-                     assign: jnp.ndarray, data_sizes: jnp.ndarray) -> PyTree:
+                     assign: jnp.ndarray, data_sizes: jnp.ndarray,
+                     clip_norm=None) -> PyTree:
     """Per-BS edge aggregation: Eq. (2) restricted to each BS's users.
 
     edge_params leaves: [M, ...]; client_params leaves: [N, ...];
@@ -75,13 +151,30 @@ def fedavg_segmented(edge_params: PyTree, client_params: PyTree,
     BS k's new edge model is the data-size-weighted mean of the clients
     assigned to it; a BS with no assigned clients keeps its edge model.
     Accumulation runs in float32 via one [M, N] x [N, D] contraction.
+
+    Non-finite client updates are screened like :func:`fedavg`; with
+    ``clip_norm`` set each update's deviation is measured against its
+    *assigned* BS's edge model (the model it aggregates into).
     """
-    w, totals = segment_weights(assign, data_sizes)            # [N, M], [M]
+    ok = finite_update_mask(client_params)
+    w, _ = segment_weights(assign & ok[:, None], data_sizes)   # [N, M]
+    totals = jnp.sum(w, axis=0)                                # [M]
+    if clip_norm is not None:
+        client_bs = jnp.argmax(assign, axis=1)          # 0 for unassigned
+        ref = jax.tree.map(lambda e: e[client_bs], edge_params)
+        s = clip_scales(ref, client_params, clip_norm)  # [N]
+        v = w * s[:, None]
+        v_totals = jnp.sum(v, axis=0)                   # [M]
+    else:
+        v, v_totals = w, totals
     safe = jnp.maximum(totals, 1e-9)
 
     def agg(e, c):
         n = c.shape[0]
-        acc = w.T @ c.astype(jnp.float32).reshape(n, -1)       # [M, D]
+        acc = v.T @ _screen(c).reshape(n, -1)                  # [M, D]
+        if clip_norm is not None:
+            e_flat = e.astype(jnp.float32).reshape(e.shape[0], -1)
+            acc = acc + (totals - v_totals)[:, None] * e_flat
         avg = (acc / safe[:, None]).astype(c.dtype).reshape(e.shape)
         keep = (totals > 0).reshape((-1,) + (1,) * (e.ndim - 1))
         return jnp.where(keep, avg, e)
@@ -109,20 +202,22 @@ def edge_global_sync(global_params: PyTree, edge_params: PyTree,
 
 
 @functools.lru_cache(maxsize=None)
-def _fedavg_jit(donate: bool):
+def _fedavg_jit(donate: bool, clip_norm):
     kwargs = {"donate_argnums": (1,)} if donate else {}
-    return jax.jit(fedavg, **kwargs)
+    return jax.jit(functools.partial(fedavg, clip_norm=clip_norm), **kwargs)
 
 
 def fedavg_donating(global_params: PyTree, client_params: PyTree,
-                    selected: jnp.ndarray, data_sizes: jnp.ndarray) -> PyTree:
+                    selected: jnp.ndarray, data_sizes: jnp.ndarray,
+                    clip_norm: float | None = None) -> PyTree:
     """Standalone jitted aggregator for callers outside a larger jit.
 
     On accelerators the client-params pytree (dead after aggregation) is
     donated so XLA reuses the fleet's [N, ...] buffers for the reduction
     instead of allocating fresh ones; on CPU donation is a no-op, so it is
-    skipped to keep runs warning-free.
+    skipped to keep runs warning-free.  ``clip_norm`` must be a host float
+    here (it keys the jit cache).
     """
     donate = jax.default_backend() != "cpu"
-    return _fedavg_jit(donate)(global_params, client_params, selected,
-                               data_sizes)
+    return _fedavg_jit(donate, clip_norm)(global_params, client_params,
+                                          selected, data_sizes)

@@ -35,7 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.fl.server import fedavg_weights, segment_weights
+from repro.fl.server import (clip_scales, fedavg_weights,
+                             finite_update_mask, segment_weights)
 
 PyTree = Any
 
@@ -53,6 +54,7 @@ def _fedavg_kernel(w_ref, x_ref, o_ref):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     x = x_ref[...].astype(jnp.float32)          # [Nb, Db]
+    x = jnp.where(jnp.isfinite(x), x, 0.0)      # poison screen: 0*NaN = NaN
     w = w_ref[...].astype(jnp.float32)          # [Nb, 1]
     o_ref[...] += jnp.sum(w * x, axis=0, keepdims=True)
 
@@ -84,16 +86,26 @@ def _reduce_leaf(w2: jnp.ndarray, flat: jnp.ndarray, client_block: int,
 
 def _fedavg_reduce(global_params: PyTree, client_params: PyTree,
                    selected: jnp.ndarray, data_sizes: jnp.ndarray,
-                   client_block: int, feature_block: int,
-                   interpret: bool) -> PyTree:
-    w, total = fedavg_weights(selected, data_sizes)
+                   clip_value: jnp.ndarray, client_block: int,
+                   feature_block: int, interpret: bool,
+                   clip: bool) -> PyTree:
+    ok = finite_update_mask(client_params)
+    w, _ = fedavg_weights(selected & ok, data_sizes)
+    total = jnp.sum(w)
+    if clip:
+        v = w * clip_scales(global_params, client_params, clip_value)
+        v_total = jnp.sum(v)
+    else:
+        v, v_total = w, total
     safe_total = jnp.maximum(total, 1e-9)
-    w2 = w.reshape(-1, 1)
+    v2 = v.reshape(-1, 1)
 
     def agg(g, c):
         n = c.shape[0]
-        s = _reduce_leaf(w2, c.reshape(n, -1), client_block, feature_block,
+        s = _reduce_leaf(v2, c.reshape(n, -1), client_block, feature_block,
                          interpret)
+        if clip:
+            s = s + (total - v_total) * g.astype(jnp.float32).reshape(-1)
         avg = (s / safe_total).astype(c.dtype).reshape(c.shape[1:])
         return jnp.where(total > 0, avg, g)
 
@@ -105,11 +117,12 @@ def _jitted(donate: bool):
     kwargs = {"donate_argnums": (1,)} if donate else {}
     return jax.jit(_fedavg_reduce,
                    static_argnames=("client_block", "feature_block",
-                                    "interpret"), **kwargs)
+                                    "interpret", "clip"), **kwargs)
 
 
 def fedavg_reduce(global_params: PyTree, client_params: PyTree,
                   selected: jnp.ndarray, data_sizes: jnp.ndarray,
+                  clip_norm=None,
                   client_block: int = DEFAULT_CLIENT_BLOCK,
                   feature_block: int = DEFAULT_FEATURE_BLOCK,
                   interpret: bool | None = None) -> PyTree:
@@ -117,16 +130,23 @@ def fedavg_reduce(global_params: PyTree, client_params: PyTree,
 
     Same contract as :func:`repro.fl.server.fedavg`: client_params leaves
     [N, ...], selected [N] bool, data_sizes [N]; empty selection keeps the
-    global model.  On TPU the client-params pytree is donated (dead after
-    the reduction).  ``interpret=None`` auto-enables interpret mode off-TPU
-    so the entry point runs everywhere.
+    global model; non-finite updates are screened both in the weights and
+    inside the kernel (a zero weight cannot stop ``0 * NaN``), and
+    ``clip_norm`` (host float or traced scalar) enables the norm-clip
+    defense via the reweighting identity — the kernel stays a single
+    weighted reduction.  On TPU the client-params pytree is donated (dead
+    after the reduction).  ``interpret=None`` auto-enables interpret mode
+    off-TPU so the entry point runs everywhere.
     """
     on_tpu = jax.default_backend() == "tpu"
     if interpret is None:
         interpret = not on_tpu
+    clip = clip_norm is not None
+    cv = jnp.float32(0.0) if clip_norm is None else jnp.float32(clip_norm)
     return _jitted(on_tpu)(global_params, client_params, selected,
-                           data_sizes, client_block=client_block,
-                           feature_block=feature_block, interpret=interpret)
+                           data_sizes, cv, client_block=client_block,
+                           feature_block=feature_block, interpret=interpret,
+                           clip=clip)
 
 
 # ------------------------------------------------- segmented (per-BS) path --
@@ -142,6 +162,7 @@ def _segment_kernel(w_ref, x_ref, o_ref):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     x = x_ref[...].astype(jnp.float32)          # [Nb, Db]
+    x = jnp.where(jnp.isfinite(x), x, 0.0)      # poison screen: 0*NaN = NaN
     w = w_ref[...].astype(jnp.float32)          # [Nb, Mp]
     o_ref[...] += jax.lax.dot_general(
         w, x, (((0,), (0,)), ((), ())),          # w.T @ x -> [Mp, Db]
@@ -178,15 +199,27 @@ def _segment_reduce_leaf(w: jnp.ndarray, flat: jnp.ndarray, client_block: int,
 
 def _fedavg_segment_reduce(edge_params: PyTree, client_params: PyTree,
                            assign: jnp.ndarray, data_sizes: jnp.ndarray,
-                           client_block: int, feature_block: int,
-                           interpret: bool) -> PyTree:
-    w, totals = segment_weights(assign, data_sizes)            # [N, M], [M]
+                           clip_value: jnp.ndarray, client_block: int,
+                           feature_block: int, interpret: bool,
+                           clip: bool) -> PyTree:
+    ok = finite_update_mask(client_params)
+    w, totals = segment_weights(assign & ok[:, None], data_sizes)
+    if clip:
+        client_bs = jnp.argmax(assign, axis=1)
+        ref = jax.tree.map(lambda e: e[client_bs], edge_params)
+        v = w * clip_scales(ref, client_params, clip_value)[:, None]
+        v_totals = jnp.sum(v, axis=0)
+    else:
+        v, v_totals = w, totals
     safe = jnp.maximum(totals, 1e-9)
 
     def agg(e, c):
         n = c.shape[0]
-        s = _segment_reduce_leaf(w, c.reshape(n, -1), client_block,
+        s = _segment_reduce_leaf(v, c.reshape(n, -1), client_block,
                                  feature_block, interpret)      # [M, D]
+        if clip:
+            e_flat = e.astype(jnp.float32).reshape(e.shape[0], -1)
+            s = s + (totals - v_totals)[:, None] * e_flat
         avg = (s / safe[:, None]).astype(c.dtype).reshape(e.shape)
         keep = (totals > 0).reshape((-1,) + (1,) * (e.ndim - 1))
         return jnp.where(keep, avg, e)
@@ -199,11 +232,12 @@ def _segment_jitted(donate: bool):
     kwargs = {"donate_argnums": (1,)} if donate else {}
     return jax.jit(_fedavg_segment_reduce,
                    static_argnames=("client_block", "feature_block",
-                                    "interpret"), **kwargs)
+                                    "interpret", "clip"), **kwargs)
 
 
 def fedavg_segment_reduce(edge_params: PyTree, client_params: PyTree,
                           assign: jnp.ndarray, data_sizes: jnp.ndarray,
+                          clip_norm=None,
                           client_block: int = DEFAULT_CLIENT_BLOCK,
                           feature_block: int = DEFAULT_FEATURE_BLOCK,
                           interpret: bool | None = None) -> PyTree:
@@ -211,7 +245,9 @@ def fedavg_segment_reduce(edge_params: PyTree, client_params: PyTree,
 
     Same contract as :func:`repro.fl.server.fedavg_segmented`: edge_params
     leaves [M, ...], client_params leaves [N, ...], assign [N, M] bool,
-    data_sizes [N]; a BS whose segment is empty keeps its edge model.  On
+    data_sizes [N]; a BS whose segment is empty keeps its edge model.
+    Non-finite updates are screened (weights + in-kernel), and ``clip_norm``
+    clips each update's deviation from its assigned BS's edge model.  On
     TPU the client-params pytree is donated (dead after the reduction).
     ``interpret=None`` auto-enables interpret mode off-TPU so the entry
     point runs everywhere.
@@ -219,7 +255,9 @@ def fedavg_segment_reduce(edge_params: PyTree, client_params: PyTree,
     on_tpu = jax.default_backend() == "tpu"
     if interpret is None:
         interpret = not on_tpu
+    clip = clip_norm is not None
+    cv = jnp.float32(0.0) if clip_norm is None else jnp.float32(clip_norm)
     return _segment_jitted(on_tpu)(edge_params, client_params, assign,
-                                   data_sizes, client_block=client_block,
+                                   data_sizes, cv, client_block=client_block,
                                    feature_block=feature_block,
-                                   interpret=interpret)
+                                   interpret=interpret, clip=clip)

@@ -35,19 +35,25 @@ def ssd_scan(x, dt, A, B, C, chunk: int) -> jnp.ndarray:
     return ssd_chunked(x, dt, A, B, C, chunk)
 
 
-def fedavg_reduce(global_params, client_params, selected, data_sizes):
+def fedavg_reduce(global_params, client_params, selected, data_sizes,
+                  clip_norm=None):
     """Masked weighted FedAvg oracle — delegates to the server implementation
-    (float32 accumulation, zero-selected guard; see repro.fl.server)."""
+    (float32 accumulation, zero-selected guard, non-finite screening and the
+    optional norm-clip defense; see repro.fl.server)."""
     from repro.fl.server import fedavg
-    return fedavg(global_params, client_params, selected, data_sizes)
+    return fedavg(global_params, client_params, selected, data_sizes,
+                  clip_norm=clip_norm)
 
 
-def fedavg_segment_reduce(edge_params, client_params, assign, data_sizes):
+def fedavg_segment_reduce(edge_params, client_params, assign, data_sizes,
+                          clip_norm=None):
     """Per-BS segmented FedAvg oracle (hierarchical edge Eq. 2) — delegates
     to the server implementation (float32 [M, N] x [N, D] contraction,
-    empty-BS guard; see repro.fl.server.fedavg_segmented)."""
+    empty-BS guard, non-finite screening + norm clip; see
+    repro.fl.server.fedavg_segmented)."""
     from repro.fl.server import fedavg_segmented
-    return fedavg_segmented(edge_params, client_params, assign, data_sizes)
+    return fedavg_segmented(edge_params, client_params, assign, data_sizes,
+                            clip_norm=clip_norm)
 
 
 def bandwidth_solve(coeff, tcomp, mask, bw, iters: int | None = None,

@@ -13,6 +13,12 @@
         --scheduler dagsa_jit --aggregation hierarchical --tau-global 5 \
         --rounds 20
 
+    # failure-aware rounds: mobility-coupled outages + the dagsa-r
+    # delivery-discounting scheduler under a 1.5 s round deadline
+    PYTHONPATH=src python -m repro.launch.fl_sim \
+        --scheduler dagsa-r --faults faulty-uplink --deadline 1.5 \
+        --rounds 20
+
 Jit-able schedulers (everything except the host-numpy ``dagsa``) run the
 whole simulation as ONE fused ``lax.scan`` — the round table prints after
 the compiled run finishes.  ``--mode eager`` restores the seed's per-round
@@ -25,7 +31,7 @@ import argparse
 from repro.core.scenario import SCENARIOS
 from repro.core.scheduler import SCHEDULERS
 from repro.data.synthetic import DATASETS
-from repro.fl import FLConfig, FLSimulation
+from repro.fl import FAULT_PRESETS, FLConfig, FLSimulation
 from repro.fl.rounds import accuracy_at_budget
 
 
@@ -65,6 +71,15 @@ def main() -> None:
                          "inherit the scenario, else single-tier)")
     ap.add_argument("--tau-global", type=int, default=None,
                     help="global sync period in rounds (hierarchical only)")
+    ap.add_argument("--faults", default=None,
+                    choices=sorted(FAULT_PRESETS),
+                    help="fault-injection preset: outages/stragglers/"
+                         "crashes/poisoned updates realized inside the "
+                         "fused scan (default: inherit the scenario's "
+                         "fault model, else none)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="T",
+                    help="round deadline in simulated seconds: the server "
+                         "stops waiting at T and drops late updates")
     ap.add_argument("--shard", action="store_true",
                     help="place the client-batched tensors on a (data,) "
                          "device mesh: the fleet's local SGD "
@@ -82,22 +97,35 @@ def main() -> None:
                    compute=args.compute, select_cap=args.select_cap,
                    fedavg_backend=args.fedavg_backend,
                    aggregation=args.aggregation, tau_global=args.tau_global,
+                   faults=args.faults, deadline_s=args.deadline,
                    shard=args.shard, mesh_devices=args.mesh)
     sim = FLSimulation(cfg)
     recs = sim.run(args.rounds, mode=args.mode)
     hier = sim.aggregation == "hierarchical"
+    faulty = sim.faults.active
     print(f"{'round':>5} {'t_round':>8} {'clock':>8} {'users':>5} "
-          f"{'acc':>6} {'min_fair':>8}" + (" {:>8}".format("handover")
-                                           if hier else ""))
+          f"{'acc':>6} {'min_fair':>8}"
+          + (" {:>8}".format("handover") if hier else "")
+          + (" {:>5} {:>8} {:>8}".format("deliv", "del_rate", "goodput")
+             if faulty else ""))
     for r in recs:
         line = (f"{r.round_idx:5d} {r.t_round:8.3f} {r.wall_clock:8.2f} "
                 f"{r.n_selected:5d} {r.test_acc:6.3f} {r.min_part_rate:8.2f}")
         if hier:
             line += f" {r.handover_rate:8.2f}"
+        if faulty:
+            line += (f" {r.n_delivered:5d} {r.delivered_rate:8.2f} "
+                     f"{r.goodput_mbit_s:8.2f}")
         print(line)
     budget = recs[-1].wall_clock / 2
     print(f"\nacc@{budget:.1f}s = {accuracy_at_budget(recs, budget):.3f}  "
           f"final = {recs[-1].test_acc:.3f}")
+    if faulty:
+        n = len(recs)
+        print(f"delivered_rate mean = "
+              f"{sum(r.delivered_rate for r in recs) / n:.3f}  "
+              f"goodput mean = "
+              f"{sum(r.goodput_mbit_s for r in recs) / n:.2f} Mbit/s")
 
 
 if __name__ == "__main__":

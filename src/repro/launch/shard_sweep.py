@@ -139,7 +139,8 @@ def run_shard_sweep(scenarios: Sequence[str | ScenarioSpec],
                                    "epochs", "batch_size", "lr",
                                    "eval_every", "backend", "fedavg_backend",
                                    "compute", "select_cap", "aggregation",
-                                   "tau_global", "user_chunk", "n_models"))
+                                   "tau_global", "scheduler", "faults_on",
+                                   "clip_on", "user_chunk", "n_models"))
 def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                            cell_seed: jax.Array, x_c, y_c, w0, x_test,
                            y_test, *, mesh, cfg: WirelessConfig,
@@ -147,6 +148,7 @@ def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                            batch_size: int, lr: float, eval_every: int,
                            backend: str, fedavg_backend: str, compute: str,
                            select_cap, aggregation: str, tau_global: int,
+                           scheduler: str, faults_on: bool, clip_on: bool,
                            user_chunk: int | None, n_models: int) -> dict:
     """Learning-sweep bucket over the mesh.
 
@@ -159,7 +161,9 @@ def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                   eval_every=eval_every, backend=backend,
                   fedavg_backend=fedavg_backend, compute=compute,
                   select_cap=select_cap, aggregation=aggregation,
-                  tau_global=tau_global, user_chunk=user_chunk)
+                  tau_global=tau_global, scheduler=scheduler,
+                  faults_on=faults_on, clip_on=clip_on,
+                  user_chunk=user_chunk)
 
     def local(cp, ck, cs, xc, yc, w, xt, yt):
         def cell(p, k, j):
@@ -189,6 +193,8 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                              select_cap: int | None = None,
                              aggregation: str | None = None,
                              tau_global: int | None = None,
+                             scheduler: str = "dagsa_jit",
+                             faults=None, deadline_s: float | None = None,
                              user_chunk: int | None = None, seed: int = 0,
                              mesh=None,
                              n_devices: int | None = None) -> list[dict]:
@@ -198,12 +204,25 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     scatter over ``mesh`` / the first ``n_devices`` visible devices.
     """
     from repro.data import make_dataset
+    from repro.fl import faults as fl_faults
     from repro.models import cnn
 
+    if scheduler not in sweep.SWEEP_SCHEDULERS:
+        raise ValueError(f"unknown sweep scheduler {scheduler!r}; "
+                         f"choose from {sweep.SWEEP_SCHEDULERS}")
     if mesh is None:
         mesh = make_data_mesh(n_devices)
     n_shards = mesh.devices.size
     specs = [get_scenario(s) if isinstance(s, str) else s for s in scenarios]
+    if faults is not None:
+        fs = fl_faults.get_faults(faults) if isinstance(faults, str) \
+            else faults
+        specs = [dataclasses.replace(s, faults=fs) for s in specs]
+    if deadline_s is not None:
+        specs = [dataclasses.replace(
+            s, faults=dataclasses.replace(
+                s.faults if s.faults is not None else fl_faults.NO_FAULTS,
+                deadline_s=float(deadline_s))) for s in specs]
     base = cfg or WirelessConfig()
     data = make_dataset(dataset, seed=seed, n_train=n_train, n_test=n_test)
     h, wd, c = data.x_train.shape[1:]
@@ -213,7 +232,8 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     seed_keys = jax.random.split(k_cells, n_seeds)   # paired across scenarios
     records: dict[int, dict] = {}
     buckets = sweep._learning_buckets(specs, base, aggregation, tau_global)
-    for (n_users, n_bs, agg, tau), group in buckets.items():
+    for (n_users, n_bs, agg, tau, faults_on, clip_on), group \
+            in buckets.items():
         sweep._check_user_chunk(user_chunk, n_users)
         bcfg = dataclasses.replace(base, n_bs=n_bs)
         minp = int(np.ceil(bcfg.rho2 * n_users))
@@ -233,10 +253,12 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
             eval_every=eval_every, backend=backend,
             fedavg_backend=fedavg_backend, compute=compute,
             select_cap=select_cap, aggregation=agg, tau_global=tau,
+            scheduler=scheduler, faults_on=faults_on, clip_on=clip_on,
             user_chunk=user_chunk, n_models=len(mobility.MOBILITY_MODELS))
         outs = _grid_shape(outs, n_cells, len(group), n_seeds)
         records.update(sweep._learning_records(group, outs, n_seeds,
-                                               n_rounds, dataset, agg, tau))
+                                               n_rounds, dataset, agg, tau,
+                                               scheduler))
     return [records[i] for i in range(len(specs))]
 
 

@@ -60,6 +60,17 @@ additionally report ``handover_rate_mean`` and a per-round
 ``handover_rate`` curve, and are bucketed separately so every bucket
 stays one compiled call.
 
+Faulty scenarios (an active ``FaultSpec`` on the spec, or the
+``--faults``/``--deadline`` overrides; see docs/ROBUSTNESS.md) carry a
+``"scheduler"`` field (``--scheduler dagsa-r`` discounts candidates by
+estimated delivery probability), the fault model under ``"faults"``
+(strict JSON via ``FaultSpec.to_json``), ``delivered_mean`` /
+``delivered_rate_mean`` / ``goodput_mbit_s_mean``, and per-round
+``n_delivered`` / ``delivered_rate`` / ``goodput_mbit_s`` curves.
+Fault severity is traced data, so faulty scenarios of different
+severity share one compiled bucket (keyed only on the static
+``faults_on``/``clip_on`` flags).
+
 Seeds are PAIRED across scenarios in the same shape bucket (same geometry/
 fading keys, same client data + model init in the learning sweep), a
 variance-reduction trick for A-vs-B scenario comparisons.
@@ -80,6 +91,13 @@ from repro.core import channel, dagsa_jit, mobility
 from repro.core.scenario import SCENARIOS, BS_LAYOUTS, ScenarioSpec, \
     get_scenario
 from repro.core.types import MobilityState, WirelessConfig
+# registers the faulty-* scenarios and supplies the traced fault samplers
+from repro.fl import faults as fl_faults
+
+# Learning-sweep scheduler choices: the compiled greedy, or its
+# failure-aware variant that discounts candidates by estimated delivery
+# probability (identical to dagsa_jit when the scenario has no faults).
+SWEEP_SCHEDULERS = ("dagsa_jit", "dagsa-r")
 
 
 # -------------------------------------------------------------- lowering ---
@@ -108,6 +126,11 @@ def _scenario_params(specs: Sequence[ScenarioSpec],
                          else cfg.tcomp_min_s),
         "tcomp_max": arr(lambda s: s.tcomp_max_s if s.tcomp_max_s is not None
                          else cfg.tcomp_max_s),
+        # fault knobs, "f_"-prefixed (NO_FAULTS when the scenario has none);
+        # severity is DATA, so scenarios of different severity share a bucket
+        **{f"f_{k}": arr(lambda s, k=k: fl_faults.fault_params(
+            s.faults if s.faults is not None else fl_faults.NO_FAULTS)[k])
+           for k in fl_faults.FAULT_PARAM_KEYS},
     }
 
 
@@ -307,17 +330,30 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                        minp: int, epochs: int, batch_size: int, lr: float,
                        eval_every: int, backend: str, fedavg_backend: str,
                        compute: str, select_cap, aggregation: str = "single",
-                       tau_global: int = 1,
+                       tau_global: int = 1, scheduler: str = "dagsa_jit",
+                       faults_on: bool = False, clip_on: bool = False,
                        user_chunk: int | None = None) -> dict:
     """One (scenario, seed) FL cell: init world, scan the full round loop
     (wireless control plane + local SGD + Eq. (2) aggregation — single-tier
     or hierarchical per-BS edges with a tau_global sync — + periodic
-    eval)."""
+    eval).
+
+    ``faults_on`` (static, part of the bucket key) switches in the fault
+    layer of :mod:`repro.fl.faults`: outage/straggler/crash/corruption
+    realizations from one extra per-round subkey, deadline-truncated round
+    latency, and delivery-masked aggregation.  Fault *severity* stays data
+    (the ``f_*`` entries of ``p``).  ``clip_on`` statically enables the
+    norm-clip defense (the clip value is traced; ``inf`` is an exact
+    no-op, so clip and no-clip scenarios may share a bucket).
+    ``scheduler="dagsa-r"`` discounts the greedy's candidate score by the
+    estimated delivery probability — with faults off it IS dagsa_jit.
+    """
     from repro.fl.rounds import hierarchical_round, camped_bs, \
         train_and_aggregate
     from repro.models import cnn
 
     hier = aggregation == "hierarchical"
+    fp = {k: p[f"f_{k}"] for k in fl_faults.FAULT_PARAM_KEYS}
     k_pos, k_bs, k_bw, k_aux, k_shadow, k_run = jax.random.split(key, 6)
     pos0 = jax.random.uniform(k_pos, (cfg.n_users, 2), minval=0.0,
                               maxval=cfg.area_m)
@@ -331,9 +367,16 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
     def round_body(carry, r):
         if hier:
             params, edge, edge_w, prev_bs, pos, aux, counts, key = carry
+        elif faults_on:
+            params, pos, aux, counts, key, prev_bs = carry
         else:
             params, pos, aux, counts, key = carry
-        key, k_mob, k_snr, k_tc, k_sched, k_fleet = jax.random.split(key, 6)
+        if faults_on:
+            key, k_mob, k_snr, k_tc, k_sched, k_fleet, k_fault = \
+                jax.random.split(key, 7)
+        else:
+            key, k_mob, k_snr, k_tc, k_sched, k_fleet = \
+                jax.random.split(key, 6)
         pos, aux = mobility.step_switch(
             p["model_id"], k_mob, pos, aux, cfg.area_m, cfg.round_duration_s,
             p["speed"], p["pause_s"], p["gm_memory"])
@@ -345,19 +388,45 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
         tcomp = p["tcomp_min"] + u * (p["tcomp_max"] - p["tcomp_min"])
         # Eq. (8g), post-round requirement (matches channel.make_problem)
         necessary = counts < cfg.rho1 * (r + 1.0)
-        assign, selected, _, _, t_round = dagsa_jit._schedule(
-            snr, coeff, tcomp, bs_bw, necessary, minp, k_sched,
+        if hier or faults_on:
+            serving = camped_bs(dist)
+        score = snr
+        if faults_on:
+            handover = (serving != prev_bs) & (prev_bs >= 0)
+            edge_frac = fl_faults.edge_proximity(dist, serving, cfg)
+            p_est = fl_faults.delivery_probability(fp, edge_frac, handover)
+            if scheduler == "dagsa-r":
+                # the delivery-discounted candidate score (the per-user
+                # scale leaves each user's best-BS argmax unchanged)
+                score = snr * jnp.clip(p_est, 0.0, 1.0)[:, None]
+        assign, selected, bw, _, t_round = dagsa_jit._schedule(
+            score, coeff, tcomp, bs_bw, necessary, minp, k_sched,
             backend=backend)
+        if faults_on:
+            tcomp_eff, alive, corrupt = fl_faults.sample_round_faults(
+                k_fault, fp, edge_frac, handover, tcomp)
+            c_user = jnp.sum(jnp.where(assign, coeff, 0.0), axis=1)
+            t_user = tcomp_eff + jnp.where(
+                selected, c_user / jnp.maximum(bw, 1e-12), 0.0)
+            delivered = selected & alive & (t_user <= fp["deadline_s"])
+            t_round = jnp.minimum(
+                jnp.max(jnp.where(selected, t_user, 0.0)), fp["deadline_s"])
+            clip = fp["clip_norm"] if clip_on else None
+        else:
+            delivered, corrupt, clip = selected, None, None
         keys = jax.random.split(k_fleet, cfg.n_users)
         if hier:
             from repro.fl import server as fl_server
-            (params, edge, edge_w, prev_bs, handover) = \
+            (params, edge, edge_w, prev_bs, handover_rate) = \
                 hierarchical_round(
                     cnn.loss_fn, params, edge, edge_w, prev_bs, x_c, y_c,
-                    keys, assign, selected, camped_bs(dist), data_sizes, r,
+                    keys, assign, selected, serving, data_sizes, r,
                     tau_global=tau_global, epochs=epochs,
                     batch_size=batch_size, lr=lr, compute=compute,
-                    select_cap=select_cap, fedavg_backend=fedavg_backend)
+                    select_cap=select_cap, fedavg_backend=fedavg_backend,
+                    delivered=delivered if faults_on else None,
+                    corrupt=corrupt, corrupt_mode_id=fp["corrupt_mode_id"],
+                    corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
             # virtual global built inside the eval cond: non-eval rounds
             # skip the O(M x model) edge mixture
             eval_args = (params, edge, edge_w)
@@ -366,9 +435,14 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
             params = train_and_aggregate(
                 cnn.loss_fn, params, x_c, y_c, keys, selected, data_sizes,
                 epochs=epochs, batch_size=batch_size, lr=lr, compute=compute,
-                select_cap=select_cap, fedavg_backend=fedavg_backend)
+                select_cap=select_cap, fedavg_backend=fedavg_backend,
+                delivered=delivered if faults_on else None,
+                corrupt=corrupt, corrupt_mode_id=fp["corrupt_mode_id"],
+                corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
             eval_args, eval_model = params, lambda q: q
-        counts = counts + selected.astype(counts.dtype)
+        # participation follows DELIVERY under faults (a lost update keeps
+        # the user necessary, so the Eq. (8g) loop self-heals failures)
+        counts = counts + delivered.astype(counts.dtype)
         if eval_every:
             # the predicate only depends on the (unbatched) scan counter, so
             # the cond survives the seeds x scenarios vmaps as a real branch
@@ -384,10 +458,19 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
             "test_acc": acc,
             "min_part_rate": jnp.min(counts) / (r + 1.0),
         }
+        if faults_on:
+            n_del = jnp.sum(delivered).astype(jnp.float32)
+            out["n_delivered"] = n_del
+            out["delivered_rate"] = n_del / jnp.maximum(
+                jnp.sum(selected).astype(jnp.float32), 1.0)
+            out["goodput_mbit_s"] = (n_del * cfg.model_mbit
+                                     / jnp.maximum(t_round, 1e-9))
         if hier:
-            out["handover_rate"] = handover
+            out["handover_rate"] = handover_rate
             new_carry = (params, edge, edge_w, prev_bs, pos, aux, counts,
                          key)
+        elif faults_on:
+            new_carry = (params, pos, aux, counts, key, serving)
         else:
             new_carry = (params, pos, aux, counts, key)
         return new_carry, out
@@ -398,6 +481,9 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
         carry0 = (params0, edge0, jnp.zeros((cfg.n_bs,), jnp.float32),
                   jnp.full((cfg.n_users,), -1, jnp.int32),
                   pos0, aux0, counts0, k_run)
+    elif faults_on:
+        carry0 = (params0, pos0, aux0, counts0, k_run,
+                  jnp.full((cfg.n_users,), -1, jnp.int32))
     else:
         carry0 = (params0, pos0, aux0, counts0, k_run)
     _, outs = jax.lax.scan(round_body, carry0, jnp.arange(n_rounds))
@@ -408,13 +494,15 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                                    "batch_size", "lr", "eval_every",
                                    "backend", "fedavg_backend", "compute",
                                    "select_cap", "aggregation", "tau_global",
+                                   "scheduler", "faults_on", "clip_on",
                                    "user_chunk", "n_models"))
 def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                      x_test, y_test, *, cfg: WirelessConfig, n_rounds: int,
                      minp: int, epochs: int, batch_size: int, lr: float,
                      eval_every: int, backend: str, fedavg_backend: str,
                      compute: str, select_cap, aggregation: str,
-                     tau_global: int, user_chunk: int | None,
+                     tau_global: int, scheduler: str, faults_on: bool,
+                     clip_on: bool, user_chunk: int | None,
                      n_models: int) -> dict:
     """All scenarios of one shape bucket x all seeds, one compiled call.
 
@@ -428,7 +516,9 @@ def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                   eval_every=eval_every, backend=backend,
                   fedavg_backend=fedavg_backend, compute=compute,
                   select_cap=select_cap, aggregation=aggregation,
-                  tau_global=tau_global, user_chunk=user_chunk)
+                  tau_global=tau_global, scheduler=scheduler,
+                  faults_on=faults_on, clip_on=clip_on,
+                  user_chunk=user_chunk)
 
     def per_scenario(p):
         return jax.vmap(lambda k, xc, yc, w: run(p, k, xc, yc, w,
@@ -464,18 +554,35 @@ def _resolve_aggregation(spec: ScenarioSpec, aggregation: str | None,
     return agg, DEFAULT_TAU_GLOBAL
 
 
+def _fault_flags(spec: ScenarioSpec) -> tuple[bool, bool]:
+    """(faults_on, clip_on) — the STATIC part of a scenario's fault model.
+
+    ``faults_on`` keys the bucket: a faulty scenario compiles an extra
+    PRNG split + the fault/deadline graph, so it must never share a trace
+    with a fault-free one (whose trajectories must stay bit-identical to
+    the pre-fault sweep).  ``clip_on`` statically enables the norm-clip
+    defense graph; the traced clip value lowers ``None`` to ``inf`` (an
+    exact no-op), so clip and no-clip scenarios can share a faulty bucket.
+    """
+    fs = spec.faults
+    on = fs is not None and fs.active
+    return on, bool(on and fs.clip_norm is not None)
+
+
 def _learning_buckets(specs: Sequence[ScenarioSpec], base: WirelessConfig,
                       aggregation: str | None, tau_global: int | None
                       ) -> dict[tuple, list[tuple[int, ScenarioSpec]]]:
-    """Group (position, spec) by (n_users, n_bs, aggregation, tau) — the
-    learning sweep's compile-bucket key (hierarchical buckets carry extra
-    scan state, so they must not share a trace with single-tier ones)."""
+    """Group (position, spec) by (n_users, n_bs, aggregation, tau,
+    faults_on, clip_on) — the learning sweep's compile-bucket key
+    (hierarchical and faulty buckets carry extra scan state / graph, so
+    they must not share a trace with plain ones)."""
     buckets: dict[tuple, list[tuple[int, ScenarioSpec]]] = {}
     for pos, spec in enumerate(specs):
         w = spec.wireless(base)
         agg, tau = _resolve_aggregation(spec, aggregation, tau_global)
-        buckets.setdefault((w.n_users, w.n_bs, agg, tau), []).append(
-            (pos, spec))
+        faults_on, clip_on = _fault_flags(spec)
+        buckets.setdefault((w.n_users, w.n_bs, agg, tau, faults_on,
+                            clip_on), []).append((pos, spec))
     return buckets
 
 
@@ -500,7 +607,8 @@ def _learning_seed_inputs(data, cnn_cfg, k_part, k_init, n_seeds: int,
 
 def _learning_records(group: list[tuple[int, ScenarioSpec]], outs: dict,
                       n_seeds: int, n_rounds: int, dataset: str, agg: str,
-                      tau: int) -> dict[int, dict]:
+                      tau: int, scheduler: str = "dagsa_jit"
+                      ) -> dict[int, dict]:
     """[S, seeds, R] learning-bucket outputs -> per-scenario record dicts.
 
     Shared by ``run_learning_sweep`` and
@@ -512,6 +620,12 @@ def _learning_records(group: list[tuple[int, ScenarioSpec]], outs: dict,
     acc = np.asarray(outs["test_acc"])
     hand = (np.asarray(outs["handover_rate"])
             if "handover_rate" in outs else None)
+    n_del = (np.asarray(outs["n_delivered"])
+             if "n_delivered" in outs else None)
+    del_rate = (np.asarray(outs["delivered_rate"])
+                if n_del is not None else None)
+    goodput = (np.asarray(outs["goodput_mbit_s"])
+               if n_del is not None else None)
     wall = np.cumsum(t_round, axis=-1)
     records: dict[int, dict] = {}
     for i, (pos, spec) in enumerate(group):
@@ -538,6 +652,9 @@ def _learning_records(group: list[tuple[int, ScenarioSpec]], outs: dict,
             "dataset": dataset,
             "aggregation": agg,
             "tau_global": tau,
+            "scheduler": scheduler,
+            "faults": (spec.faults.to_json()
+                       if _fault_flags(spec)[0] else None),
             "n_seeds": n_seeds,
             "n_rounds": n_rounds,
             "final_acc_mean": _scalar_or_none(final_mean),
@@ -562,6 +679,16 @@ def _learning_records(group: list[tuple[int, ScenarioSpec]], outs: dict,
             records[pos]["handover_rate_mean"] = float(hand[i].mean())
             records[pos]["curves"]["handover_rate"] = \
                 hand[i].mean(axis=0).tolist()
+        if n_del is not None:
+            records[pos]["delivered_mean"] = float(n_del[i].mean())
+            records[pos]["delivered_rate_mean"] = float(del_rate[i].mean())
+            records[pos]["goodput_mbit_s_mean"] = float(goodput[i].mean())
+            records[pos]["curves"]["n_delivered"] = \
+                n_del[i].mean(axis=0).tolist()
+            records[pos]["curves"]["delivered_rate"] = \
+                del_rate[i].mean(axis=0).tolist()
+            records[pos]["curves"]["goodput_mbit_s"] = \
+                goodput[i].mean(axis=0).tolist()
     return records
 
 
@@ -576,25 +703,45 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                        compute: str = "full", select_cap: int | None = None,
                        aggregation: str | None = None,
                        tau_global: int | None = None,
+                       scheduler: str = "dagsa_jit",
+                       faults=None, deadline_s: float | None = None,
                        user_chunk: int | None = None,
                        seed: int = 0) -> list[dict]:
     """Accuracy-vs-simulated-wall-clock curves, one record per scenario.
 
-    Scenarios are bucketed by resolved array shape (n_users, n_bs) and
-    aggregation architecture; each bucket is ONE jit-compiled call covering
-    all its scenarios x seeds — the fused round engine of
-    :mod:`repro.fl.rounds` vmapped over the scenario parameter arrays.
-    ``aggregation``/``tau_global`` override every scenario's own choice
-    (``hfl-*`` scenarios default to hierarchical with their registered
-    tau).  Dataset and per-seed partitions/inits are shared across
-    scenarios (paired seeds).  See the module docstring for the record
-    schema; hierarchical records additionally carry ``tau_global``,
-    ``handover_rate_mean`` and a ``handover_rate`` curve.
+    Scenarios are bucketed by resolved array shape (n_users, n_bs),
+    aggregation architecture and fault-graph flags; each bucket is ONE
+    jit-compiled call covering all its scenarios x seeds — the fused round
+    engine of :mod:`repro.fl.rounds` vmapped over the scenario parameter
+    arrays.  ``aggregation``/``tau_global`` override every scenario's own
+    choice (``hfl-*`` scenarios default to hierarchical with their
+    registered tau).  ``faults`` (a preset name or
+    :class:`~repro.fl.faults.FaultSpec`) overrides every scenario's fault
+    model; ``deadline_s`` overrides just the round deadline;
+    ``scheduler="dagsa-r"`` switches the greedy to the failure-aware
+    delivery-discounted variant.  Dataset and per-seed partitions/inits
+    are shared across scenarios (paired seeds).  See the module docstring
+    for the record schema; hierarchical records additionally carry
+    ``tau_global``, ``handover_rate_mean`` and a ``handover_rate`` curve;
+    faulty records carry ``delivered_rate_mean`` / ``goodput_mbit_s_mean``
+    and per-round delivered/goodput curves.
     """
     from repro.data import make_dataset
     from repro.models import cnn
 
+    if scheduler not in SWEEP_SCHEDULERS:
+        raise ValueError(f"unknown sweep scheduler {scheduler!r}; "
+                         f"choose from {SWEEP_SCHEDULERS}")
     specs = [get_scenario(s) if isinstance(s, str) else s for s in scenarios]
+    if faults is not None:
+        fs = fl_faults.get_faults(faults) if isinstance(faults, str) \
+            else faults
+        specs = [dataclasses.replace(s, faults=fs) for s in specs]
+    if deadline_s is not None:
+        specs = [dataclasses.replace(
+            s, faults=dataclasses.replace(
+                s.faults if s.faults is not None else fl_faults.NO_FAULTS,
+                deadline_s=float(deadline_s))) for s in specs]
     base = cfg or WirelessConfig()
     data = make_dataset(dataset, seed=seed, n_train=n_train, n_test=n_test)
     h, wd, c = data.x_train.shape[1:]
@@ -604,7 +751,8 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     seed_keys = jax.random.split(k_cells, n_seeds)   # paired across scenarios
     records: dict[int, dict] = {}
     buckets = _learning_buckets(specs, base, aggregation, tau_global)
-    for (n_users, n_bs, agg, tau), group in buckets.items():
+    for (n_users, n_bs, agg, tau, faults_on, clip_on), group \
+            in buckets.items():
         _check_user_chunk(user_chunk, n_users)
         bcfg = dataclasses.replace(base, n_bs=n_bs)
         minp = int(np.ceil(bcfg.rho2 * n_users))
@@ -617,9 +765,10 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
             batch_size=batch_size, lr=float(lr), eval_every=eval_every,
             backend=backend, fedavg_backend=fedavg_backend, compute=compute,
             select_cap=select_cap, aggregation=agg, tau_global=tau,
+            scheduler=scheduler, faults_on=faults_on, clip_on=clip_on,
             user_chunk=user_chunk, n_models=len(mobility.MOBILITY_MODELS))
         records.update(_learning_records(group, outs, n_seeds, n_rounds,
-                                         dataset, agg, tau))
+                                         dataset, agg, tau, scheduler))
     return [records[i] for i in range(len(specs))]
 
 
@@ -669,6 +818,19 @@ def main() -> None:
     ap.add_argument("--tau-global", type=int, default=None,
                     help="global sync period for hierarchical aggregation "
                          "(--learning only)")
+    ap.add_argument("--scheduler", default="dagsa_jit",
+                    choices=SWEEP_SCHEDULERS,
+                    help="round scheduler; 'dagsa-r' discounts candidates "
+                         "by estimated delivery probability "
+                         "(--learning only)")
+    ap.add_argument("--faults", default=None,
+                    choices=tuple(fl_faults.FAULT_PRESETS),
+                    help="override every scenario's fault model with this "
+                         "preset (--learning only)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="T",
+                    help="round deadline in simulated seconds: the server "
+                         "stops waiting and drops late updates "
+                         "(--learning only)")
     args = ap.parse_args()
 
     names = list(SCENARIOS) if args.scenarios == "all" \
@@ -676,6 +838,11 @@ def main() -> None:
     if args.mesh is not None and not args.shard:
         ap.error("--mesh only applies with --shard; it would silently "
                  "do nothing")
+    if not args.learning and (args.faults is not None
+                              or args.deadline is not None
+                              or args.scheduler != "dagsa_jit"):
+        ap.error("--faults/--deadline/--scheduler shape the FL round loop; "
+                 "they only apply with --learning")
     if args.shard:
         # local import: shard_sweep imports this module's cell functions
         from repro.launch import shard_sweep
@@ -693,8 +860,9 @@ def main() -> None:
             lr=args.lr, eval_every=args.eval_every, backend=args.backend,
             fedavg_backend=args.fedavg_backend, compute=args.compute,
             select_cap=args.select_cap, aggregation=args.aggregation,
-            tau_global=args.tau_global, user_chunk=args.user_chunk,
-            seed=args.seed)
+            tau_global=args.tau_global, scheduler=args.scheduler,
+            faults=args.faults, deadline_s=args.deadline,
+            user_chunk=args.user_chunk, seed=args.seed)
         summary = " ".join(
             f"{r['scenario']}="
             f"{r['final_acc_mean']:.3f}" if r["final_acc_mean"] is not None

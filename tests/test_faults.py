@@ -1,0 +1,453 @@
+"""Fault-injection layer: spec validation, poisoned-update screening, the
+norm-clip defense, deadline semantics for every scheduler, dagsa-r, and
+failure-aware round-engine parity (fused == step bit-exact, eager within
+the repo's float tolerance)."""
+import dataclasses
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedule
+from repro.core.latency import (deadline_round_latency, on_time,
+                                per_user_latency)
+from repro.core.scenario import SCENARIOS
+from repro.core.scheduler import SCHEDULERS, delivery_discounted
+from repro.core.types import SchedulingProblem, WirelessConfig
+from repro.fl import (FAULT_PRESETS, FLConfig, FLSimulation, FaultSpec,
+                      NO_FAULTS, get_faults)
+from repro.fl import faults as fl_faults
+from repro.fl import server as fl_server
+from repro.kernels import ref
+from repro.kernels.fedavg_reduce import fedavg_reduce, fedavg_segment_reduce
+
+# the engine-parity world from test_fl.py, with a fault model attached
+SMALL = dict(scheduler="dagsa_jit",
+             wireless=WirelessConfig(n_users=10, n_bs=3),
+             n_train=200, n_test=100, batch_size=10, local_epochs=1,
+             eval_every=1, seed=0)
+
+
+def _max_leaf_diff(a, b) -> float:
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _record_json(rec) -> str:
+    """RoundRecord -> strict JSON, with the same NaN -> null lowering the
+    emitting layers (sweep/CLI records) apply to not-applicable fields
+    (e.g. ``handover_rate`` outside hierarchical runs)."""
+    d = {k: (None if isinstance(v, float) and not math.isfinite(v) else v)
+         for k, v in dataclasses.asdict(rec).items()}
+    return json.dumps(d, allow_nan=False)
+
+
+def _same_record(a, b) -> bool:
+    """Bit-level record equality that treats NaN == NaN (json literal)."""
+    return json.dumps(dataclasses.asdict(a), sort_keys=True) \
+        == json.dumps(dataclasses.asdict(b), sort_keys=True)
+
+
+# ------------------------------------------------------------- FaultSpec --
+def test_faultspec_validation():
+    with pytest.raises(ValueError, match="outage_base"):
+        FaultSpec(outage_base=1.5)
+    with pytest.raises(ValueError, match="crash_prob"):
+        FaultSpec(crash_prob=-0.1)
+    with pytest.raises(ValueError, match="straggler_sigma"):
+        FaultSpec(straggler_sigma=-1.0)
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        FaultSpec(corrupt_mode="zero")
+    with pytest.raises(ValueError, match="deadline_s"):
+        FaultSpec(deadline_s=0.0)
+    with pytest.raises(ValueError, match="clip_norm"):
+        FaultSpec(clip_norm=0.0)
+    with pytest.raises(ValueError, match="unknown fault preset"):
+        get_faults("nope")
+
+
+def test_faultspec_active_and_json():
+    assert not NO_FAULTS.active
+    assert not FaultSpec().active
+    for f in ("outage_base", "outage_edge", "outage_handover", "crash_prob",
+              "corrupt_prob"):
+        assert FaultSpec(**{f: 0.1}).active
+    assert FaultSpec(straggler_sigma=0.5).active
+    assert FaultSpec(deadline_s=2.0).active
+    assert FaultSpec(clip_norm=1.0).active
+    # inf deadline -> None so records stay strict JSON
+    d = json.loads(json.dumps(NO_FAULTS.to_json(), allow_nan=False))
+    assert d["deadline_s"] is None
+    assert FaultSpec(deadline_s=2.0).to_json()["deadline_s"] == 2.0
+
+
+def test_fault_params_lowering():
+    fp = fl_faults.fault_params(FaultSpec(corrupt_mode="scale",
+                                          clip_norm=7.0, deadline_s=1.5))
+    assert tuple(fp) == fl_faults.FAULT_PARAM_KEYS
+    assert fp["corrupt_mode_id"] == fl_faults.CORRUPT_MODES.index("scale")
+    assert fp["clip_norm"] == 7.0
+    # clip_norm=None lowers to inf (an exact no-op scale)
+    assert math.isinf(fl_faults.fault_params(NO_FAULTS)["clip_norm"])
+
+
+def test_fault_presets_registered_as_scenarios():
+    for name in ("faulty-uplink", "straggler-heavy", "adversarial-updates"):
+        assert name in SCENARIOS
+        assert SCENARIOS[name].faults is FAULT_PRESETS[name]
+        assert SCENARIOS[name].faults.active
+
+
+# ------------------------------------------------------- traced samplers --
+def test_outage_and_delivery_probability():
+    cfg = WirelessConfig(n_users=4, n_bs=4)
+    fp = fl_faults.fault_params(FAULT_PRESETS["faulty-uplink"])
+    edge = jnp.asarray([0.0, 0.5, 1.0, 1.0])
+    hand = jnp.asarray([False, False, False, True])
+    p = np.asarray(fl_faults.outage_probability(fp, edge, hand))
+    np.testing.assert_allclose(p[:3], [0.05, 0.30, 0.55], atol=1e-6)
+    assert 0.0 <= p[3] <= 1.0 and p[3] > p[2]   # handover adds hazard
+    d = np.asarray(fl_faults.delivery_probability(fp, edge, hand))
+    np.testing.assert_allclose(d, (1.0 - p), atol=1e-6)  # crash_prob = 0
+    # edge_proximity is normalized into [0, 1]
+    dist = jnp.asarray([[10.0, 1e4], [1e5, 2e4]])
+    serving = jnp.asarray([0, 1])
+    e = np.asarray(fl_faults.edge_proximity(dist, serving, cfg))
+    assert (e >= 0.0).all() and (e <= 1.0).all() and e[0] < e[1]
+
+
+def test_sample_round_faults_extremes():
+    fp = fl_faults.fault_params(FaultSpec(outage_base=1.0))
+    tcomp = jnp.full((6,), 0.1)
+    zeros = jnp.zeros((6,))
+    t, alive, corrupt = fl_faults.sample_round_faults(
+        jax.random.PRNGKey(0), fp, zeros, zeros.astype(bool), tcomp)
+    np.testing.assert_array_equal(np.asarray(alive), False)  # certain outage
+    np.testing.assert_array_equal(np.asarray(corrupt), False)
+    np.testing.assert_allclose(np.asarray(t), 0.1)  # sigma=0: no straggler
+    fp = fl_faults.fault_params(FaultSpec(corrupt_prob=1.0))
+    _, alive, corrupt = fl_faults.sample_round_faults(
+        jax.random.PRNGKey(1), fp, zeros, zeros.astype(bool), tcomp)
+    np.testing.assert_array_equal(np.asarray(alive), True)
+    np.testing.assert_array_equal(np.asarray(corrupt), True)
+
+
+def test_corrupt_updates_modes():
+    params = {"w": jnp.ones((3, 2))}
+    flag = jnp.asarray([False, True, False])
+    nan = np.asarray(fl_faults.corrupt_updates(params, flag, 0, 1e3)["w"])
+    assert np.isnan(nan[1]).all()
+    np.testing.assert_allclose(nan[[0, 2]], 1.0)
+    inf = np.asarray(fl_faults.corrupt_updates(params, flag, 1, 1e3)["w"])
+    assert np.isinf(inf[1]).all()
+    big = np.asarray(fl_faults.corrupt_updates(params, flag, 2, 1e3)["w"])
+    np.testing.assert_allclose(big[1], 1e3)
+    np.testing.assert_allclose(big[[0, 2]], 1.0)
+
+
+# --------------------------------------- poisoned-update screening (Eq. 2) --
+def test_fedavg_nan_screening_regression():
+    """The 0 * NaN = NaN regression: a masked-OUT client with NaN params
+    must not poison the weighted sum, and a masked-IN poisoned client is
+    excluded by the finite screen — in the jnp oracle, both kernel oracles
+    and both Pallas reductions."""
+    g = {"w": jnp.zeros((4,))}
+    clients = {"w": jnp.stack([jnp.ones(4), jnp.full((4,), jnp.nan),
+                               jnp.full((4,), 3.0)])}
+    sizes = jnp.ones((3,))
+    mask = jnp.asarray([True, False, True])     # NaN client masked out
+    expect = 2.0                                # mean(1, 3)
+    for sel in (mask, jnp.ones(3, dtype=bool)):  # ...or masked in
+        for fn in (fl_server.fedavg, ref.fedavg_reduce, fedavg_reduce):
+            out = fn(g, clients, sel, sizes)
+            np.testing.assert_allclose(np.asarray(out["w"]), expect,
+                                       atol=1e-6, err_msg=str(fn))
+    # segmented: the poisoned client's BS keeps its edge model (empty after
+    # screening), the others aggregate normally
+    e = {"w": jnp.full((2, 4), 7.0)}
+    assign = jnp.asarray([[False, True], [True, False], [False, True]])
+    for fn in (fl_server.fedavg_segmented, ref.fedavg_segment_reduce,
+               fedavg_segment_reduce):
+        out = fn(e, clients, assign, sizes)
+        np.testing.assert_allclose(np.asarray(out["w"][0]), 7.0,
+                                   err_msg=str(fn))        # only the NaN one
+        np.testing.assert_allclose(np.asarray(out["w"][1]), expect,
+                                   atol=1e-6, err_msg=str(fn))
+
+
+def test_fedavg_all_clients_poisoned_keeps_global():
+    g = {"w": jnp.full((4,), 5.0)}
+    clients = {"w": jnp.full((2, 4), jnp.nan)}
+    for fn in (fl_server.fedavg, ref.fedavg_reduce, fedavg_reduce):
+        out = fn(g, clients, jnp.ones(2, dtype=bool), jnp.ones(2))
+        np.testing.assert_allclose(np.asarray(out["w"]), 5.0,
+                                   err_msg=str(fn))
+
+
+def test_fedavg_clip_norm_defense():
+    """clip_norm bounds each update's offset from the reference; the
+    large-norm ("scale") attack is neutralized; clip=None == clip=inf; the
+    Pallas reduction matches the jnp oracle under clipping."""
+    g = {"w": jnp.zeros((4,))}
+    honest = jnp.ones(4)
+    attack = jnp.full((4,), 500.0)              # finite, huge norm
+    clients = {"w": jnp.stack([honest, attack])}
+    sel = jnp.ones(2, dtype=bool)
+    sizes = jnp.ones((2,))
+    clip = 2.0
+    # s_attack = 2 / 1000, s_honest = 1 (||honest|| = 2 == clip)
+    expect = (honest + attack * (clip / 1000.0)) / 2.0
+    for fn in (fl_server.fedavg, ref.fedavg_reduce, fedavg_reduce):
+        out = fn(g, clients, sel, sizes, clip)
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(expect), rtol=1e-5,
+                                   err_msg=str(fn))
+    none = fl_server.fedavg(g, clients, sel, sizes, None)
+    inf = fl_server.fedavg(g, clients, sel, sizes, math.inf)
+    np.testing.assert_array_equal(np.asarray(none["w"]),
+                                  np.asarray(inf["w"]))
+
+
+def test_fedavg_segmented_clip_uses_edge_reference():
+    """Hierarchical clipping measures each client against its OWN BS's edge
+    model, not a global one."""
+    e = {"w": jnp.stack([jnp.zeros(4), jnp.full((4,), 100.0)])}
+    # client 0 -> BS 0 near its edge model; client 1 -> BS 1 near ITS edge
+    # model (far from BS 0's) — with an edge-referenced clip both pass
+    # through nearly unclipped
+    clients = {"w": jnp.stack([jnp.ones(4), jnp.full((4,), 101.0)])}
+    assign = jnp.asarray([[True, False], [False, True]])
+    out = fl_server.fedavg_segmented(e, clients, assign, jnp.ones(2),
+                                     clip_norm=4.0)
+    np.testing.assert_allclose(np.asarray(out["w"][0]), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["w"][1]), 101.0, rtol=1e-5)
+    pallas = fedavg_segment_reduce(e, clients, assign, jnp.ones(2), 4.0)
+    np.testing.assert_allclose(np.asarray(pallas["w"]),
+                               np.asarray(out["w"]), rtol=1e-5)
+
+
+# ------------------------------------------- deadline semantics (Eq. (3)) --
+def _random_problem(seed, n=12, m=3):
+    rng = np.random.default_rng(seed)
+    snr = jnp.asarray(rng.lognormal(2.0, 2.0, (n, m)), jnp.float32)
+    return SchedulingProblem(
+        snr=snr, coeff=0.5 / jnp.log2(1.0 + snr),
+        tcomp=jnp.asarray(rng.uniform(0.05, 0.3, n), jnp.float32),
+        bs_bw=jnp.asarray(rng.uniform(0.4, 1.6, m), jnp.float32),
+        necessary=jnp.asarray(rng.random(n) < 0.2),
+        min_participants=max(1, n // 2))
+
+
+@pytest.mark.parametrize("name", SCHEDULERS)
+def test_deadline_bounds_round_latency_every_scheduler(name):
+    """round_latency <= deadline for EVERY registered scheduler, including
+    the deadline-binding, deadline-slack and zero-selected corners."""
+    cfg = WirelessConfig()
+    for i in range(3):
+        prob = _random_problem(i)
+        res = schedule(name, prob, cfg, jax.random.PRNGKey(i), seed=i)
+        t_user = per_user_latency(prob, res)
+        for dl in (0.05, 0.5, math.inf):     # binding / loose / disabled
+            t = float(deadline_round_latency(t_user, res.selected, dl))
+            assert t <= dl + 1e-6, f"scheduler={name} deadline={dl}"
+            assert t <= float(res.t_round) + 1e-4
+            late = np.asarray(~on_time(t_user, dl) & res.selected)
+            if late.any():                   # someone dropped -> dl binds
+                assert t == pytest.approx(min(dl, float(res.t_round)),
+                                          rel=1e-5)
+        # all-clients-failed / zero-selected corner: nothing to wait for
+        none = jnp.zeros_like(res.selected)
+        assert float(deadline_round_latency(t_user, none, 0.5)) == 0.0
+
+
+def test_deadline_straggler_interaction():
+    """A straggler multiplier pushes realized latency past the deadline:
+    the user goes late, the server stops at T_dl."""
+    prob = _random_problem(0)
+    res = schedule("dagsa_jit", prob, WirelessConfig(), jax.random.PRNGKey(0))
+    slow = per_user_latency(prob, res, tcomp=prob.tcomp * 100.0)
+    dl = float(res.t_round)                  # everyone was on time before
+    assert not bool(jnp.any(~on_time(per_user_latency(prob, res), dl)
+                            & res.selected))
+    assert bool(jnp.any(~on_time(slow, dl) & res.selected))
+    assert float(deadline_round_latency(slow, res.selected, dl)) \
+        == pytest.approx(dl)
+
+
+# ----------------------------------------------------------------- dagsa-r --
+def test_delivery_discount_identity_and_ranking():
+    prob = _random_problem(3)
+    assert delivery_discounted(prob) is prob          # no estimate -> no-op
+    p = jnp.asarray(np.random.default_rng(0).uniform(0.1, 1.0, 12),
+                    jnp.float32)
+    disc = delivery_discounted(dataclasses.replace(prob, p_deliver=p))
+    np.testing.assert_allclose(np.asarray(disc.snr),
+                               np.asarray(prob.snr * p[:, None]), rtol=1e-6)
+    # per-user scaling never moves a user's best-BS argmax
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(disc.snr, axis=1)),
+        np.asarray(jnp.argmax(prob.snr, axis=1)))
+    # the bandwidth-latency side is untouched
+    assert disc.coeff is prob.coeff
+
+
+@pytest.mark.parametrize("pair", [("dagsa-r", "dagsa_jit"),
+                                  ("dagsa-r-host", "dagsa")])
+def test_dagsa_r_equals_dagsa_without_estimate(pair):
+    """p_deliver=None: dagsa-r degrades to plain DAGSA exactly (same keys,
+    same decisions) — in both the jit and host variants."""
+    robust, plain = pair
+    cfg = WirelessConfig()
+    for i in range(2):
+        prob = _random_problem(i)
+        key = jax.random.PRNGKey(i)
+        r1 = schedule(robust, prob, cfg, key, seed=i)
+        r2 = schedule(plain, prob, cfg, key, seed=i)
+        np.testing.assert_array_equal(np.asarray(r1.selected),
+                                      np.asarray(r2.selected))
+        np.testing.assert_array_equal(np.asarray(r1.assign),
+                                      np.asarray(r2.assign))
+        np.testing.assert_array_equal(np.asarray(r1.t_round),
+                                      np.asarray(r2.t_round))
+
+
+@pytest.mark.parametrize("pair", [("dagsa-r", "dagsa_jit"),
+                                  ("dagsa-r-host", "dagsa")])
+def test_dagsa_r_is_plain_dagsa_on_discounted_problem(pair):
+    """dagsa-r == plain DAGSA run on the explicitly-discounted problem —
+    the discount is the ONLY thing the robust variant adds, in both the
+    jit and host dispatch paths."""
+    robust, plain = pair
+    cfg = WirelessConfig()
+    prob = _random_problem(5)
+    p = jnp.asarray(np.linspace(0.05, 1.0, 12), jnp.float32)
+    prob = dataclasses.replace(prob, p_deliver=p)
+    key = jax.random.PRNGKey(0)
+    r_rob = schedule(robust, prob, cfg, key, seed=0)
+    r_ref = schedule(plain, delivery_discounted(prob), cfg, key, seed=0)
+    np.testing.assert_array_equal(np.asarray(r_rob.selected),
+                                  np.asarray(r_ref.selected))
+    np.testing.assert_array_equal(np.asarray(r_rob.assign),
+                                  np.asarray(r_ref.assign))
+    np.testing.assert_array_equal(np.asarray(r_rob.t_round),
+                                  np.asarray(r_ref.t_round))
+
+
+# -------------------------------------------- failure-aware round engine ---
+def test_inert_faultspec_is_bit_identical_to_no_faults():
+    """faults=NO_FAULTS must compile the exact fault-free graph: same PRNG
+    splits, bit-identical records and params."""
+    plain = FLSimulation(FLConfig(**SMALL))
+    inert = FLSimulation(FLConfig(**SMALL, faults=NO_FAULTS))
+    assert not inert.faults.active
+    r_p = plain.run(3, mode="fused")
+    r_i = inert.run(3, mode="fused")
+    for a, b in zip(r_p, r_i):
+        assert _same_record(a, b)
+    assert _max_leaf_diff(plain.params, inert.params) == 0.0
+
+
+def test_faulty_fused_step_bit_identical_eager_close():
+    """The engine contract under faults: fused and step trace the same
+    graph (bit-identical), eager matches within the repo's established
+    float tolerance; discrete decisions identical across all three."""
+    sims = {m: FLSimulation(FLConfig(**SMALL, faults="faulty-uplink",
+                                     deadline_s=2.0))
+            for m in ("fused", "step", "eager")}
+    recs = {m: sim.run(3, mode=m) for m, sim in sims.items()}
+    for r in recs["fused"]:
+        assert 0 <= r.n_delivered <= r.n_selected
+        assert 0.0 <= r.delivered_rate <= 1.0
+        assert r.t_round <= 2.0 + 1e-6
+        _record_json(r)
+    for a, b in zip(recs["fused"], recs["step"]):
+        assert _same_record(a, b)
+    assert _max_leaf_diff(sims["fused"].params, sims["step"].params) == 0.0
+    for a, e in zip(recs["fused"], recs["eager"]):
+        assert (a.n_selected, a.n_delivered) == (e.n_selected, e.n_delivered)
+        np.testing.assert_allclose(a.t_round, e.t_round, rtol=1e-6)
+        np.testing.assert_allclose(a.wall_clock, e.wall_clock, rtol=1e-6)
+        np.testing.assert_allclose(a.delivered_rate, e.delivered_rate,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(a.goodput_mbit_s, e.goodput_mbit_s,
+                                   rtol=1e-4)
+    assert _max_leaf_diff(sims["fused"].params, sims["eager"].params) <= 1e-5
+
+
+def test_total_corruption_never_nans_the_model():
+    """100% NaN corruption: every update is screened, the global model
+    carries forward finite, records stay strict JSON."""
+    sim = FLSimulation(FLConfig(**SMALL,
+                                faults=FaultSpec(corrupt_prob=1.0)))
+    init = jax.tree.map(jnp.copy, sim.params)
+    recs = sim.run(3, mode="fused")
+    for r in recs:
+        _record_json(r)
+        assert r.n_delivered > 0          # delivered, then screened
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(sim.params))
+    assert _max_leaf_diff(sim.params, init) == 0.0   # zero-total guard
+
+
+def test_all_clients_failed_keeps_model():
+    """outage_base=1: nothing is ever delivered; the previous global model
+    carries forward and the delivery metrics report zero."""
+    sim = FLSimulation(FLConfig(**SMALL, faults=FaultSpec(outage_base=1.0)))
+    init = jax.tree.map(jnp.copy, sim.params)
+    recs = sim.run(2, mode="fused")
+    for r in recs:
+        _record_json(r)
+        assert r.n_delivered == 0
+        assert r.delivered_rate == 0.0
+        assert r.goodput_mbit_s == 0.0
+    assert _max_leaf_diff(sim.params, init) == 0.0
+
+
+def test_scale_attack_survivable_with_clip():
+    """A finite large-norm attack passes the finite screen; the clip_norm
+    defense bounds its influence and the model stays finite."""
+    spec = FaultSpec(corrupt_prob=0.3, corrupt_mode="scale",
+                     corrupt_scale=1e4, clip_norm=5.0)
+    sim = FLSimulation(FLConfig(**SMALL, faults=spec))
+    recs = sim.run(3, mode="fused")
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(sim.params))
+    assert float(jnp.max(jnp.abs(jnp.concatenate(
+        [x.ravel() for x in jax.tree.leaves(sim.params)])))) < 100.0
+    for r in recs:
+        _record_json(r)
+
+
+# ------------------------------------------------------------ faulty sweep --
+def test_faulty_learning_sweep_records():
+    from repro.launch.sweep import run_learning_sweep
+    recs = run_learning_sweep(
+        ["faulty-uplink"], n_seeds=2, n_rounds=2,
+        cfg=WirelessConfig(n_users=8, n_bs=3), n_train=96, n_test=64,
+        local_epochs=1, batch_size=6, scheduler="dagsa-r")
+    (r,) = recs
+    json.dumps(r, allow_nan=False)
+    assert r["scheduler"] == "dagsa-r"
+    assert r["faults"]["outage_edge"] == 0.5
+    assert 0.0 <= r["delivered_rate_mean"] <= 1.0
+    assert r["goodput_mbit_s_mean"] >= 0.0
+    assert len(r["curves"]["delivered_rate"]) == 2
+    assert len(r["curves"]["n_delivered"]) == 2
+
+
+def test_plain_record_unchanged_next_to_faulty_bucket():
+    """A fault-free scenario's record must be byte-identical whether or not
+    a faulty scenario rides in the same sweep (separate shape buckets, no
+    PRNG interference)."""
+    from repro.launch.sweep import run_learning_sweep
+    kw = dict(n_seeds=2, n_rounds=2, cfg=WirelessConfig(n_users=8, n_bs=3),
+              n_train=96, n_test=64, local_epochs=1, batch_size=6)
+    alone = run_learning_sweep(["paper-default"], **kw)
+    mixed = run_learning_sweep(["paper-default", "adversarial-updates"],
+                               **kw)
+    assert json.dumps(alone[0], sort_keys=True) \
+        == json.dumps(mixed[0], sort_keys=True)
+    json.dumps(mixed[1], allow_nan=False)     # the faulty record is strict

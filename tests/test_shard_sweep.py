@@ -164,6 +164,18 @@ def test_shard_learning_sweep_hierarchical_bit_identical():
     assert _same(plain, sharded)
 
 
+def test_shard_learning_sweep_faulty_bit_identical():
+    """Fault realizations come from the per-cell scan PRNG, so a faulty
+    dagsa-r sweep is byte-identical sharded vs unsharded at ANY device
+    count (the CI matrix re-runs this on 2 and 8 forced host devices)."""
+    kw = dict(n_seeds=2, scheduler="dagsa-r", **LEARN_KW)
+    plain = run_learning_sweep(["faulty-uplink"], **kw)
+    sharded = run_shard_learning_sweep(["faulty-uplink"], **kw)
+    assert _same(plain, sharded)
+    assert plain[0]["scheduler"] == "dagsa-r"
+    assert 0.0 <= plain[0]["delivered_rate_mean"] <= 1.0
+
+
 # --------------------------------------------------- fleet-axis scheduler ---
 def _fleet_problems(n: int):
     cfg = WirelessConfig()
