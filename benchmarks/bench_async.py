@@ -1,0 +1,155 @@
+"""Buffered-async vs synchronous FL: wall-clock-to-accuracy head-to-head.
+
+For each scenario the same world runs twice on the fused engine — once
+synchronously (rounds end when the slowest scheduled client finishes, the
+paper's Eq. (1)–(3) loop) and once buffered-async (the server ticks every
+``tick_s`` simulated seconds and folds in whatever updates landed,
+staleness-discounted ``(1+s)^(-alpha)``; docs/ASYNC.md).  Both runs cover
+the SAME simulated time horizon, so ``acc_at_budget`` — test accuracy by
+half the sync run's simulated wall clock — is the latency headline the
+paper's motivation targets: async aggregation decouples progress from the
+slowest client, which is exactly where mobility and stragglers hurt the
+sync loop.
+
+Where async has signal: ``high-mobility`` (fast-fading worlds make the
+per-round max latency spiky) and ``straggler-heavy`` (compute-tail
+inflation + crashes make it heavy-tailed).  The ``acc_at_budget_gain_vs_
+sync`` metric the regression gate checks is the async - sync accuracy gap
+at that budget (sync rows carry 0.0 by construction).
+
+``tick_s`` is derived from the measured world, not hardcoded: half the
+sync run's mean round latency, so the server ticks ~2x per sync round and
+the derived knob tracks any scenario retuning.
+
+Each record is emitted twice: a CSV row (harness contract
+``name,us_per_call,derived``; value = microseconds per engine step) and a
+machine-readable ``#json `` line (CI uploads these as
+``BENCH_async.json``).
+
+JSON record schema (one line per scenario x mode):
+
+    {"bench": "async",
+     "scenario": str,          # world (registry name)
+     "mode": "sync" | "async",
+     "setting": str,           # quick | full
+     "n_users": int, "n_bs": int,
+     "n_steps": int,           # scan length: rounds (sync) / ticks (async)
+     "tick_s": float | None,   # derived tick (async rows)
+     "staleness_alpha": float | None,
+     "us_per_round": float,    # per engine step
+     "rounds_per_sec": float,
+     "sim_wall_s": float,      # simulated seconds covered
+     "budget_s": float,        # the shared accuracy budget
+     "final_acc": float,
+     "acc_at_budget": float,
+     "acc_at_budget_gain_vs_sync": float,
+     "delivered_rate_mean": float | None}  # delivered/fleet per tick
+                                           #   (async; sync faulty rows:
+                                           #   delivered/selected)
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.types import WirelessConfig
+from repro.fl import FLConfig, FLSimulation
+from repro.fl.rounds import accuracy_at_budget
+from repro.models.cnn import CNNConfig
+
+# (n_users, n_bs, n_train, local_epochs, batch_size, n_rounds, cnn_cfg)
+QUICK = (32, 8, 320, 1, 8, 20,
+         CNNConfig(height=28, width=28, channels=1, c1=4, c2=8, hidden=16))
+FULL = (50, 8, 1000, 2, 10, 20, None)
+
+SCENARIO_NAMES = ("high-mobility", "straggler-heavy")
+
+STALENESS_ALPHA = 0.5
+
+
+def _make_sim(scenario, n_users, n_bs, n_train, epochs, batch, cnn_cfg,
+              **async_kw) -> FLSimulation:
+    cfg = FLConfig(scheduler="dagsa_jit", scenario=scenario,
+                   wireless=WirelessConfig(n_users=n_users, n_bs=n_bs),
+                   n_train=n_train, n_test=100, local_epochs=epochs,
+                   batch_size=batch, eval_every=1, seed=0, cnn=cnn_cfg,
+                   **async_kw)
+    return FLSimulation(cfg)
+
+
+def _time_steps(sim, n_steps: int) -> float:
+    """Best-of-3 seconds per engine step on an already-compiled sim."""
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        sim.run(n_steps)
+        best = min(best, time.perf_counter() - t0)
+    return best / n_steps
+
+
+def run(quick: bool = True) -> None:
+    setting = "quick" if quick else "full"
+    n_users, n_bs, n_train, epochs, batch, n_rounds, cnn_cfg = \
+        QUICK if quick else FULL
+
+    for scenario in SCENARIO_NAMES:
+        # -------------------------------------------------- sync reference
+        sim = _make_sim(scenario, n_users, n_bs, n_train, epochs, batch,
+                        cnn_cfg)
+        recs = sim.run(n_rounds, mode="fused")       # compile + learn
+        sec = _time_steps(sim, n_rounds)
+        sim_wall = recs[-1].wall_clock
+        budget = sim_wall / 2
+        mean_round = float(np.mean([r.t_round for r in recs]))
+        sync_acc_at = accuracy_at_budget(recs, budget)
+        rates = [r.delivered_rate for r in recs
+                 if math.isfinite(r.delivered_rate)]
+        rows = [{
+            "bench": "async", "scenario": scenario, "mode": "sync",
+            "setting": setting, "n_users": n_users, "n_bs": n_bs,
+            "n_steps": n_rounds, "tick_s": None, "staleness_alpha": None,
+            "us_per_round": sec * 1e6, "rounds_per_sec": 1.0 / sec,
+            "sim_wall_s": sim_wall, "budget_s": budget,
+            "final_acc": recs[-1].test_acc,
+            "acc_at_budget": sync_acc_at,
+            "acc_at_budget_gain_vs_sync": 0.0,
+            "delivered_rate_mean": (float(np.mean(rates)) if rates
+                                    else None),
+        }]
+
+        # ------------------------------------------------- buffered-async
+        # server ticks ~2x per sync round; same simulated horizon
+        tick_s = mean_round / 2
+        n_ticks = int(math.ceil(sim_wall / tick_s))
+        asim = _make_sim(scenario, n_users, n_bs, n_train, epochs, batch,
+                         cnn_cfg, aggregation_async=True, tick_s=tick_s,
+                         staleness_alpha=STALENESS_ALPHA)
+        arecs = asim.run(n_ticks)
+        asec = _time_steps(asim, n_ticks)
+        rows.append({
+            "bench": "async", "scenario": scenario, "mode": "async",
+            "setting": setting, "n_users": n_users, "n_bs": n_bs,
+            "n_steps": n_ticks, "tick_s": tick_s,
+            "staleness_alpha": STALENESS_ALPHA,
+            "us_per_round": asec * 1e6, "rounds_per_sec": 1.0 / asec,
+            "sim_wall_s": arecs[-1].wall_clock, "budget_s": budget,
+            "final_acc": arecs[-1].test_acc,
+            "acc_at_budget": accuracy_at_budget(arecs, budget),
+            "acc_at_budget_gain_vs_sync":
+                accuracy_at_budget(arecs, budget) - sync_acc_at,
+            "delivered_rate_mean":
+                float(np.mean([r.delivered_rate for r in arecs])),
+        })
+
+        for rec in rows:
+            emit(f"async_{scenario}_{rec['mode']}_{setting}",
+                 rec["us_per_round"],
+                 f"acc_at_budget={rec['acc_at_budget']:.3f} "
+                 f"final_acc={rec['final_acc']:.3f} "
+                 f"gain_vs_sync={rec['acc_at_budget_gain_vs_sync']:+.3f} "
+                 f"sim_wall={rec['sim_wall_s']:.2f}s")
+            print(f"#json {json.dumps(rec)}")

@@ -120,6 +120,22 @@ SPECS: dict[str, BenchSpec] = {
             # raw wall-clock: catastrophic-regression guard only
             Metric("us_per_round", _LOWER, rel_tol=1.50),
         )),
+    "async": BenchSpec(
+        file="BENCH_async.json", only="async", bench="async",
+        key=("scenario", "mode", "setting"),
+        metrics=(
+            # deterministic fused-scan trajectories again: the async - sync
+            # accuracy gap at the shared simulated budget only moves if
+            # engine semantics change — a tight absolute gate keeps
+            # "buffered-async beats sync where rounds are straggler-bound"
+            # from silently regressing
+            Metric("acc_at_budget_gain_vs_sync", _HIGHER, abs_tol=0.02),
+            Metric("acc_at_budget", _HIGHER, abs_tol=0.15),
+            Metric("final_acc", _HIGHER, abs_tol=0.15),
+            Metric("delivered_rate_mean", _HIGHER, abs_tol=0.05),
+            # raw wall-clock: catastrophic-regression guard only
+            Metric("us_per_round", _LOWER, rel_tol=1.50),
+        )),
 }
 
 

@@ -24,6 +24,8 @@ BENCHES = [
     ("hfl", "benchmarks.bench_hfl", "hierarchical vs single-tier FL"),
     ("faults", "benchmarks.bench_faults",
      "failure-aware scheduling under injected faults"),
+    ("async", "benchmarks.bench_async",
+     "buffered-async vs sync wall-clock-to-accuracy"),
     ("roofline", "benchmarks.bench_roofline", "dry-run roofline terms"),
 ]
 

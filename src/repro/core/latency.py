@@ -56,3 +56,17 @@ def deadline_round_latency(t_user: jnp.ndarray, selected: jnp.ndarray,
 def on_time(t_user: jnp.ndarray, deadline_s) -> jnp.ndarray:
     """[N] bool: the user's update arrives before the server stops waiting."""
     return t_user <= deadline_s
+
+
+def completion_times(problem: SchedulingProblem, result: ScheduleResult,
+                     now, tcomp: jnp.ndarray | None = None) -> jnp.ndarray:
+    """[N] absolute wall-clock instant each scheduled user's update lands.
+
+    ``now`` is the simulated clock at dispatch; each scheduled user finishes
+    at ``now + tcomp_i + t_up_i`` (Eq. (1), the same per-user latency the
+    synchronous Eq. (3) maxes over).  Unscheduled users report ``inf`` —
+    the buffered-async engine's "never completes" sentinel, so these rows
+    sort to the end of the event queue and never deliver.
+    """
+    t_user = per_user_latency(problem, result, tcomp=tcomp)
+    return jnp.where(result.selected, now + t_user, jnp.inf)

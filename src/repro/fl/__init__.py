@@ -7,10 +7,14 @@ from repro.fl.faults import (FAULT_PRESETS, FaultSpec, NO_FAULTS,
 from repro.fl.partition import shard_partition
 from repro.fl.rounds import (DEFAULT_TAU_GLOBAL, FLConfig, FLSimulation,
                              FUSED_SCHEDULERS, RoundRecord,
-                             accuracy_at_budget, hierarchical_round,
+                             accuracy_at_budget, aggregate_weighted,
+                             async_busy, async_queue_init, async_queue_step,
+                             async_round_tick, hierarchical_round,
                              train_and_aggregate)
 
 __all__ = ["shard_partition", "FLConfig", "FLSimulation", "RoundRecord",
            "FUSED_SCHEDULERS", "DEFAULT_TAU_GLOBAL", "accuracy_at_budget",
            "hierarchical_round", "train_and_aggregate", "FaultSpec",
-           "FAULT_PRESETS", "NO_FAULTS", "get_faults"]
+           "FAULT_PRESETS", "NO_FAULTS", "get_faults", "async_queue_init",
+           "async_queue_step", "async_busy", "async_round_tick",
+           "aggregate_weighted"]

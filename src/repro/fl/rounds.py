@@ -45,6 +45,20 @@ Aggregation architectures (``FLConfig.aggregation``):
     the convergence effect that paper studies.  Lives entirely inside the
     traced round step (edge states ride the ``lax.scan`` carry), so fused
     runs stay one compiled call.
+
+Buffered-async aggregation (``FLConfig.aggregation_async``, docs/ASYNC.md):
+the synchronous Eq. (3) round blocks on the slowest scheduled uplink; the
+async engine instead advances simulated time in fixed ``tick_s`` steps,
+dispatches clients whose updates complete at Eq. (1) completion times
+(:func:`repro.core.latency.completion_times`), parks in-flight updates in a
+fixed-capacity event queue carried as sorted arrays in the ``lax.scan``
+carry (no host callbacks), and aggregates everything that lands within the
+tick under the staleness discount ``w(s) = (1 + s)^(-alpha)``
+(:func:`repro.fl.server.staleness_weights`, after Online-FEEL, arXiv
+2410.10833) folded into the same masked Eq. (2) reduction.  With ``tick_s``
+covering the slowest client and ``alpha = 0`` the engine degenerates
+BIT-IDENTICALLY to the synchronous fused path — the correctness anchor
+``tests/test_async.py`` locks down.
 """
 from __future__ import annotations
 
@@ -149,6 +163,20 @@ class FLConfig:
                                         # late clients are dropped, not
                                         # waited for (deadline-truncated
                                         # Eq. (3))
+    aggregation_async: bool = False  # buffered-async engine: aggregate every
+                                     # tick_s of simulated time from the
+                                     # in-flight event queue instead of
+                                     # blocking on the slowest uplink
+                                     # (docs/ASYNC.md)
+    tick_s: Optional[float] = None   # async aggregation period (simulated
+                                     # seconds); REQUIRED when
+                                     # aggregation_async
+    staleness_alpha: float = 0.0     # staleness discount exponent alpha in
+                                     # w(s) = (1+s)^(-alpha); 0 disables
+    buffer_size: Optional[int] = None   # event-queue capacity (in-flight
+                                        # updates); default n_users, which
+                                        # can never overflow (each client
+                                        # has at most one update in flight)
 
     def __post_init__(self):
         if self.compute not in COMPUTE_MODES:
@@ -173,6 +201,38 @@ class FLConfig:
             raise ValueError(
                 "faults must be a repro.fl.faults.FaultSpec, a preset name, "
                 f"or None; got {type(self.faults).__name__}")
+        if self.aggregation_async:
+            if self.tick_s is None:
+                raise ValueError(
+                    "aggregation_async=True needs tick_s (the simulated "
+                    "aggregation period in seconds)")
+            if self.compute != "full":
+                raise ValueError(
+                    "aggregation_async trains the full fleet and masks at "
+                    "the delivery buffer; compute='selected' would gather "
+                    "by schedule, not by delivery — use compute='full'")
+            if self.aggregation == "hierarchical":
+                raise ValueError(
+                    "aggregation_async composes with the single-tier "
+                    "Eq. (2) only; hierarchical edge aggregation is "
+                    "synchronous by construction")
+        else:
+            for name, val, default in (("tick_s", self.tick_s, None),
+                                       ("staleness_alpha",
+                                        self.staleness_alpha, 0.0),
+                                       ("buffer_size", self.buffer_size,
+                                        None)):
+                if val != default:
+                    raise ValueError(
+                        f"{name}={val!r} only applies with "
+                        f"aggregation_async=True; it would silently do "
+                        f"nothing")
+        if self.tick_s is not None and not self.tick_s > 0.0:
+            raise ValueError("tick_s must be > 0")
+        if self.staleness_alpha < 0.0:
+            raise ValueError("staleness_alpha must be >= 0")
+        if self.buffer_size is not None and self.buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
 
 
 @dataclasses.dataclass
@@ -189,8 +249,13 @@ class RoundRecord:
     n_delivered: int = -1     # scheduled clients whose update arrived
                               # (-1 when the fault layer is off)
     delivered_rate: float = float("nan")   # n_delivered / n_selected
+                                           # (async: n_delivered / n_users)
     goodput_mbit_s: float = float("nan")   # delivered uplink Mbit per
                                            # simulated second this round
+    n_inflight: int = -1      # async: updates still in the event queue at
+                              # tick end (-1 on synchronous runs)
+    n_dropped: int = -1       # async: updates evicted by a full buffer
+                              # this tick (-1 on synchronous runs)
 
 
 def train_and_aggregate(loss_fn, params: PyTree, x_clients, y_clients, keys,
@@ -244,6 +309,158 @@ def train_and_aggregate(loss_fn, params: PyTree, x_clients, y_clients, keys,
                              clip_norm=clip_norm)
     return fl_server.fedavg(params, client_params, sel, sizes,
                             clip_norm=clip_norm)
+
+
+# ---------------------------------------------------- buffered-async engine --
+# The in-flight event queue is a tuple of fixed-shape arrays riding the
+# lax.scan carry (docs/ASYNC.md):
+#
+#     comp  [B] f32   absolute Eq. (1) completion time; inf = empty slot
+#     tick  [B] i32   the tick the update was dispatched on (staleness base)
+#     idx   [B] i32   owning client; N is the out-of-bounds empty sentinel
+#     size  [B] f32   the client's Eq. (2) data weight |D_i|
+#     upd   pytree    the update itself, leaves [B, ...]
+#
+# Invariant: `comp` is sorted ascending, so live entries form a prefix and
+# capacity eviction is a slice.  Clients with an update in flight are
+# "busy" and not re-dispatched, so at most one queue entry per client exists
+# — delivery can scatter by client index into [N]-shaped masks/weights and
+# feed the SAME masked Eq. (2) reduction as the synchronous path, keeping
+# the float accumulation in client-index order (the bit-identity anchor).
+
+
+def async_queue_init(params: PyTree, n_users: int, buffer_size: int) -> tuple:
+    """An empty event queue shaped for ``params`` updates."""
+    upd = jax.tree.map(
+        lambda p: jnp.zeros((buffer_size,) + p.shape, p.dtype), params)
+    return (jnp.full((buffer_size,), jnp.inf, jnp.float32),
+            jnp.zeros((buffer_size,), jnp.int32),
+            jnp.full((buffer_size,), n_users, jnp.int32),
+            jnp.zeros((buffer_size,), jnp.float32),
+            upd)
+
+
+def async_busy(queue: tuple, n_users: int) -> jnp.ndarray:
+    """[N] bool: client has an update in flight (empty slots scatter to the
+    out-of-bounds sentinel and are dropped)."""
+    _, _, idx, _, _ = queue
+    return jnp.zeros((n_users,), bool).at[idx].set(True, mode="drop")
+
+
+def async_queue_step(queue: tuple, client_params: PyTree,
+                     dispatch: jnp.ndarray, comp_time: jnp.ndarray,
+                     data_sizes: jnp.ndarray, r, tick_end,
+                     staleness_alpha) -> tuple:
+    """Advance the event queue by one tick: admit, deliver, evict.
+
+    Merges this tick's dispatches (``dispatch`` [N] bool, ``comp_time`` [N]
+    absolute completion times) into the queue, delivers every live entry
+    completing by ``tick_end``, then stable-sorts the survivors by
+    completion time and truncates to capacity (latest completions evicted —
+    they are the stalest-to-be).  Same-tick deliveries have staleness 0 and
+    weight exactly 1.0 for any alpha.
+
+    Returns ``(queue', delivered, wstale, delivered_updates, diag)``:
+    ``delivered`` [N] bool / ``wstale`` [N] f32 / ``delivered_updates``
+    (leaves [N, ...], zeros off-delivery) feed the weighted Eq. (2)
+    reduction; ``diag`` holds n_delivered / n_inflight / n_dropped /
+    w_delivered (staleness-weighted delivered Eq. (2) mass).
+    """
+    comp_q, tick_q, idx_q, size_q, upd_q = queue
+    n = dispatch.shape[0]
+    b = comp_q.shape[0]
+    r = jnp.asarray(r, jnp.int32)
+    comp = jnp.concatenate([comp_q, jnp.where(dispatch, comp_time, jnp.inf)])
+    tick = jnp.concatenate([tick_q, jnp.full((n,), r, jnp.int32)])
+    idx = jnp.concatenate(
+        [idx_q, jnp.where(dispatch, jnp.arange(n, dtype=jnp.int32), n)])
+    size = jnp.concatenate(
+        [size_q,
+         jnp.where(dispatch, data_sizes.astype(jnp.float32), 0.0)])
+    upd = jax.tree.map(
+        lambda q, c: jnp.concatenate([q, c.astype(q.dtype)]),
+        upd_q, client_params)
+
+    deliver = jnp.isfinite(comp) & (comp <= tick_end)       # [B+N]
+    wst = fl_server.staleness_weights(r - tick, staleness_alpha)
+    # scatter delivered entries to their client's row; busy-masking makes
+    # the delivered indices unique, non-delivered rows go to the sentinel
+    scat = jnp.where(deliver, idx, n)
+    delivered = jnp.zeros((n,), bool).at[scat].set(True, mode="drop")
+    wstale = jnp.zeros((n,), jnp.float32).at[scat].set(wst, mode="drop")
+    delivered_upd = jax.tree.map(
+        lambda u: jnp.zeros((n,) + u.shape[1:], u.dtype)
+                     .at[scat].set(u, mode="drop"), upd)
+
+    # survivors: delivered slots become empty (inf) and the stable sort
+    # sinks them past the live prefix; entries beyond capacity are evicted
+    comp_left = jnp.where(deliver, jnp.inf, comp)
+    order = jnp.argsort(comp_left)                          # stable
+    keep = order[:b]
+    kept_live = jnp.isfinite(comp_left[keep])
+    new_queue = (comp_left[keep],
+                 jnp.where(kept_live, tick[keep], 0),
+                 jnp.where(kept_live, idx[keep], n),
+                 jnp.where(kept_live, size[keep], 0.0),
+                 jax.tree.map(lambda u: u[keep], upd))
+    evicted = order[b:]
+    dropped = jnp.isfinite(comp_left[evicted])
+    diag = {
+        "n_delivered": jnp.sum(deliver).astype(jnp.int32),
+        "n_inflight": jnp.sum(kept_live).astype(jnp.int32),
+        "n_dropped": jnp.sum(dropped).astype(jnp.int32),
+        "w_delivered": jnp.sum(jnp.where(deliver, size * wst, 0.0)),
+    }
+    return new_queue, delivered, wstale, delivered_upd, diag
+
+
+def aggregate_weighted(params: PyTree, delivered_updates: PyTree,
+                       delivered: jnp.ndarray, data_sizes: jnp.ndarray,
+                       weights: jnp.ndarray, *, fedavg_backend: str = "jax",
+                       clip_norm=None) -> PyTree:
+    """Staleness-weighted masked Eq. (2) on either aggregation backend."""
+    if fedavg_backend == "pallas":
+        from repro.kernels.fedavg_reduce import fedavg_reduce
+        return fedavg_reduce(params, delivered_updates, delivered,
+                             data_sizes, clip_norm=clip_norm,
+                             weights=weights)
+    return fl_server.fedavg(params, delivered_updates, delivered, data_sizes,
+                            clip_norm=clip_norm, weights=weights)
+
+
+def async_round_tick(loss_fn, params: PyTree, queue: tuple, x_clients,
+                     y_clients, keys, dispatch, t_user, data_sizes, r, *,
+                     tick_s: float, staleness_alpha, epochs: int,
+                     batch_size: int, lr: float, fedavg_backend: str = "jax",
+                     corrupt=None, corrupt_mode_id=0, corrupt_scale=1.0,
+                     clip_norm=None) -> tuple:
+    """One buffered-async tick of the data plane (shared by the engine and
+    the batched learning-curve sweep).
+
+    Trains the full fleet (the constant-graph ``compute="full"`` path),
+    stamps each dispatched client's Eq. (1) completion time relative to the
+    tick clock ``now = r * tick_s``, advances the event queue, and applies
+    the staleness-weighted Eq. (2) over whatever landed this tick.  Fully
+    traced; ``r`` may be a host int or the fused scan's counter.
+
+    Returns ``(params, queue, delivered, diag)``.
+    """
+    client_params = fl_client.fleet_local_sgd(
+        loss_fn, params, x_clients, y_clients, keys,
+        epochs=epochs, batch_size=batch_size, lr=lr)
+    if corrupt is not None:
+        client_params = fl_faults.corrupt_updates(
+            client_params, corrupt, corrupt_mode_id, corrupt_scale)
+    now = jnp.asarray(r, jnp.float32) * jnp.float32(tick_s)
+    comp_time = now + t_user
+    tick_end = now + jnp.float32(tick_s)
+    queue, delivered, wstale, delivered_upd, diag = async_queue_step(
+        queue, client_params, dispatch, comp_time, data_sizes, r, tick_end,
+        staleness_alpha)
+    params = aggregate_weighted(params, delivered_upd, delivered, data_sizes,
+                                wstale, fedavg_backend=fedavg_backend,
+                                clip_norm=clip_norm)
+    return params, queue, delivered, diag
 
 
 def camped_bs(dist: jnp.ndarray) -> jnp.ndarray:
@@ -383,6 +600,24 @@ class FLSimulation:
         self.aggregation, self.tau_global = agg, tau
         self._hier = agg == "hierarchical"
 
+        # -- buffered-async aggregation (docs/ASYNC.md) ---------------------
+        self._async = cfg.aggregation_async
+        if self._async:
+            if self._hier:
+                raise ValueError(
+                    "aggregation_async composes with the single-tier "
+                    "Eq. (2) only; the resolved aggregation is "
+                    "'hierarchical'")
+            if cfg.scheduler not in FUSED_SCHEDULERS:
+                raise ValueError(
+                    f"aggregation_async lives in the traced round step; "
+                    f"scheduler {cfg.scheduler!r} is host-side — pick one "
+                    f"of {FUSED_SCHEDULERS}")
+        self._tick_s = float(cfg.tick_s) if cfg.tick_s is not None else None
+        self._alpha = float(cfg.staleness_alpha)
+        self._buffer_size = (int(cfg.buffer_size)
+                             if cfg.buffer_size is not None else w.n_users)
+
         # -- fault model (explicit config beats the scenario) ---------------
         fs = cfg.faults
         if isinstance(fs, str):
@@ -476,6 +711,11 @@ class FLSimulation:
         if self._hier or self._faulty:
             self._prev_bs = jnp.full((w.n_users,), -1, jnp.int32)
 
+        # async state: the in-flight event queue (rides the scan carry)
+        if self._async:
+            self._queue = async_queue_init(self.params, w.n_users,
+                                           self._buffer_size)
+
         # one compiled graph for the whole fleet's local training (eager path)
         self._fleet = jax.jit(partial(
             fl_client.fleet_local_sgd, cnn.loss_fn,
@@ -485,6 +725,11 @@ class FLSimulation:
         self._step_jit = jax.jit(self._round_step)
         self._scan_jit = jax.jit(self._run_scan,
                                  static_argnames=("n_rounds",))
+        self._async_scan_jit = jax.jit(self._run_async_scan,
+                                       static_argnames=("n_rounds",))
+        # python-side trace counter: increments only when _async_step is
+        # (re)traced, so tests can assert ONE compile per shape bucket
+        self._async_traces = 0
 
     # -------------------------------------------------------- fused engine --
     @property
@@ -496,8 +741,10 @@ class FLSimulation:
                 self.part.counts, self._key)
         if self._hier:
             return base + (self.edge_params, self.edge_weight, self._prev_bs)
+        if self._async:
+            base = base + (self._queue,)
         if self._faulty:
-            return base + (self._prev_bs,)
+            base = base + (self._prev_bs,)
         return base
 
     def _set_carry(self, carry: tuple) -> None:
@@ -510,8 +757,12 @@ class FLSimulation:
         self._key = key
         if self._hier:
             self.edge_params, self.edge_weight, self._prev_bs = carry[5:]
-        elif self._faulty:
-            self._prev_bs = carry[5]
+            return
+        rest = list(carry[5:])
+        if self._async:
+            self._queue = rest.pop(0)
+        if self._faulty:
+            self._prev_bs = rest.pop(0)
 
     def _round_step(self, carry: tuple, r) -> tuple[tuple, dict]:
         """One fully-traced round: mobility -> channel -> schedule -> local
@@ -642,18 +893,143 @@ class FLSimulation:
         rs = r0 + jnp.arange(n_rounds)
         return jax.lax.scan(self._round_step, carry, rs)
 
+    # ------------------------------------------------- buffered-async engine --
+    def _async_step(self, carry: tuple, r) -> tuple[tuple, dict]:
+        """One fully-traced async tick: mobility -> channel -> schedule ->
+        dispatch the non-busy scheduled clients with their Eq. (1)
+        completion times -> advance the event queue -> staleness-weighted
+        Eq. (2) over this tick's deliveries -> eval under ``lax.cond``.
+
+        The control plane (mobility/channel/scheduling and, when active,
+        the fault realization) splits the SAME subkeys in the SAME order as
+        :meth:`_round_step`, which is what makes the degenerate sync limit
+        (tick covering the slowest client, alpha=0) bit-identical rather
+        than a different random trajectory.
+        """
+        self._async_traces += 1          # python side effect: trace-time only
+        cfg, w = self.cfg, self.wireless
+        fp = self._fault_params
+        params, pos, aux, counts, key = carry[:5]
+        queue = carry[5]
+        if self._faulty:
+            key, k_mob, k_prob, k_sched, k_fleet, k_fault = \
+                jax.random.split(key, 6)
+        else:
+            key, k_mob, k_prob, k_sched, k_fleet = jax.random.split(key, 5)
+
+        pos, aux = mobility.step_named(
+            self._mob_model, k_mob, pos, aux, w,
+            pause_s=self._mob_pause, gm_memory=self._mob_gm)
+        state = MobilityState(user_pos=pos, bs_pos=self.mob.bs_pos)
+        shadow_db = None
+        if self._shadow_sigma > 0.0:
+            shadow_db = self._shadow_sigma * channel.sample_shadowing(
+                self._k_shadow, pos, self.mob.bs_pos, w, sigma_db=1.0)
+        prob = channel.make_problem(k_prob, state, w, counts, r,
+                                    bs_bw=self.bs_bw, shadow_db=shadow_db)
+        if self._faulty:
+            dist = state.distances()
+            serving = camped_bs(dist)
+            prev_bs = carry[-1]
+            edge_frac = fl_faults.edge_proximity(dist, serving, w)
+            handover = (serving != prev_bs) & (prev_bs >= 0)
+            prob = dataclasses.replace(
+                prob, p_deliver=fl_faults.delivery_probability(
+                    fp, edge_frac, handover))
+        res = sched.schedule(cfg.scheduler, prob, w, k_sched)
+        # faults at dispatch: a crashed/outaged uplink never enters the
+        # queue (the server can't see it, but the client is free again next
+        # tick); a deadline-stale update is discarded the same way, so the
+        # deadline-truncated sync delivery mask carries over exactly
+        if self._faulty:
+            tcomp_eff, alive, corrupt = fl_faults.sample_round_faults(
+                k_fault, fp, edge_frac, handover, prob.tcomp)
+            t_user = latency.per_user_latency(prob, res, tcomp=tcomp_eff)
+            gate = alive & latency.on_time(t_user, fp["deadline_s"])
+            clip = self.faults.clip_norm
+        else:
+            t_user = latency.per_user_latency(prob, res)
+            gate = jnp.ones_like(res.selected)
+            corrupt, clip = None, None
+        eligible = res.selected & ~async_busy(queue, w.n_users)
+        dispatch = eligible & gate
+
+        keys = jax.random.split(k_fleet, w.n_users)
+        params, queue, delivered, diag = async_round_tick(
+            cnn.loss_fn, params, queue, self.x_clients, self.y_clients,
+            keys, dispatch, t_user, self.data_sizes, r,
+            tick_s=self._tick_s, staleness_alpha=self._alpha,
+            epochs=cfg.local_epochs, batch_size=cfg.batch_size, lr=cfg.lr,
+            fedavg_backend=cfg.fedavg_backend, corrupt=corrupt,
+            corrupt_mode_id=fp["corrupt_mode_id"],
+            corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
+        # participation follows delivery, as in the sync engine
+        counts = counts + delivered.astype(counts.dtype)
+        if cfg.eval_every:
+            acc = jax.lax.cond(
+                (r + 1) % cfg.eval_every == 0,
+                lambda p: cnn.accuracy(p, self.data.x_test,
+                                       self.data.y_test),
+                lambda p: jnp.float32(jnp.nan), params)
+        else:
+            acc = jnp.float32(jnp.nan)
+        n_sel = jnp.sum(eligible).astype(jnp.int32)
+        n_del = diag["n_delivered"]
+        out = {
+            "t_round": jnp.full((), self._tick_s, jnp.float32),
+            "n_selected": n_sel,
+            "test_acc": acc,
+            "min_part_rate": jnp.min(counts) / (r + 1.0),
+            "n_delivered": n_del,
+            # deliveries lag dispatches in async, so normalise by the fleet
+            # (bounded [0,1]) rather than this tick's eligible count
+            "delivered_rate": (n_del / w.n_users).astype(jnp.float32),
+            "goodput_mbit_s": (n_del * w.model_mbit / self._tick_s
+                               ).astype(jnp.float32),
+            "n_inflight": diag["n_inflight"],
+            "n_dropped": diag["n_dropped"],
+        }
+        new_carry = (params, pos, aux, counts, key, queue)
+        if self._faulty:
+            new_carry = new_carry + (serving,)
+        return new_carry, out
+
+    def _run_async_scan(self, carry: tuple, r0, n_rounds: int):
+        """n_rounds ticks of :meth:`_async_step` as one ``lax.scan``."""
+        rs = r0 + jnp.arange(n_rounds)
+        return jax.lax.scan(self._async_step, carry, rs)
+
     # ------------------------------------------------------------------ API
     def run(self, n_rounds: int, mode: str | None = None) -> list[RoundRecord]:
         """Run ``n_rounds``; returns one :class:`RoundRecord` per round.
 
         ``mode``: ``"fused"`` (one compiled scan, default when the scheduler
         is jit-able), ``"step"`` (one jitted dispatch per round, records
-        accumulated on device and transferred once at the end), or
-        ``"eager"`` (the seed's per-round host path — the only option for
-        the host-numpy ``dagsa`` scheduler).
+        accumulated on device and transferred once at the end), ``"eager"``
+        (the seed's per-round host path — the only option for the
+        host-numpy ``dagsa`` scheduler), or ``"async"`` (the buffered-async
+        tick engine — one compiled scan; the default and only mode when
+        ``aggregation_async=True``).
         """
         if mode is None:
-            mode = "fused" if self.fused_capable else "eager"
+            mode = ("async" if self._async
+                    else "fused" if self.fused_capable else "eager")
+        if mode == "async" and not self._async:
+            raise ValueError(
+                "mode='async' needs FLConfig(aggregation_async=True, "
+                "tick_s=...) — the event-queue carry is sized at init")
+        if self._async and mode != "async":
+            raise ValueError(
+                f"aggregation_async=True runs mode='async' only (the event "
+                f"queue rides the scan carry); got mode={mode!r}")
+        if mode == "async":
+            if n_rounds <= 0:
+                return []
+            carry, outs = self._async_scan_jit(self._carry(), self.round_idx,
+                                               n_rounds=n_rounds)
+            self.round_idx += n_rounds
+            self._set_carry(carry)
+            return self._finish(outs, n_rounds)
         if mode in ("fused", "step") and not self.fused_capable:
             raise ValueError(
                 f"scheduler {self.cfg.scheduler!r} does not trace; "
@@ -690,6 +1066,8 @@ class FLSimulation:
         first = self.round_idx - n_rounds + 1  # round_idx already advanced
         hand = outs.get("handover_rate")
         n_del = outs.get("n_delivered")
+        n_inf = outs.get("n_inflight")
+        n_drp = outs.get("n_dropped")
         recs = [RoundRecord(round_idx=first + i,
                             t_round=float(outs["t_round"][i]),
                             wall_clock=float(wall[i]),
@@ -705,7 +1083,11 @@ class FLSimulation:
                                 if n_del is not None else float("nan")),
                             goodput_mbit_s=(
                                 float(outs["goodput_mbit_s"][i])
-                                if n_del is not None else float("nan")))
+                                if n_del is not None else float("nan")),
+                            n_inflight=(int(n_inf[i]) if n_inf is not None
+                                        else -1),
+                            n_dropped=(int(n_drp[i]) if n_drp is not None
+                                       else -1))
                 for i in range(n_rounds)]
         self.wall_clock = float(wall[-1])
         return recs
@@ -713,6 +1095,8 @@ class FLSimulation:
     def run_round(self) -> RoundRecord:
         """One round, returned as a host RoundRecord (syncs: this is the
         interactive per-round API; use :meth:`run` for throughput)."""
+        if self._async:
+            return self.run(1, mode="async")[0]
         if not self.fused_capable:
             return self._run_round_eager()
         carry, out = self._step_jit(self._carry(), self.round_idx)

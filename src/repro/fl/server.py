@@ -49,6 +49,21 @@ def fedavg_weights(selected: jnp.ndarray,
     return w, jnp.sum(w)
 
 
+def staleness_weights(staleness: jnp.ndarray, alpha) -> jnp.ndarray:
+    """Polynomial staleness discount w(s) = (1 + s)^(-alpha)  (float32).
+
+    ``staleness`` counts whole aggregation ticks between an update's
+    dispatch and its delivery, so a same-tick delivery (s = 0) weighs
+    exactly 1.0 for EVERY alpha — IEEE ``pow(1, y) == 1`` and
+    ``pow(x, -0.0) == 1`` are both exact, which is what makes the
+    buffered-async engine's degenerate sync limit bit-identical to the
+    synchronous Eq. (2) reduction rather than merely close.  ``alpha``
+    may be a traced scalar; ``alpha = 0`` disables the discount.
+    """
+    s = jnp.asarray(staleness).astype(jnp.float32)
+    return jnp.power(1.0 + s, -jnp.asarray(alpha, jnp.float32))
+
+
 def finite_update_mask(client_params: PyTree) -> jnp.ndarray:
     """[N] bool: client i's update is finite in EVERY leaf entry.
 
@@ -97,7 +112,7 @@ def clip_scales(ref_params: PyTree, client_params: PyTree,
 
 def fedavg(global_params: PyTree, client_params: PyTree,
            selected: jnp.ndarray, data_sizes: jnp.ndarray,
-           clip_norm=None) -> PyTree:
+           clip_norm=None, weights: jnp.ndarray | None = None) -> PyTree:
     """w^n = sum_i a_i |D_i| w_i / sum_i a_i |D_i|  (Eq. 2).
 
     client_params leaves: [N, ...]; selected: [N] bool; data_sizes: [N].
@@ -108,9 +123,17 @@ def fedavg(global_params: PyTree, client_params: PyTree,
     values), so a poisoned client can never NaN the global model; with
     ``clip_norm`` set each surviving update's L2 deviation from the global
     model is clipped to that radius (see the module docstring identity).
+
+    ``weights`` is an optional [N] per-client multiplier folded into the
+    Eq. (2) weight (client i's weight becomes ``a_i |D_i| weights_i``) —
+    the buffered-async engine passes :func:`staleness_weights` here.  The
+    multiplier scales numerator AND denominator, so uniform 1.0 weights
+    reproduce plain Eq. (2) bit-for-bit (``x * 1.0`` is an IEEE identity).
     """
     ok = finite_update_mask(client_params)
     w, _ = fedavg_weights(selected & ok, data_sizes)
+    if weights is not None:
+        w = w * weights.astype(jnp.float32)
     total = jnp.sum(w)
     if clip_norm is not None:
         s = clip_scales(global_params, client_params, clip_norm)

@@ -86,11 +86,12 @@ def _reduce_leaf(w2: jnp.ndarray, flat: jnp.ndarray, client_block: int,
 
 def _fedavg_reduce(global_params: PyTree, client_params: PyTree,
                    selected: jnp.ndarray, data_sizes: jnp.ndarray,
-                   clip_value: jnp.ndarray, client_block: int,
-                   feature_block: int, interpret: bool,
+                   weights: jnp.ndarray, clip_value: jnp.ndarray,
+                   client_block: int, feature_block: int, interpret: bool,
                    clip: bool) -> PyTree:
     ok = finite_update_mask(client_params)
     w, _ = fedavg_weights(selected & ok, data_sizes)
+    w = w * weights.astype(jnp.float32)
     total = jnp.sum(w)
     if clip:
         v = w * clip_scales(global_params, client_params, clip_value)
@@ -125,7 +126,8 @@ def fedavg_reduce(global_params: PyTree, client_params: PyTree,
                   clip_norm=None,
                   client_block: int = DEFAULT_CLIENT_BLOCK,
                   feature_block: int = DEFAULT_FEATURE_BLOCK,
-                  interpret: bool | None = None) -> PyTree:
+                  interpret: bool | None = None,
+                  weights: jnp.ndarray | None = None) -> PyTree:
     """Masked weighted FedAvg (Eq. 2) with the reduction in the kernel.
 
     Same contract as :func:`repro.fl.server.fedavg`: client_params leaves
@@ -134,17 +136,24 @@ def fedavg_reduce(global_params: PyTree, client_params: PyTree,
     inside the kernel (a zero weight cannot stop ``0 * NaN``), and
     ``clip_norm`` (host float or traced scalar) enables the norm-clip
     defense via the reweighting identity — the kernel stays a single
-    weighted reduction.  On TPU the client-params pytree is donated (dead
-    after the reduction).  ``interpret=None`` auto-enables interpret mode
-    off-TPU so the entry point runs everywhere.
+    weighted reduction.  ``weights`` is an optional traced [N] per-client
+    multiplier on the Eq. (2) weights (the buffered-async staleness
+    discount); it folds into the same weight vector the kernel already
+    streams, so the reduction count does not change, and uniform 1.0
+    weights are a bitwise no-op (``x * 1.0`` IEEE identity).  On TPU the
+    client-params pytree is donated (dead after the reduction).
+    ``interpret=None`` auto-enables interpret mode off-TPU so the entry
+    point runs everywhere.
     """
     on_tpu = jax.default_backend() == "tpu"
     if interpret is None:
         interpret = not on_tpu
     clip = clip_norm is not None
     cv = jnp.float32(0.0) if clip_norm is None else jnp.float32(clip_norm)
+    wv = (jnp.ones(selected.shape, jnp.float32) if weights is None
+          else jnp.asarray(weights))
     return _jitted(on_tpu)(global_params, client_params, selected,
-                           data_sizes, cv, client_block=client_block,
+                           data_sizes, wv, cv, client_block=client_block,
                            feature_block=feature_block, interpret=interpret,
                            clip=clip)
 

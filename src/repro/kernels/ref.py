@@ -36,13 +36,14 @@ def ssd_scan(x, dt, A, B, C, chunk: int) -> jnp.ndarray:
 
 
 def fedavg_reduce(global_params, client_params, selected, data_sizes,
-                  clip_norm=None):
+                  clip_norm=None, weights=None):
     """Masked weighted FedAvg oracle — delegates to the server implementation
-    (float32 accumulation, zero-selected guard, non-finite screening and the
-    optional norm-clip defense; see repro.fl.server)."""
+    (float32 accumulation, zero-selected guard, non-finite screening, the
+    optional norm-clip defense and the optional [N] per-client multiplier
+    used for staleness discounting; see repro.fl.server)."""
     from repro.fl.server import fedavg
     return fedavg(global_params, client_params, selected, data_sizes,
-                  clip_norm=clip_norm)
+                  clip_norm=clip_norm, weights=weights)
 
 
 def fedavg_segment_reduce(edge_params, client_params, assign, data_sizes,

@@ -19,6 +19,12 @@
         --scheduler dagsa-r --faults faulty-uplink --deadline 1.5 \
         --rounds 20
 
+    # buffered-async aggregation: server ticks every 0.2 simulated seconds
+    # and folds in whatever updates landed, staleness-discounted
+    PYTHONPATH=src python -m repro.launch.fl_sim \
+        --scheduler dagsa_jit --async --tick 0.2 --staleness-alpha 0.5 \
+        --rounds 40
+
 Jit-able schedulers (everything except the host-numpy ``dagsa``) run the
 whole simulation as ONE fused ``lax.scan`` — the round table prints after
 the compiled run finishes.  ``--mode eager`` restores the seed's per-round
@@ -80,6 +86,21 @@ def main() -> None:
     ap.add_argument("--deadline", type=float, default=None, metavar="T",
                     help="round deadline in simulated seconds: the server "
                          "stops waiting at T and drops late updates")
+    ap.add_argument("--async", dest="async_agg", action="store_true",
+                    help="buffered-async aggregation: the server ticks "
+                         "every --tick simulated seconds and folds in "
+                         "whatever updates landed, staleness-discounted "
+                         "(docs/ASYNC.md)")
+    ap.add_argument("--tick", type=float, default=None, metavar="S",
+                    help="async aggregation period in simulated seconds "
+                         "(required with --async)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.0,
+                    metavar="A",
+                    help="staleness discount exponent in (1+s)^(-A) "
+                         "(--async only; 0 disables)")
+    ap.add_argument("--buffer-size", type=int, default=None, metavar="B",
+                    help="async event-queue capacity (default n_users, "
+                         "which never overflows)")
     ap.add_argument("--shard", action="store_true",
                     help="place the client-batched tensors on a (data,) "
                          "device mesh: the fleet's local SGD "
@@ -88,6 +109,14 @@ def main() -> None:
                     help="mesh size for --shard (default: every visible "
                          "device; must divide n_users)")
     args = ap.parse_args()
+    if args.async_agg and args.tick is None:
+        ap.error("--async needs --tick (the aggregation period in "
+                 "simulated seconds)")
+    if not args.async_agg and (args.tick is not None
+                               or args.staleness_alpha != 0.0
+                               or args.buffer_size is not None):
+        ap.error("--tick/--staleness-alpha/--buffer-size only apply with "
+                 "--async; they would silently do nothing")
 
     cfg = FLConfig(dataset=args.dataset, scheduler=args.scheduler,
                    n_train=args.n_train, n_test=500,
@@ -98,29 +127,37 @@ def main() -> None:
                    fedavg_backend=args.fedavg_backend,
                    aggregation=args.aggregation, tau_global=args.tau_global,
                    faults=args.faults, deadline_s=args.deadline,
+                   aggregation_async=args.async_agg, tick_s=args.tick,
+                   staleness_alpha=args.staleness_alpha,
+                   buffer_size=args.buffer_size,
                    shard=args.shard, mesh_devices=args.mesh)
     sim = FLSimulation(cfg)
     recs = sim.run(args.rounds, mode=args.mode)
     hier = sim.aggregation == "hierarchical"
     faulty = sim.faults.active
+    is_async = cfg.aggregation_async
     print(f"{'round':>5} {'t_round':>8} {'clock':>8} {'users':>5} "
           f"{'acc':>6} {'min_fair':>8}"
           + (" {:>8}".format("handover") if hier else "")
           + (" {:>5} {:>8} {:>8}".format("deliv", "del_rate", "goodput")
-             if faulty else ""))
+             if faulty or is_async else "")
+          + (" {:>8} {:>7}".format("inflight", "dropped") if is_async
+             else ""))
     for r in recs:
         line = (f"{r.round_idx:5d} {r.t_round:8.3f} {r.wall_clock:8.2f} "
                 f"{r.n_selected:5d} {r.test_acc:6.3f} {r.min_part_rate:8.2f}")
         if hier:
             line += f" {r.handover_rate:8.2f}"
-        if faulty:
+        if faulty or is_async:
             line += (f" {r.n_delivered:5d} {r.delivered_rate:8.2f} "
                      f"{r.goodput_mbit_s:8.2f}")
+        if is_async:
+            line += f" {r.n_inflight:8d} {r.n_dropped:7d}"
         print(line)
     budget = recs[-1].wall_clock / 2
     print(f"\nacc@{budget:.1f}s = {accuracy_at_budget(recs, budget):.3f}  "
           f"final = {recs[-1].test_acc:.3f}")
-    if faulty:
+    if faulty or is_async:
         n = len(recs)
         print(f"delivered_rate mean = "
               f"{sum(r.delivered_rate for r in recs) / n:.3f}  "

@@ -1,66 +1,31 @@
-"""Batched serving driver: prefill + cached decode for any arch.
+"""Deprecated entry point — the repo's drivers are the sweep CLIs.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
-        --batch 4 --prompt-len 32 --gen-len 32
+This module predates the FL reproduction focus (it drove generic
+prefill/decode serving for the model zoo) and nothing in the repo imports
+it.  It now only re-exports the supported sweep entry points so stale
+``from repro.launch.serve import ...`` scripts keep a breadcrumb:
+
+* :func:`repro.launch.sweep.run_sweep` / ``run_learning_sweep`` —
+  single-device wireless / FL-learning sweeps (also the CLI:
+  ``python -m repro.launch.sweep``);
+* :func:`repro.launch.shard_sweep.run_shard_sweep` /
+  ``run_shard_learning_sweep`` — the same grids over a device mesh.
 """
 from __future__ import annotations
 
-import argparse
-import time
+from repro.launch.shard_sweep import (run_shard_learning_sweep,
+                                      run_shard_sweep)
+from repro.launch.sweep import run_learning_sweep, run_sweep
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ALIASES, ARCH_IDS, get_config
-from repro.models import api
+__all__ = ["run_sweep", "run_learning_sweep", "run_shard_sweep",
+           "run_shard_learning_sweep"]
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b",
-                    choices=sorted(ALIASES) + ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--sliding-window", type=int, default=None)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--full-size", dest="reduced", action="store_false")
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    if args.sliding_window:
-        import dataclasses
-        cfg = dataclasses.replace(cfg, sliding_window=args.sliding_window)
-
-    key = jax.random.PRNGKey(0)
-    params = api.init_params(key, cfg)
-    max_len = args.prompt_len + args.gen_len
-    cache = api.init_cache(cfg, args.batch, max_len)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab)
-    decode = jax.jit(lambda p, c, t, pos: api.decode_step(p, cfg, c, t, pos))
-
-    t0 = time.time()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, cache = decode(params, cache, prompt[:, t:t + 1],
-                               jnp.int32(t))
-    t_prefill = time.time() - t0
-    t0 = time.time()
-    out = []
-    for t in range(args.prompt_len, max_len):
-        nxt = jnp.argmax(logits[:, :cfg.vocab], axis=-1)[:, None]
-        out.append(nxt)
-        logits, cache = decode(params, cache, nxt.astype(jnp.int32),
-                               jnp.int32(t))
-    t_decode = time.time() - t0
-    toks = jnp.concatenate(out, axis=1)
-    print(f"arch={cfg.name} batch={args.batch}")
-    print(f"prefill: {args.batch * args.prompt_len / t_prefill:8.1f} tok/s")
-    print(f"decode:  {args.batch * args.gen_len / t_decode:8.1f} tok/s")
-    print(f"sample:  {toks[0, :12].tolist()}")
+    raise SystemExit(
+        "repro.launch.serve is deprecated: use 'python -m repro.launch.sweep'"
+        " (add --learning for FL curves, --shard for a device mesh) or"
+        " 'python -m repro.launch.fl_sim' for a single end-to-end run.")
 
 
 if __name__ == "__main__":

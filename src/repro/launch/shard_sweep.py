@@ -140,7 +140,9 @@ def run_shard_sweep(scenarios: Sequence[str | ScenarioSpec],
                                    "eval_every", "backend", "fedavg_backend",
                                    "compute", "select_cap", "aggregation",
                                    "tau_global", "scheduler", "faults_on",
-                                   "clip_on", "user_chunk", "n_models"))
+                                   "clip_on", "async_on", "tick_s",
+                                   "staleness_alpha", "buffer_size",
+                                   "user_chunk", "n_models"))
 def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                            cell_seed: jax.Array, x_c, y_c, w0, x_test,
                            y_test, *, mesh, cfg: WirelessConfig,
@@ -149,12 +151,17 @@ def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                            backend: str, fedavg_backend: str, compute: str,
                            select_cap, aggregation: str, tau_global: int,
                            scheduler: str, faults_on: bool, clip_on: bool,
+                           async_on: bool, tick_s: float,
+                           staleness_alpha: float, buffer_size: int,
                            user_chunk: int | None, n_models: int) -> dict:
     """Learning-sweep bucket over the mesh.
 
     The per-seed client data / model inits stay replicated ([seeds, ...]
     leaves, ``P()`` specs) and each cell gathers its seed's slice inside the
     shard — cells on one device only materialise their own [N, ...] views.
+    The buffered-async engine (``async_on``) shards the same way: the event
+    queue is per-cell scan state, so no collectives cross the wire and the
+    async curves stay bit-identical to the single-device sweep.
     """
     run = partial(sweep._one_learning_cell, cfg=cfg, n_rounds=n_rounds,
                   minp=minp, epochs=epochs, batch_size=batch_size, lr=lr,
@@ -162,8 +169,9 @@ def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                   fedavg_backend=fedavg_backend, compute=compute,
                   select_cap=select_cap, aggregation=aggregation,
                   tau_global=tau_global, scheduler=scheduler,
-                  faults_on=faults_on, clip_on=clip_on,
-                  user_chunk=user_chunk)
+                  faults_on=faults_on, clip_on=clip_on, async_on=async_on,
+                  tick_s=tick_s, staleness_alpha=staleness_alpha,
+                  buffer_size=buffer_size, user_chunk=user_chunk)
 
     def local(cp, ck, cs, xc, yc, w, xt, yt):
         def cell(p, k, j):
@@ -195,13 +203,20 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                              tau_global: int | None = None,
                              scheduler: str = "dagsa_jit",
                              faults=None, deadline_s: float | None = None,
+                             aggregation_async: bool = False,
+                             tick_s: float | None = None,
+                             staleness_alpha: float = 0.0,
+                             buffer_size: int | None = None,
                              user_chunk: int | None = None, seed: int = 0,
                              mesh=None,
                              n_devices: int | None = None) -> list[dict]:
     """Device-sharded :func:`repro.launch.sweep.run_learning_sweep`.
 
     Same arguments, record schema and values (bit-identical curves); cells
-    scatter over ``mesh`` / the first ``n_devices`` visible devices.
+    scatter over ``mesh`` / the first ``n_devices`` visible devices.  The
+    buffered-async knobs (``aggregation_async``/``tick_s``/...) follow the
+    same contract: per-cell event queues are scan state, so async curves
+    are byte-identical to the single-device sweep too.
     """
     from repro.data import make_dataset
     from repro.fl import faults as fl_faults
@@ -210,6 +225,8 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     if scheduler not in sweep.SWEEP_SCHEDULERS:
         raise ValueError(f"unknown sweep scheduler {scheduler!r}; "
                          f"choose from {sweep.SWEEP_SCHEDULERS}")
+    sweep._check_async_args(aggregation_async, tick_s, staleness_alpha,
+                            buffer_size, compute, aggregation)
     if mesh is None:
         mesh = make_data_mesh(n_devices)
     n_shards = mesh.devices.size
@@ -234,9 +251,15 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     buckets = sweep._learning_buckets(specs, base, aggregation, tau_global)
     for (n_users, n_bs, agg, tau, faults_on, clip_on), group \
             in buckets.items():
+        if aggregation_async and agg == "hierarchical":
+            raise ValueError(
+                f"aggregation_async composes with single-tier aggregation "
+                f"only; scenario(s) "
+                f"{[s.name for _, s in group]} resolve to 'hierarchical'")
         sweep._check_user_chunk(user_chunk, n_users)
         bcfg = dataclasses.replace(base, n_bs=n_bs)
         minp = int(np.ceil(bcfg.rho2 * n_users))
+        buf = (int(buffer_size) if buffer_size is not None else n_users)
         x_c, y_c, w0 = sweep._learning_seed_inputs(
             data, cnn_cfg, k_part, k_init, n_seeds, n_users, shards_per_user)
         params = sweep._scenario_params([s for _, s in group], bcfg)
@@ -254,11 +277,19 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
             fedavg_backend=fedavg_backend, compute=compute,
             select_cap=select_cap, aggregation=agg, tau_global=tau,
             scheduler=scheduler, faults_on=faults_on, clip_on=clip_on,
+            async_on=aggregation_async,
+            tick_s=(float(tick_s) if aggregation_async else 1.0),
+            staleness_alpha=float(staleness_alpha),
+            buffer_size=(buf if aggregation_async else 1),
             user_chunk=user_chunk, n_models=len(mobility.MOBILITY_MODELS))
         outs = _grid_shape(outs, n_cells, len(group), n_seeds)
+        async_info = ({"aggregation_async": True, "tick_s": float(tick_s),
+                       "staleness_alpha": float(staleness_alpha),
+                       "buffer_size": buf}
+                      if aggregation_async else None)
         records.update(sweep._learning_records(group, outs, n_seeds,
                                                n_rounds, dataset, agg, tau,
-                                               scheduler))
+                                               scheduler, async_info))
     return [records[i] for i in range(len(specs))]
 
 

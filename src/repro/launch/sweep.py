@@ -332,6 +332,8 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                        compute: str, select_cap, aggregation: str = "single",
                        tau_global: int = 1, scheduler: str = "dagsa_jit",
                        faults_on: bool = False, clip_on: bool = False,
+                       async_on: bool = False, tick_s: float = 1.0,
+                       staleness_alpha: float = 0.0, buffer_size: int = 1,
                        user_chunk: int | None = None) -> dict:
     """One (scenario, seed) FL cell: init world, scan the full round loop
     (wireless control plane + local SGD + Eq. (2) aggregation — single-tier
@@ -347,9 +349,18 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
     no-op, so clip and no-clip scenarios may share a bucket).
     ``scheduler="dagsa-r"`` discounts the greedy's candidate score by the
     estimated delivery probability — with faults off it IS dagsa_jit.
+
+    ``async_on`` (static) switches the data plane to the buffered-async
+    tick engine (docs/ASYNC.md): each scan step is one ``tick_s`` of
+    simulated time, scheduled non-busy clients dispatch with their Eq. (1)
+    completion times into an event queue riding the carry, and whatever
+    lands within the tick aggregates under the staleness discount
+    ``(1+s)^(-staleness_alpha)``.  The control plane (PRNG splits,
+    mobility, channel, scheduling, fault realization) is untouched, so
+    sync-vs-async curves compare the aggregation discipline alone.
     """
-    from repro.fl.rounds import hierarchical_round, camped_bs, \
-        train_and_aggregate
+    from repro.fl.rounds import async_busy, async_queue_init, \
+        async_round_tick, hierarchical_round, camped_bs, train_and_aggregate
     from repro.models import cnn
 
     hier = aggregation == "hierarchical"
@@ -365,8 +376,13 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
     data_sizes = jnp.full((cfg.n_users,), x_c.shape[1])
 
     def round_body(carry, r):
+        queue = None
         if hier:
             params, edge, edge_w, prev_bs, pos, aux, counts, key = carry
+        elif async_on and faults_on:
+            params, pos, aux, counts, key, queue, prev_bs = carry
+        elif async_on:
+            params, pos, aux, counts, key, queue = carry
         elif faults_on:
             params, pos, aux, counts, key, prev_bs = carry
         else:
@@ -408,14 +424,35 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
             c_user = jnp.sum(jnp.where(assign, coeff, 0.0), axis=1)
             t_user = tcomp_eff + jnp.where(
                 selected, c_user / jnp.maximum(bw, 1e-12), 0.0)
-            delivered = selected & alive & (t_user <= fp["deadline_s"])
+            gate = alive & (t_user <= fp["deadline_s"])
+            delivered = selected & gate
             t_round = jnp.minimum(
                 jnp.max(jnp.where(selected, t_user, 0.0)), fp["deadline_s"])
             clip = fp["clip_norm"] if clip_on else None
         else:
             delivered, corrupt, clip = selected, None, None
+            if async_on:
+                c_user = jnp.sum(jnp.where(assign, coeff, 0.0), axis=1)
+                t_user = tcomp + jnp.where(
+                    selected, c_user / jnp.maximum(bw, 1e-12), 0.0)
+                gate = jnp.ones_like(selected)
         keys = jax.random.split(k_fleet, cfg.n_users)
-        if hier:
+        if async_on:
+            # faults gate at dispatch: a dead/late uplink never enters the
+            # queue (same delivery mask as the sync engine carries over)
+            eligible = selected & ~async_busy(queue, cfg.n_users)
+            dispatch = eligible & gate
+            params, queue, delivered, diag = async_round_tick(
+                cnn.loss_fn, params, queue, x_c, y_c, keys, dispatch,
+                t_user, data_sizes, r, tick_s=tick_s,
+                staleness_alpha=staleness_alpha, epochs=epochs,
+                batch_size=batch_size, lr=lr,
+                fedavg_backend=fedavg_backend, corrupt=corrupt,
+                corrupt_mode_id=fp["corrupt_mode_id"],
+                corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
+            t_round = jnp.full((), tick_s, jnp.float32)
+            eval_args, eval_model = params, lambda q: q
+        elif hier:
             from repro.fl import server as fl_server
             (params, edge, edge_w, prev_bs, handover_rate) = \
                 hierarchical_round(
@@ -454,11 +491,22 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
             acc = jnp.float32(jnp.nan)
         out = {
             "t_round": t_round,
-            "n_selected": jnp.sum(selected).astype(jnp.float32),
+            "n_selected": (jnp.sum(eligible) if async_on
+                           else jnp.sum(selected)).astype(jnp.float32),
             "test_acc": acc,
             "min_part_rate": jnp.min(counts) / (r + 1.0),
         }
-        if faults_on:
+        if async_on:
+            n_del = diag["n_delivered"].astype(jnp.float32)
+            out["n_delivered"] = n_del
+            # deliveries lag dispatches in async, so normalise by the
+            # fleet (bounded [0,1]) rather than this tick's eligible count
+            out["delivered_rate"] = n_del / cfg.n_users
+            out["goodput_mbit_s"] = (n_del * cfg.model_mbit
+                                     / jnp.float32(tick_s))
+            out["n_inflight"] = diag["n_inflight"].astype(jnp.float32)
+            out["n_dropped"] = diag["n_dropped"].astype(jnp.float32)
+        elif faults_on:
             n_del = jnp.sum(delivered).astype(jnp.float32)
             out["n_delivered"] = n_del
             out["delivered_rate"] = n_del / jnp.maximum(
@@ -469,6 +517,10 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
             out["handover_rate"] = handover_rate
             new_carry = (params, edge, edge_w, prev_bs, pos, aux, counts,
                          key)
+        elif async_on and faults_on:
+            new_carry = (params, pos, aux, counts, key, queue, serving)
+        elif async_on:
+            new_carry = (params, pos, aux, counts, key, queue)
         elif faults_on:
             new_carry = (params, pos, aux, counts, key, serving)
         else:
@@ -481,6 +533,11 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
         carry0 = (params0, edge0, jnp.zeros((cfg.n_bs,), jnp.float32),
                   jnp.full((cfg.n_users,), -1, jnp.int32),
                   pos0, aux0, counts0, k_run)
+    elif async_on:
+        queue0 = async_queue_init(params0, cfg.n_users, buffer_size)
+        carry0 = (params0, pos0, aux0, counts0, k_run, queue0)
+        if faults_on:
+            carry0 = carry0 + (jnp.full((cfg.n_users,), -1, jnp.int32),)
     elif faults_on:
         carry0 = (params0, pos0, aux0, counts0, k_run,
                   jnp.full((cfg.n_users,), -1, jnp.int32))
@@ -495,15 +552,17 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                                    "backend", "fedavg_backend", "compute",
                                    "select_cap", "aggregation", "tau_global",
                                    "scheduler", "faults_on", "clip_on",
-                                   "user_chunk", "n_models"))
+                                   "async_on", "tick_s", "staleness_alpha",
+                                   "buffer_size", "user_chunk", "n_models"))
 def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                      x_test, y_test, *, cfg: WirelessConfig, n_rounds: int,
                      minp: int, epochs: int, batch_size: int, lr: float,
                      eval_every: int, backend: str, fedavg_backend: str,
                      compute: str, select_cap, aggregation: str,
                      tau_global: int, scheduler: str, faults_on: bool,
-                     clip_on: bool, user_chunk: int | None,
-                     n_models: int) -> dict:
+                     clip_on: bool, async_on: bool, tick_s: float,
+                     staleness_alpha: float, buffer_size: int,
+                     user_chunk: int | None, n_models: int) -> dict:
     """All scenarios of one shape bucket x all seeds, one compiled call.
 
     ``x_c``/``y_c``/``w0`` carry a leading seed axis (per-seed Non-IID
@@ -517,8 +576,9 @@ def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                   fedavg_backend=fedavg_backend, compute=compute,
                   select_cap=select_cap, aggregation=aggregation,
                   tau_global=tau_global, scheduler=scheduler,
-                  faults_on=faults_on, clip_on=clip_on,
-                  user_chunk=user_chunk)
+                  faults_on=faults_on, clip_on=clip_on, async_on=async_on,
+                  tick_s=tick_s, staleness_alpha=staleness_alpha,
+                  buffer_size=buffer_size, user_chunk=user_chunk)
 
     def per_scenario(p):
         return jax.vmap(lambda k, xc, yc, w: run(p, k, xc, yc, w,
@@ -607,7 +667,8 @@ def _learning_seed_inputs(data, cnn_cfg, k_part, k_init, n_seeds: int,
 
 def _learning_records(group: list[tuple[int, ScenarioSpec]], outs: dict,
                       n_seeds: int, n_rounds: int, dataset: str, agg: str,
-                      tau: int, scheduler: str = "dagsa_jit"
+                      tau: int, scheduler: str = "dagsa_jit",
+                      async_info: dict | None = None
                       ) -> dict[int, dict]:
     """[S, seeds, R] learning-bucket outputs -> per-scenario record dicts.
 
@@ -626,6 +687,10 @@ def _learning_records(group: list[tuple[int, ScenarioSpec]], outs: dict,
                 if n_del is not None else None)
     goodput = (np.asarray(outs["goodput_mbit_s"])
                if n_del is not None else None)
+    n_inf = (np.asarray(outs["n_inflight"])
+             if "n_inflight" in outs else None)
+    n_drp = (np.asarray(outs["n_dropped"])
+             if "n_dropped" in outs else None)
     wall = np.cumsum(t_round, axis=-1)
     records: dict[int, dict] = {}
     for i, (pos, spec) in enumerate(group):
@@ -689,7 +754,35 @@ def _learning_records(group: list[tuple[int, ScenarioSpec]], outs: dict,
                 del_rate[i].mean(axis=0).tolist()
             records[pos]["curves"]["goodput_mbit_s"] = \
                 goodput[i].mean(axis=0).tolist()
+        if async_info is not None:
+            records[pos].update(async_info)
+            records[pos]["n_inflight_mean"] = float(n_inf[i].mean())
+            records[pos]["n_dropped_mean"] = float(n_drp[i].mean())
+            records[pos]["curves"]["n_inflight"] = \
+                n_inf[i].mean(axis=0).tolist()
+            records[pos]["curves"]["n_dropped"] = \
+                n_drp[i].mean(axis=0).tolist()
     return records
+
+
+def _check_async_args(aggregation_async: bool, tick_s, staleness_alpha,
+                      buffer_size, compute: str,
+                      aggregation: str | None) -> None:
+    """Shared buffered-async argument validation (sweep + shard_sweep)."""
+    if aggregation_async:
+        if tick_s is None:
+            raise ValueError("aggregation_async=True needs tick_s")
+        if compute != "full":
+            raise ValueError("aggregation_async needs compute='full' "
+                             "(aggregation masks by delivery, not schedule)")
+        if aggregation == "hierarchical":
+            raise ValueError("aggregation_async composes with single-tier "
+                             "aggregation only")
+    elif (tick_s is not None or staleness_alpha != 0.0
+          or buffer_size is not None):
+        raise ValueError("tick_s/staleness_alpha/buffer_size only apply "
+                         "with aggregation_async=True; they would silently "
+                         "do nothing")
 
 
 def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
@@ -705,6 +798,10 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                        tau_global: int | None = None,
                        scheduler: str = "dagsa_jit",
                        faults=None, deadline_s: float | None = None,
+                       aggregation_async: bool = False,
+                       tick_s: float | None = None,
+                       staleness_alpha: float = 0.0,
+                       buffer_size: int | None = None,
                        user_chunk: int | None = None,
                        seed: int = 0) -> list[dict]:
     """Accuracy-vs-simulated-wall-clock curves, one record per scenario.
@@ -725,6 +822,15 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     ``tau_global``, ``handover_rate_mean`` and a ``handover_rate`` curve;
     faulty records carry ``delivered_rate_mean`` / ``goodput_mbit_s_mean``
     and per-round delivered/goodput curves.
+
+    ``aggregation_async=True`` switches every bucket's data plane to the
+    buffered-async tick engine (``tick_s`` required; ``staleness_alpha`` /
+    ``buffer_size`` as in :class:`repro.fl.FLConfig`) — the scan axis
+    becomes aggregation ticks of ``tick_s`` simulated seconds, and records
+    gain ``n_inflight_mean`` / ``n_dropped_mean`` plus per-tick
+    ``n_inflight`` / ``n_dropped`` / delivery curves, so sync and async
+    runs of the same scenarios yield directly comparable
+    accuracy-vs-wall-clock curves.
     """
     from repro.data import make_dataset
     from repro.models import cnn
@@ -732,6 +838,8 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     if scheduler not in SWEEP_SCHEDULERS:
         raise ValueError(f"unknown sweep scheduler {scheduler!r}; "
                          f"choose from {SWEEP_SCHEDULERS}")
+    _check_async_args(aggregation_async, tick_s, staleness_alpha,
+                      buffer_size, compute, aggregation)
     specs = [get_scenario(s) if isinstance(s, str) else s for s in scenarios]
     if faults is not None:
         fs = fl_faults.get_faults(faults) if isinstance(faults, str) \
@@ -753,9 +861,15 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     buckets = _learning_buckets(specs, base, aggregation, tau_global)
     for (n_users, n_bs, agg, tau, faults_on, clip_on), group \
             in buckets.items():
+        if aggregation_async and agg == "hierarchical":
+            raise ValueError(
+                f"aggregation_async composes with single-tier aggregation "
+                f"only; scenario(s) "
+                f"{[s.name for _, s in group]} resolve to 'hierarchical'")
         _check_user_chunk(user_chunk, n_users)
         bcfg = dataclasses.replace(base, n_bs=n_bs)
         minp = int(np.ceil(bcfg.rho2 * n_users))
+        buf = (int(buffer_size) if buffer_size is not None else n_users)
         x_c, y_c, w0 = _learning_seed_inputs(
             data, cnn_cfg, k_part, k_init, n_seeds, n_users, shards_per_user)
         params = _scenario_params([s for _, s in group], bcfg)
@@ -766,9 +880,18 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
             backend=backend, fedavg_backend=fedavg_backend, compute=compute,
             select_cap=select_cap, aggregation=agg, tau_global=tau,
             scheduler=scheduler, faults_on=faults_on, clip_on=clip_on,
+            async_on=aggregation_async,
+            tick_s=(float(tick_s) if aggregation_async else 1.0),
+            staleness_alpha=float(staleness_alpha),
+            buffer_size=(buf if aggregation_async else 1),
             user_chunk=user_chunk, n_models=len(mobility.MOBILITY_MODELS))
+        async_info = ({"aggregation_async": True, "tick_s": float(tick_s),
+                       "staleness_alpha": float(staleness_alpha),
+                       "buffer_size": buf}
+                      if aggregation_async else None)
         records.update(_learning_records(group, outs, n_seeds, n_rounds,
-                                         dataset, agg, tau, scheduler))
+                                         dataset, agg, tau, scheduler,
+                                         async_info))
     return [records[i] for i in range(len(specs))]
 
 
@@ -831,6 +954,21 @@ def main() -> None:
                     help="round deadline in simulated seconds: the server "
                          "stops waiting and drops late updates "
                          "(--learning only)")
+    ap.add_argument("--async", dest="async_agg", action="store_true",
+                    help="buffered-async aggregation: tick the server every "
+                         "--tick simulated seconds and aggregate whatever "
+                         "landed, staleness-discounted (--learning only; "
+                         "docs/ASYNC.md)")
+    ap.add_argument("--tick", type=float, default=None, metavar="S",
+                    help="async aggregation period in simulated seconds "
+                         "(required with --async)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.0,
+                    metavar="A",
+                    help="staleness discount exponent in (1+s)^(-A) "
+                         "(--async only; 0 disables)")
+    ap.add_argument("--buffer-size", type=int, default=None, metavar="B",
+                    help="async event-queue capacity (default n_users, "
+                         "which never overflows)")
     args = ap.parse_args()
 
     names = list(SCENARIOS) if args.scenarios == "all" \
@@ -843,6 +981,14 @@ def main() -> None:
                               or args.scheduler != "dagsa_jit"):
         ap.error("--faults/--deadline/--scheduler shape the FL round loop; "
                  "they only apply with --learning")
+    if not args.learning and (args.async_agg or args.tick is not None
+                              or args.staleness_alpha != 0.0
+                              or args.buffer_size is not None):
+        ap.error("--async/--tick/--staleness-alpha/--buffer-size shape the "
+                 "FL round loop; they only apply with --learning")
+    if args.async_agg and args.tick is None:
+        ap.error("--async needs --tick (the aggregation period in "
+                 "simulated seconds)")
     if args.shard:
         # local import: shard_sweep imports this module's cell functions
         from repro.launch import shard_sweep
@@ -862,6 +1008,9 @@ def main() -> None:
             select_cap=args.select_cap, aggregation=args.aggregation,
             tau_global=args.tau_global, scheduler=args.scheduler,
             faults=args.faults, deadline_s=args.deadline,
+            aggregation_async=args.async_agg, tick_s=args.tick,
+            staleness_alpha=args.staleness_alpha,
+            buffer_size=args.buffer_size,
             user_chunk=args.user_chunk, seed=args.seed)
         summary = " ".join(
             f"{r['scenario']}="

@@ -1,0 +1,440 @@
+"""Buffered-async engine: config validation, degenerate bit-identity with
+the sync fused scan, fault composition, queue invariants (property tests),
+staleness-weight kernel parity, sweep/shard parity, and the one-compile
+contract.
+
+The load-bearing claims from docs/ASYNC.md each get a test here:
+
+* with ``tick_s`` covering the slowest client and ``staleness_alpha=0``
+  the async engine IS the sync engine, bit for bit;
+* the event queue never drops or double-aggregates an update below
+  capacity, and its carry stays sorted by completion time;
+* the staleness discount folded into the Pallas reduction matches the
+  pure-jnp oracle at the edges (all-stale, zero-delivered, extreme alpha,
+  f16 leaves, non-divisible client blocks).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import WirelessConfig
+from repro.fl import FLConfig, FLSimulation, FaultSpec
+from repro.fl import server as fl_server
+from repro.fl.rounds import (async_busy, async_queue_init, async_queue_step,
+                             aggregate_weighted)
+from repro.kernels import ref
+from repro.kernels.fedavg_reduce import fedavg_reduce
+
+from tests._hypothesis_fallback import given, settings, st
+
+# the engine-parity world from test_fl.py / test_faults.py
+SMALL = dict(scheduler="dagsa_jit",
+             wireless=WirelessConfig(n_users=10, n_bs=3),
+             n_train=200, n_test=100, batch_size=10, local_epochs=1,
+             eval_every=1, seed=0)
+# a tick that covers the slowest client in SMALL by orders of magnitude:
+# every dispatch lands in its own tick -> degenerates to the sync engine
+HUGE_TICK = 1e4
+
+
+def _assert_params_identical(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------- config plumbing --
+def test_flconfig_async_validation():
+    with pytest.raises(ValueError, match="needs tick_s"):
+        FLConfig(**SMALL, aggregation_async=True)
+    with pytest.raises(ValueError, match="tick_s must be > 0"):
+        FLConfig(**SMALL, aggregation_async=True, tick_s=0.0)
+    with pytest.raises(ValueError, match="staleness_alpha"):
+        FLConfig(**SMALL, aggregation_async=True, tick_s=1.0,
+                 staleness_alpha=-0.5)
+    with pytest.raises(ValueError, match="buffer_size"):
+        FLConfig(**SMALL, aggregation_async=True, tick_s=1.0, buffer_size=0)
+    with pytest.raises(ValueError, match="compute"):
+        FLConfig(**SMALL, aggregation_async=True, tick_s=1.0,
+                 compute="selected")
+    with pytest.raises(ValueError, match="single-tier"):
+        FLConfig(**SMALL, aggregation_async=True, tick_s=1.0,
+                 aggregation="hierarchical")
+    # async knobs without the flag would silently do nothing -> hard error
+    for kw in (dict(tick_s=1.0), dict(staleness_alpha=0.5),
+               dict(buffer_size=4)):
+        with pytest.raises(ValueError, match="silently"):
+            FLConfig(**SMALL, **kw)
+
+
+def test_run_mode_validation():
+    sync = FLSimulation(FLConfig(**SMALL))
+    with pytest.raises(ValueError, match="aggregation_async=True"):
+        sync.run(1, mode="async")
+    a = FLSimulation(FLConfig(**SMALL, aggregation_async=True, tick_s=1.0))
+    with pytest.raises(ValueError, match="mode='async' only"):
+        a.run(1, mode="fused")
+    with pytest.raises(ValueError, match="host-side"):
+        FLSimulation(FLConfig(**{**SMALL, "scheduler": "dagsa"},
+                              aggregation_async=True, tick_s=1.0))
+
+
+# -------------------------------------------------------- degenerate parity --
+def test_async_degenerates_to_sync_bit_identical():
+    """tick covering the slowest client + alpha=0 -> the async engine is
+    the sync fused engine, bit for bit (params AND records)."""
+    sync = FLSimulation(FLConfig(**SMALL))
+    recs_sync = sync.run(3, mode="fused")
+    a = FLSimulation(FLConfig(**SMALL, aggregation_async=True,
+                              tick_s=HUGE_TICK))
+    recs_async = a.run(3)
+    _assert_params_identical(sync.params, a.params)
+    for rs, ra in zip(recs_sync, recs_async):
+        assert rs.n_selected == ra.n_selected
+        assert rs.test_acc == ra.test_acc
+        assert rs.min_part_rate == ra.min_part_rate
+        # every dispatch lands in its own tick
+        assert ra.n_delivered == ra.n_selected
+        assert ra.n_inflight == 0
+        assert ra.n_dropped == 0
+
+
+def test_async_alpha_free_when_same_tick():
+    """Same-tick deliveries have staleness 0 and (1+0)^(-alpha) == 1.0
+    exactly, so in the degenerate limit alpha does not change a bit."""
+    a0 = FLSimulation(FLConfig(**SMALL, aggregation_async=True,
+                               tick_s=HUGE_TICK))
+    a0.run(2)
+    a5 = FLSimulation(FLConfig(**SMALL, aggregation_async=True,
+                               tick_s=HUGE_TICK, staleness_alpha=5.0))
+    a5.run(2)
+    _assert_params_identical(a0.params, a5.params)
+
+
+def test_async_inert_faults_bit_identical():
+    """An all-zero FaultSpec leaves the async engine untouched (the fault
+    path gates dispatches; inert gates pass everything)."""
+    plain = FLSimulation(FLConfig(**SMALL, aggregation_async=True,
+                                  tick_s=0.3, staleness_alpha=0.5))
+    recs_p = plain.run(3)
+    inert = FLSimulation(FLConfig(**SMALL, aggregation_async=True,
+                                  tick_s=0.3, staleness_alpha=0.5,
+                                  faults=FaultSpec()))
+    recs_i = inert.run(3)
+    _assert_params_identical(plain.params, inert.params)
+    for rp, ri in zip(recs_p, recs_i):
+        assert rp.test_acc == ri.test_acc
+        assert rp.n_delivered == ri.n_delivered
+
+
+def test_async_faulty_run_stays_finite():
+    sim = FLSimulation(FLConfig(**SMALL, aggregation_async=True, tick_s=0.3,
+                                staleness_alpha=0.5, faults="faulty-uplink"))
+    recs = sim.run(4)
+    for leaf in jax.tree.leaves(sim.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert all(r.n_delivered >= 0 for r in recs)
+    assert all(r.n_delivered <= SMALL["wireless"].n_users for r in recs)
+
+
+# --------------------------------------------------------- engine contract --
+def test_async_one_compile_and_resumable():
+    cfg = {**SMALL, "eval_every": 0}
+    sim = FLSimulation(FLConfig(**cfg, aggregation_async=True, tick_s=0.3))
+    recs = sim.run(3)
+    assert sim._async_traces == 1          # ONE trace for the whole scan
+    recs2 = sim.run(3)                     # same n_rounds -> cache hit
+    assert sim._async_traces == 1
+    assert sim.round_idx == 6
+    # the wall clock and round indices continue across run() calls
+    assert recs2[0].round_idx == recs[-1].round_idx + 1
+    assert recs2[0].wall_clock > recs[-1].wall_clock
+    # one continuous 6-tick run is bit-identical to 3 + 3
+    ref_sim = FLSimulation(FLConfig(**cfg, aggregation_async=True,
+                                    tick_s=0.3))
+    ref_sim.run(6)
+    _assert_params_identical(sim.params, ref_sim.params)
+
+
+def test_async_run_round_delegates():
+    sim = FLSimulation(FLConfig(**SMALL, aggregation_async=True, tick_s=0.3))
+    rec = sim.run_round()
+    assert rec.round_idx == 1
+    assert rec.t_round == pytest.approx(0.3)
+    assert sim.round_idx == 1
+
+
+def test_async_small_buffer_drops_and_survives():
+    """Capacity 2 under a tiny tick: overflow MUST drop (and report it),
+    evicted clients become re-dispatchable, training stays finite."""
+    sim = FLSimulation(FLConfig(**SMALL, aggregation_async=True,
+                                tick_s=0.05, buffer_size=2))
+    recs = sim.run(6)
+    assert sum(r.n_dropped for r in recs) > 0
+    assert all(r.n_inflight <= 2 for r in recs)
+    for leaf in jax.tree.leaves(sim.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+# --------------------------------------------------- queue property tests --
+def _tiny_updates(n):
+    return {"w": jnp.arange(n * 2, dtype=jnp.float32).reshape(n, 2)}
+
+
+def _run_queue(latencies, dispatch_masks, buffer_size, tick_s=1.0,
+               alpha=0.0):
+    """Drive the bare queue ops tick by tick (no training), enforcing the
+    engine's busy-masking, and collect per-tick outputs."""
+    lat = np.asarray(latencies, np.float32)     # [T, N]
+    n = lat.shape[1]
+    sizes = jnp.ones((n,), jnp.float32)
+    queue = async_queue_init({"w": jnp.zeros((2,))}, n, buffer_size)
+    out = []
+    for r in range(lat.shape[0]):
+        want = jnp.asarray(dispatch_masks[r], bool)
+        dispatch = want & ~async_busy(queue, n)
+        now = np.float32(r) * np.float32(tick_s)
+        comp = jnp.where(dispatch, now + jnp.asarray(lat[r]), jnp.inf)
+        queue, delivered, wstale, _, diag = async_queue_step(
+            queue, _tiny_updates(n), dispatch, comp, sizes, r,
+            now + np.float32(tick_s), alpha)
+        out.append((np.asarray(dispatch), np.asarray(delivered),
+                    np.asarray(wstale), jax.tree.map(np.asarray, diag),
+                    jax.tree.map(np.asarray, queue)))
+    return out
+
+
+def _random_trace(seed, n=6, t=8, b=None):
+    rng = np.random.default_rng(seed)
+    lat = rng.uniform(0.05, 5.0, size=(t, n)).astype(np.float32)
+    masks = rng.random((t, n)) < 0.6
+    return lat, masks, (b if b is not None else n)
+
+
+def _check_sorted(seed):
+    """Invariant: the comp carry is non-decreasing, live entries first,
+    and live client indices are unique (<=1 in-flight per client)."""
+    lat, masks, b = _random_trace(seed)
+    for *_, queue in _run_queue(lat, masks, b):
+        comp, _, idx, _, _ = queue
+        assert np.all(np.diff(comp) >= 0) or np.all(
+            comp[np.isfinite(comp)] == np.sort(comp[np.isfinite(comp)]))
+        live = idx[np.isfinite(comp)]
+        assert len(np.unique(live)) == len(live)
+        # empty slots carry the out-of-bounds sentinel
+        assert np.all(idx[~np.isfinite(comp)] == lat.shape[1])
+
+
+def _check_conservation_full_capacity(seed):
+    """With capacity n_users nothing can overflow: every dispatched update
+    is delivered exactly once or still in flight, and n_dropped == 0."""
+    lat, masks, b = _random_trace(seed)
+    out = _run_queue(lat, masks, b)
+    n_disp = sum(d.sum() for d, *_ in out)
+    n_deliv = sum(dv.sum() for _, dv, *_ in out)
+    assert all(diag["n_dropped"] == 0 for *_, diag, _ in out)
+    assert n_disp == n_deliv + out[-1][3]["n_inflight"]
+    # no double-aggregation: per client, deliveries never exceed dispatches
+    disp_per = np.sum([d for d, *_ in out], axis=0)
+    deliv_per = np.sum([dv for _, dv, *_ in out], axis=0)
+    assert np.all(deliv_per <= disp_per)
+
+
+def _check_weight_conservation(seed):
+    """alpha=0 -> every delivered update carries weight exactly 1.0 (and
+    non-delivered rows exactly 0), so staleness-weighted Eq. (2) mass
+    equals plain Eq. (2) mass."""
+    lat, masks, b = _random_trace(seed)
+    for _, delivered, wstale, diag, _ in _run_queue(lat, masks, b,
+                                                    alpha=0.0):
+        np.testing.assert_array_equal(wstale,
+                                      delivered.astype(np.float32))
+        assert diag["w_delivered"] == delivered.sum()
+
+
+def _check_capacity_bound(seed, b):
+    """Any capacity: in-flight count never exceeds b and the accounting
+    identity dispatched == delivered + inflight + dropped still holds."""
+    lat, masks, _ = _random_trace(seed)
+    out = _run_queue(lat, masks, b)
+    assert all(diag["n_inflight"] <= b for *_, diag, _ in out)
+    n_disp = sum(d.sum() for d, *_ in out)
+    n_deliv = sum(dv.sum() for _, dv, *_ in out)
+    n_drop = sum(diag["n_dropped"] for *_, diag, _ in out)
+    assert n_disp == n_deliv + n_drop + out[-1][3]["n_inflight"]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 42])
+def test_queue_invariants_fixed_seeds(seed):
+    """Deterministic sweep of the queue invariants (always runs; the
+    hypothesis variants below widen the seed space when it is installed)."""
+    _check_sorted(seed)
+    _check_conservation_full_capacity(seed)
+    _check_weight_conservation(seed)
+    for b in (1, 2, 3):
+        _check_capacity_bound(seed, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_queue_carry_stays_sorted(seed):
+    _check_sorted(seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_queue_conserves_updates_below_capacity(seed):
+    _check_conservation_full_capacity(seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_queue_weight_conservation_alpha_zero(seed):
+    _check_weight_conservation(seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=4))
+def test_queue_bounded_by_capacity(seed, b):
+    _check_capacity_bound(seed, b)
+
+
+# ------------------------------------------------ staleness-weight kernels --
+def test_staleness_weights_formula():
+    s = jnp.array([0, 1, 3], jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(fl_server.staleness_weights(s, 1.0)),
+        [1.0, 0.5, 0.25])
+    # alpha=0 and s=0 are EXACT ones (IEEE pow identities) — the degenerate
+    # bit-identity rests on this
+    assert np.all(np.asarray(fl_server.staleness_weights(s, 0.0)) == 1.0)
+    assert float(fl_server.staleness_weights(jnp.float32(0.0), 7.3)) == 1.0
+
+
+def _stale_case(n, shapes, dtype=jnp.float32, seed=0, p_sel=0.7):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2 * len(shapes) + 3)
+    g = {f"leaf{i}": jax.random.normal(ks[2 * i], s).astype(dtype)
+         for i, s in enumerate(shapes)}
+    c = {f"leaf{i}": jax.random.normal(ks[2 * i + 1], (n,) + s).astype(dtype)
+         for i, s in enumerate(shapes)}
+    sel = jax.random.bernoulli(ks[-3], p_sel, (n,))
+    sizes = jax.random.uniform(ks[-2], (n,), minval=1.0, maxval=9.0)
+    stale = jax.random.randint(ks[-1], (n,), 0, 6).astype(jnp.float32)
+    return g, c, sel, sizes, stale
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.5, 5.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16])
+def test_weighted_reduce_matches_oracle(alpha, dtype):
+    """Pallas fedavg_reduce(weights=...) == jnp oracle across alpha
+    extremes, f16 leaves (f32 accumulation) and a non-divisible client
+    block (n=10, block=8)."""
+    g, c, sel, sizes, stale = _stale_case(10, [(13,), (3, 5)], dtype)
+    wv = fl_server.staleness_weights(stale, alpha)
+    want = ref.fedavg_reduce(g, c, sel, sizes, weights=wv)
+    got = fedavg_reduce(g, c, sel, sizes, weights=wv, client_block=8,
+                        feature_block=256, interpret=True)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    for k in g:
+        assert got[k].dtype == dtype
+        np.testing.assert_allclose(np.asarray(got[k], np.float32),
+                                   np.asarray(want[k], np.float32),
+                                   rtol=tol, atol=tol)
+
+
+def test_weighted_reduce_all_stale_extreme_alpha():
+    """alpha=5 with every update 5 ticks stale: weights ~1e-4 relative,
+    but the weighted mean renormalises — both backends agree and stay
+    finite."""
+    g, c, sel, sizes, _ = _stale_case(8, [(11,)])
+    wv = fl_server.staleness_weights(jnp.full((8,), 5.0), 5.0)
+    want = ref.fedavg_reduce(g, c, sel, sizes, weights=wv)
+    got = fedavg_reduce(g, c, sel, sizes, weights=wv, interpret=True)
+    np.testing.assert_allclose(np.asarray(got["leaf0"]),
+                               np.asarray(want["leaf0"]), rtol=1e-6,
+                               atol=1e-6)
+    assert np.isfinite(np.asarray(got["leaf0"])).all()
+
+
+def test_weighted_reduce_zero_delivered_keeps_global():
+    g, c, _, sizes, stale = _stale_case(6, [(7,)])
+    wv = fl_server.staleness_weights(stale, 1.0)
+    for backend in ("jax", "pallas"):
+        got = aggregate_weighted(g, c, jnp.zeros(6, bool), sizes, wv,
+                                 fedavg_backend=backend)
+        np.testing.assert_array_equal(np.asarray(got["leaf0"]),
+                                      np.asarray(g["leaf0"]))
+
+
+def test_uniform_weights_are_bitwise_noop():
+    """weights=ones must be bitwise identical to weights=None on both
+    backends (x * 1.0 IEEE identity) — the sync path's bit-identity
+    depends on it."""
+    g, c, sel, sizes, _ = _stale_case(9, [(13,), (4,)])
+    ones = jnp.ones((9,), jnp.float32)
+    a = ref.fedavg_reduce(g, c, sel, sizes)
+    b = ref.fedavg_reduce(g, c, sel, sizes, weights=ones)
+    _assert_params_identical(a, b)
+    ap = fedavg_reduce(g, c, sel, sizes, interpret=True)
+    bp = fedavg_reduce(g, c, sel, sizes, weights=ones, interpret=True)
+    _assert_params_identical(ap, bp)
+
+
+# ------------------------------------------------------------ sweep parity --
+SWEEP_KW = dict(n_seeds=2, n_rounds=2, cfg=WirelessConfig(n_users=10,
+                                                          n_bs=3),
+                n_train=200, n_test=64, local_epochs=1, batch_size=10,
+                eval_every=1, seed=0, aggregation_async=True, tick_s=0.3,
+                staleness_alpha=0.5, buffer_size=4)
+
+
+def test_async_sweep_records_and_shard_parity():
+    """The async learning sweep emits the async record schema, and the
+    device-sharded sweep reproduces it byte-for-byte (any device count —
+    the shard_map/padding machinery runs even on one device)."""
+    from repro.launch.shard_sweep import run_shard_learning_sweep
+    from repro.launch.sweep import run_learning_sweep
+
+    a = run_learning_sweep(["paper-default"], **SWEEP_KW)
+    assert a[0]["aggregation_async"] is True
+    assert a[0]["tick_s"] == pytest.approx(0.3)
+    assert a[0]["staleness_alpha"] == pytest.approx(0.5)
+    assert a[0]["buffer_size"] == 4
+    for k in ("n_inflight", "n_dropped", "delivered_rate", "n_delivered",
+              "goodput_mbit_s"):
+        assert len(a[0]["curves"][k]) == SWEEP_KW["n_rounds"]
+    assert 0.0 <= a[0]["delivered_rate_mean"] <= 1.0
+    b = run_shard_learning_sweep(["paper-default"], **SWEEP_KW)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_async_sweep_validation():
+    from repro.launch.shard_sweep import run_shard_learning_sweep
+    from repro.launch.sweep import run_learning_sweep
+
+    for fn in (run_learning_sweep, run_shard_learning_sweep):
+        with pytest.raises(ValueError, match="needs tick_s"):
+            fn(["paper-default"], aggregation_async=True)
+        with pytest.raises(ValueError, match="silently"):
+            fn(["paper-default"], staleness_alpha=0.5)
+        with pytest.raises(ValueError, match="single-tier"):
+            fn(["paper-default"], aggregation_async=True, tick_s=0.3,
+               aggregation="hierarchical")
+
+
+# ------------------------------------------------------------- serve stub --
+def test_serve_stub_reexports_sweeps():
+    """launch.serve is a deprecation stub: it re-exports the sweep entry
+    points and its CLI exits with a pointer to the supported drivers."""
+    from repro.launch import serve, shard_sweep, sweep
+
+    assert serve.run_sweep is sweep.run_sweep
+    assert serve.run_learning_sweep is sweep.run_learning_sweep
+    assert serve.run_shard_sweep is shard_sweep.run_shard_sweep
+    assert serve.run_shard_learning_sweep is \
+        shard_sweep.run_shard_learning_sweep
+    with pytest.raises(SystemExit, match="deprecated"):
+        serve.main()
