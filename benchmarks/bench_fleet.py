@@ -14,10 +14,21 @@ for
   * ``batch_pallas`` (smallest fleet only off-TPU) — batched path with the
     per-step candidate solves routed through the Pallas kernel.
 
-Derived column: speedup over ``seed_loop`` at the same fleet size.
+Derived column: speedup over ``seed_loop`` at the same fleet size.  Each
+row also prints a machine-readable ``#json `` line (CI uploads these as
+``BENCH_fleet.json`` for the :mod:`benchmarks.compare` gate).
+
+``run_ladder`` (``--ladder`` / ``benchmarks.run --only fleet_ladder``)
+sweeps the population axis instead: N = 1e4 -> 1e5 (-> 1e6 full) users at
+100 BSs through the streaming chunked selection, reporting measured
+selection time, AOT-compiled peak bytes where XLA exposes them, and the
+analytic bytes/user budget of docs/SCALING.md — the "selected-state memory
+stays flat in N" evidence (ungated; numbers are informational).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from functools import partial
 
@@ -141,13 +152,21 @@ def run(quick: bool = True) -> None:
             jax.block_until_ready(
                 dagsa_schedule_batch(stacked, keys).t_round)
 
+        def record(variant: str, r: float, r_seed: float) -> None:
+            rec = {"bench": "fleet", "fleet": fleet, "variant": variant,
+                   "us_per_call": 1e6 / r, "schedules_per_sec": r,
+                   "speedup_vs_seed": r / r_seed}
+            print(f"#json {json.dumps(rec)}")
+
         r_seed = _rate(seed_loop, fleet, reps)
         emit(f"fleet{fleet}_seed_loop", 1e6 / r_seed,
              f"schedules_per_sec={r_seed:.1f} speedup=1.00x")
+        record("seed_loop", r_seed, r_seed)
         for name, fn in [("loop", loop), ("batch", batch)]:
             r = _rate(fn, fleet, reps)
             emit(f"fleet{fleet}_{name}", 1e6 / r,
                  f"schedules_per_sec={r:.1f} speedup={r / r_seed:.2f}x")
+            record(name, r, r_seed)
 
         if fleet == fleets[0]:
             # pallas-kernel routing; interpret mode off-TPU (documented, slow
@@ -161,3 +180,92 @@ def run(quick: bool = True) -> None:
             emit(f"fleet{fleet}_batch_pallas", 1e6 / r,
                  f"schedules_per_sec={r:.1f} speedup={r / r_seed:.2f}x "
                  f"backend={jax.default_backend()}")
+            record("batch_pallas", r, r_seed)
+
+
+# ----------------------------------------------------- population ladder ---
+LADDER_BS = 100          # mega-fleet geometry (scenario "mega-fleet")
+LADDER_CHUNK = 8192      # streaming block (deliberately not dividing 1e6)
+LADDER_CAP = 2048        # selected-set cap for the learning-state budget
+
+
+def _aot_peak_bytes(fn, *shapes) -> int | None:
+    """Peak temp bytes of the AOT-compiled ``fn`` (None where the backend
+    doesn't expose a memory analysis, e.g. CPU)."""
+    try:
+        mem = jax.jit(fn).lower(*shapes).compile().memory_analysis()
+        if mem is None:
+            return None
+        return int(mem.temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def run_ladder(quick: bool = True) -> None:
+    """N-ladder of the streaming selection: time + bytes/user per rung.
+
+    Every rung reports the measured chunked masked-argmax time (the inner
+    loop of Algorithm 1 step 3), AOT peak bytes when available, and the
+    analytic per-user budget: channel-plane bytes (dense f32 vs bf16) and
+    the [cap, model] selected learning state, which is CONSTANT in N —
+    the sparse-selected-state contract of docs/SCALING.md.
+    """
+    from repro.kernels.select_topk import masked_bs_argmax_chunked
+    from repro.models import cnn
+
+    m = LADDER_BS
+    model_bytes = sum(l.nbytes for l in jax.tree.leaves(
+        cnn.init(jax.random.PRNGKey(0), cnn.CNNConfig())))
+    sizes = [10_000, 100_000] if quick else [10_000, 100_000, 1_000_000]
+    for n in sizes:
+        key = jax.random.PRNGKey(n)
+        snr = jax.random.exponential(
+            key, (n, m), jnp.bfloat16)           # compact channel storage
+        remaining = jnp.ones((n,), bool)
+
+        sel = jax.jit(partial(masked_bs_argmax_chunked, block=LADDER_CHUNK))
+
+        def call():
+            jax.block_until_ready(sel(snr, remaining))
+
+        call()                                   # compile/warm
+        t0 = time.perf_counter()
+        call()
+        us = (time.perf_counter() - t0) * 1e6
+        peak = _aot_peak_bytes(
+            sel, jax.ShapeDtypeStruct((n, m), jnp.bfloat16),
+            jax.ShapeDtypeStruct((n,), jnp.bool_))
+        rec = {
+            "bench": "fleet_ladder", "n_users": n, "n_bs": m,
+            "user_chunk": LADDER_CHUNK, "channel_dtype": "bf16",
+            "us_per_call": us,
+            "selection_peak_bytes": peak,
+            "channel_bytes_per_user_f32": 4 * m,
+            "channel_bytes_per_user": snr.dtype.itemsize * m,
+            "select_cap": LADDER_CAP,
+            "selected_state_bytes": LADDER_CAP * model_bytes,
+            "dense_state_bytes": n * model_bytes,
+        }
+        emit(f"ladder_n{n}", us,
+             f"peak_bytes={peak} "
+             f"selected_state_mb={LADDER_CAP * model_bytes / 1e6:.1f} "
+             f"dense_state_mb={n * model_bytes / 1e6:.1f}")
+        print(f"#json {json.dumps(rec)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ladder", action="store_true",
+                    help="run the N-ladder memory sweep instead of the "
+                         "fleet-throughput bench")
+    ap.add_argument("--full", action="store_true",
+                    help="full sizes (adds fleet 4096 / N=1e6)")
+    args = ap.parse_args()
+    if args.ladder:
+        run_ladder(quick=not args.full)
+    else:
+        run(quick=not args.full)
+
+
+if __name__ == "__main__":
+    main()

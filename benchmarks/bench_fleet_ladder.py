@@ -1,0 +1,19 @@
+"""Population-ladder memory bench — thin alias for ``benchmarks.run``.
+
+``benchmarks.run --only fleet_ladder`` needs a module exposing ``run``;
+the implementation lives next to the fleet-throughput bench
+(:func:`benchmarks.bench_fleet.run_ladder`, also ``bench_fleet --ladder``).
+Ungated: the ladder's records are informational evidence that selected-set
+learning state stays flat in N (docs/SCALING.md), not a regression gate.
+"""
+from __future__ import annotations
+
+from benchmarks.bench_fleet import run_ladder
+
+
+def run(quick: bool = True) -> None:
+    run_ladder(quick=quick)
+
+
+if __name__ == "__main__":
+    run()

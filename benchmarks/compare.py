@@ -136,6 +136,16 @@ SPECS: dict[str, BenchSpec] = {
             # raw wall-clock: catastrophic-regression guard only
             Metric("us_per_round", _LOWER, rel_tol=1.50),
         )),
+    "fleet": BenchSpec(
+        file="BENCH_fleet.json", only="fleet", bench="fleet",
+        key=("fleet", "variant"),
+        metrics=(
+            # within-run ratio (machine speed cancels): the batched/looped
+            # greedy must keep beating the seed replica by the same order
+            Metric("speedup_vs_seed", _HIGHER, rel_tol=0.50),
+            # raw wall-clock: catastrophic-regression guard only
+            Metric("us_per_call", _LOWER, rel_tol=1.50),
+        )),
 }
 
 

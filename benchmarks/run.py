@@ -18,6 +18,8 @@ BENCHES = [
     ("fig3", "benchmarks.bench_hetero_bw", "Fig.3 heterogeneous bandwidth"),
     ("fig4", "benchmarks.bench_mobility", "Fig.4 mobility sweep"),
     ("fleet", "benchmarks.bench_fleet", "fleet-scale batched scheduling"),
+    ("fleet_ladder", "benchmarks.bench_fleet_ladder",
+     "population ladder: streaming-selection time + bytes/user"),
     ("shard_sweep", "benchmarks.bench_shard_sweep",
      "device-sharded sweep scaling"),
     ("fl", "benchmarks.bench_fl_rounds", "FL round engine rounds/sec"),

@@ -89,6 +89,10 @@ def bs_time(coeff: jnp.ndarray, tcomp: jnp.ndarray, mask: jnp.ndarray,
     """
     if iters is None:
         iters = default_iters(method)
+    # Compact channel storage (bf16 coeff) must not degrade the root solve:
+    # the Newton/bisection iteration and the masked sums run in float32.
+    coeff = coeff.astype(jnp.float32)
+    tcomp = tcomp.astype(jnp.float32)
     m = mask.astype(coeff.dtype)
     any_user = jnp.any(mask)
     csum = jnp.sum(coeff * m)

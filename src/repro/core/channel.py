@@ -78,6 +78,48 @@ def bandwidth_time_coeff(snr: jnp.ndarray, cfg: WirelessConfig) -> jnp.ndarray:
     return cfg.model_mbit / jnp.maximum(spectral_efficiency(snr), 1e-9)
 
 
+# ------------------------------------------------- compact channel storage --
+# Bytes/user budget (docs/SCALING.md): the [N, M] channel matrices dominate
+# per-round memory at fleet scale.  SNR spans many orders of magnitude but
+# selection/equalisation only need ~0.3 dB fidelity, so bf16 (8-bit mantissa,
+# exact under monotone casts -> identical argmax ties) halves bytes/user and
+# int8 dB codes with a per-BS scale quarter them.
+CHANNEL_DTYPES = ("f32", "bf16")
+
+
+def compress_channel(x: jnp.ndarray, channel_dtype: str) -> jnp.ndarray:
+    """Cast a channel-plane array to its storage dtype ("f32" is a no-op)."""
+    if channel_dtype == "f32":
+        return x
+    if channel_dtype == "bf16":
+        return x.astype(jnp.bfloat16)
+    raise ValueError(f"unknown channel_dtype {channel_dtype!r}; "
+                     f"choose from {CHANNEL_DTYPES}")
+
+
+def quantize_snr_int8(snr: jnp.ndarray):
+    """Per-BS symmetric int8 quantisation of linear SNR, dB domain.
+
+    Returns (q [N, M] int8, scale [M] f32) with
+    ``dB = 10 log10(snr) ~= q * scale``.  dB -> code is monotone per BS, so
+    a per-BS (column) argmax on raw codes is EXACT; cross-BS comparisons
+    (per-user best BS, greedy candidate ranking) must compare ``q * scale``
+    — the selection kernels dequantise in-block for exactly this reason.
+    Worst-case dB error is scale/2, i.e. relative linear-SNR error
+    ``10^(scale/20) - 1``.
+    """
+    db = 10.0 * jnp.log10(jnp.maximum(snr.astype(jnp.float32), 1e-12))
+    scale = jnp.maximum(jnp.max(jnp.abs(db), axis=0), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(db / scale[None, :]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_snr_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_snr_int8`: linear SNR from dB codes."""
+    db = q.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
+    return jnp.power(10.0, db / 10.0)
+
+
 def sample_tcomp(key: jax.Array, cfg: WirelessConfig) -> jnp.ndarray:
     """Per-user local computation latency ~ U(tmin, tmax) (paper §IV)."""
     return jax.random.uniform(key, (cfg.n_users,), minval=cfg.tcomp_min_s,

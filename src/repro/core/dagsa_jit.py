@@ -73,15 +73,54 @@ def _bs_times_with_candidate(coeff, tcomp, assign, bs_bw, cand,
 
 
 @partial(jax.jit, static_argnames=("min_participants", "method", "iters",
-                                   "backend", "interpret"))
+                                   "backend", "interpret", "selection_block"))
 def _schedule(snr, coeff, tcomp, bs_bw, necessary, min_participants, key,
-              method="newton", iters=None, backend="jax", interpret=None):
+              method="newton", iters=None, backend="jax", interpret=None,
+              selection_block=None, snr_scale=None):
     n, m = snr.shape
     solve = partial(_bs_times_with_candidate, method=method, iters=iters,
                     backend=backend, interpret=interpret)
 
+    # Selection routing (Algorithm 1 steps 1 and 3): the dense seed path
+    # materialises masked [N, M] temporaries; backend="pallas" streams user
+    # blocks through the kernels in repro.kernels.select_topk, and a static
+    # ``selection_block`` streams the same blocks in pure jnp (the
+    # --user-chunk CPU path).  All three share jnp.argmax tie semantics, so
+    # decisions are identical.  ``snr_scale`` ([M], optional) dequantises
+    # int8-coded SNR inside the selection pass; candidate comparison values
+    # then live in the (order-equivalent) dB domain.
+    if backend == "pallas":
+        from repro.kernels import select_topk as _sel
+        _ub = (selection_block if selection_block is not None
+               else _sel.DEFAULT_USER_BLOCK)
+
+        def _best_bs(s):
+            return _sel.best_bs_argmax(s, snr_scale, user_block=_ub,
+                                       interpret=interpret)
+
+        def _cands(s, rem):
+            return _sel.masked_bs_argmax(s, rem, snr_scale, user_block=_ub,
+                                         interpret=interpret)
+    elif selection_block is not None:
+        from repro.kernels import select_topk as _sel
+
+        def _best_bs(s):
+            return _sel.best_bs_argmax_chunked(s, selection_block, snr_scale)
+
+        def _cands(s, rem):
+            return _sel.masked_bs_argmax_chunked(s, rem, selection_block,
+                                                 snr_scale)
+    else:
+        from repro.kernels import ref as _ref
+
+        def _best_bs(s):
+            return _ref.best_bs_argmax(s, snr_scale)
+
+        def _cands(s, rem):
+            return _ref.masked_bs_argmax(s, rem, snr_scale)
+
     # -- step 1: necessary users to their best-channel BS ------------------
-    best_bs = jnp.argmax(snr, axis=1)
+    best_bs = _best_bs(snr)
     assign0 = (jax.nn.one_hot(best_bs, m, dtype=bool)
                & necessary[:, None])
     remaining0 = ~necessary
@@ -96,22 +135,23 @@ def _schedule(snr, coeff, tcomp, bs_bw, necessary, min_participants, key,
 
     def candidates(assign, remaining, t_bs):
         """Best-channel remaining user per BS + its trial t_k^*."""
-        masked_snr = jnp.where(remaining[:, None], snr, -jnp.inf)
-        cand = jnp.argmax(masked_snr, axis=0)                 # [M]
+        cand, cand_val = _cands(snr, remaining)               # [M], [M]
         t_with = solve(coeff, tcomp, assign, bs_bw, cand, t_bs=t_bs)
-        return cand, t_with
+        return cand, cand_val, t_with
 
-    cand0, t_with0 = candidates(assign0, remaining0, t_bs0)
+    cand0, cval0, t_with0 = candidates(assign0, remaining0, t_bs0)
 
     def body(state):
-        assign, remaining, t_star, t_bs, cand, t_with, key = state
+        assign, remaining, t_star, t_bs, cand, cand_val, t_with, key = state
         has_cand = jnp.any(remaining)
         feasible = (t_with <= t_star) & has_cand
         any_feasible = jnp.any(feasible)
 
-        # pick the feasible BS whose candidate has the best channel
-        cand_snr = snr[cand, jnp.arange(m)]
-        score = jnp.where(feasible, cand_snr, -jnp.inf)
+        # pick the feasible BS whose candidate has the best channel; the
+        # selection pass already produced each candidate's (masked,
+        # dequantised) comparison value, == snr[cand, k] whenever any user
+        # remains, so the greedy tie order matches the seed bit-for-bit
+        score = jnp.where(feasible, cand_val, -jnp.inf)
         k_greedy = jnp.argmax(score)
 
         # otherwise force-add to a random BS and raise the threshold (8h);
@@ -136,20 +176,20 @@ def _schedule(snr, coeff, tcomp, bs_bw, necessary, min_participants, key,
                              t_bs)
         raised = jnp.maximum(t_star, t_with[k_star])
         new_t_star = jnp.where(do_add & ~any_feasible, raised, t_star)
-        new_cand, new_t_with = candidates(new_assign, new_remaining,
-                                          new_t_bs)
+        new_cand, new_cval, new_t_with = candidates(new_assign,
+                                                    new_remaining, new_t_bs)
         return (new_assign, new_remaining, new_t_star, new_t_bs, new_cand,
-                new_t_with, key)
+                new_cval, new_t_with, key)
 
     def cond(state):
-        assign, remaining, t_star, t_bs, cand, t_with, key = state
+        assign, remaining, t_star, t_bs, cand, cand_val, t_with, key = state
         any_feasible = jnp.any((t_with <= t_star) & jnp.any(remaining))
         need_more = n_selected(assign) < min_participants
         return jnp.any(remaining) & (any_feasible | need_more)
 
     assign, *_ = jax.lax.while_loop(
         cond, body,
-        (assign0, remaining0, t_star0, t_bs0, cand0, t_with0, key))
+        (assign0, remaining0, t_star0, t_bs0, cand0, cval0, t_with0, key))
 
     t_k, user_bw = bandwidth.solve_all(coeff, tcomp, assign, bs_bw,
                                        method=method, iters=iters)
@@ -158,12 +198,12 @@ def _schedule(snr, coeff, tcomp, bs_bw, necessary, min_participants, key,
 
 
 def dagsa_schedule_jit(problem: SchedulingProblem, key: jax.Array,
-                       method: str = "newton",
-                       iters: int | None = None) -> ScheduleResult:
+                       method: str = "newton", iters: int | None = None,
+                       selection_block: int | None = None) -> ScheduleResult:
     assign, selected, bw, t_k, t_round = _schedule(
         problem.snr, problem.coeff, problem.tcomp, problem.bs_bw,
         problem.necessary, int(problem.min_participants), key,
-        method=method, iters=iters)
+        method=method, iters=iters, selection_block=selection_block)
     return ScheduleResult(assign=assign, selected=selected, bw=bw,
                           bs_time=t_k, t_round=t_round)
 
@@ -194,19 +234,23 @@ def stack_problems(problems: Sequence[SchedulingProblem]) -> SchedulingProblem:
 
 
 @partial(jax.jit, static_argnames=("min_participants", "method", "iters",
-                                   "backend", "interpret"))
+                                   "backend", "interpret", "selection_block"))
 def _schedule_batch(snr, coeff, tcomp, bs_bw, necessary, min_participants,
                     keys, method="newton", iters=None, backend="jax",
-                    interpret=None):
+                    interpret=None, selection_block=None, snr_scale=None):
     fn = partial(_schedule, min_participants=min_participants, method=method,
-                 iters=iters, backend=backend, interpret=interpret)
-    return jax.vmap(lambda s, c, t, b, ne, k: fn(s, c, t, b, ne, key=k))(
-        snr, coeff, tcomp, bs_bw, necessary, keys)
+                 iters=iters, backend=backend, interpret=interpret,
+                 selection_block=selection_block)
+    return jax.vmap(
+        lambda s, c, t, b, ne, k, sc: fn(s, c, t, b, ne, key=k,
+                                         snr_scale=sc))(
+        snr, coeff, tcomp, bs_bw, necessary, keys, snr_scale)
 
 
 def dagsa_schedule_batch(problems, keys: jax.Array, method: str = "newton",
                          iters: int | None = None, backend: str = "jax",
-                         interpret: bool | None = None) -> ScheduleResult:
+                         interpret: bool | None = None,
+                         selection_block: int | None = None) -> ScheduleResult:
     """DAGSA-X over a whole fleet of cells in ONE compiled call.
 
     Args:
@@ -215,8 +259,13 @@ def dagsa_schedule_batch(problems, keys: jax.Array, method: str = "newton",
       keys: [F, 2] PRNG keys, one per problem (``jax.random.split``).
       method/iters: Eq. (11) solver knobs (safeguarded Newton by default).
       backend: "jax" (vmapped scalar solver) or "pallas" (per-step [M, N]
-        candidate solves through the ``bandwidth_solve`` kernel).
+        candidate solves through the ``bandwidth_solve`` kernel AND
+        streaming segmented-argmax selection through
+        ``kernels.select_topk``, so no [N, M] selection temporaries).
       interpret: pallas interpret-mode override (auto: True off-TPU).
+      selection_block: static user-block size for streamed selection; with
+        backend="jax" this switches Algorithm 1 steps 1/3 to the chunked
+        jnp path (bit-identical decisions, [block, M] temporaries).
 
     Returns:
       ScheduleResult with a leading fleet axis on every field.  Decisions
@@ -228,6 +277,7 @@ def dagsa_schedule_batch(problems, keys: jax.Array, method: str = "newton",
     assign, selected, bw, t_k, t_round = _schedule_batch(
         problems.snr, problems.coeff, problems.tcomp, problems.bs_bw,
         problems.necessary, int(problems.min_participants), keys,
-        method=method, iters=iters, backend=backend, interpret=interpret)
+        method=method, iters=iters, backend=backend, interpret=interpret,
+        selection_block=selection_block)
     return ScheduleResult(assign=assign, selected=selected, bw=bw,
                           bs_time=t_k, t_round=t_round)

@@ -179,6 +179,12 @@ _BUILTINS = (
         description="Sparse coverage: long links dominate, the latency "
                     "tail is geometry-bound."),
     ScenarioSpec(
+        name="mega-fleet", n_bs=100, bs_layout="uniform",
+        description="Million-user regime: 100 uniformly-dropped BSs; pair "
+                    "with --n-users/--user-chunk/--channel-dtype so the "
+                    "[N, M] channel plane streams in blocks "
+                    "(docs/SCALING.md)."),
+    ScenarioSpec(
         name="waypoint", mobility="waypoint", pause_s=2.0,
         description="Random Waypoint with 2 s pauses: bursty mobility with "
                     "center-biased stationary density."),

@@ -73,6 +73,36 @@ def topk_selected_indices(selected: jnp.ndarray, cap: int) -> jnp.ndarray:
     return jnp.argsort(jnp.logical_not(selected), stable=True)[:cap]
 
 
+def gather_client_tree(tree: PyTree, idx: jnp.ndarray) -> PyTree:
+    """Gather [cap, ...] rows from a client-batched pytree (leaves [N, ...]).
+
+    The sparse-selected-state primitive: per-client model/optimizer state is
+    gathered down to the ``topk_selected_indices`` subset BEFORE local
+    training, so the learning plane never materialises [N, model]-sized
+    pytrees — memory scales with the selected set, not the population.
+    """
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+def scatter_client_tree(n: int, idx: jnp.ndarray, tree: PyTree,
+                        base: PyTree | None = None) -> PyTree:
+    """Scatter [cap, ...] rows back to client-indexed [N, ...] leaves.
+
+    Inverse of :func:`gather_client_tree` for aggregation: rows land at
+    their original client index (out-of-range sentinel indices drop), on
+    top of ``base`` when given, zeros otherwise.  Keeping the scatter in
+    client-index order is what preserves the fleet's float accumulation
+    order — the bit-identity anchor of the parity tests.
+    """
+    if base is None:
+        return jax.tree.map(
+            lambda a: jnp.zeros((n,) + a.shape[1:], a.dtype)
+                         .at[idx].set(a, mode="drop"), tree)
+    return jax.tree.map(
+        lambda b, a: b.at[idx].set(a.astype(b.dtype), mode="drop"),
+        base, tree)
+
+
 def fleet_local_sgd(loss_fn: Callable, global_params: PyTree,
                     x_all: jnp.ndarray, y_all: jnp.ndarray, keys: jax.Array,
                     epochs: int, batch_size: int, lr: float) -> PyTree:

@@ -206,11 +206,6 @@ class FLConfig:
                 raise ValueError(
                     "aggregation_async=True needs tick_s (the simulated "
                     "aggregation period in seconds)")
-            if self.compute != "full":
-                raise ValueError(
-                    "aggregation_async trains the full fleet and masks at "
-                    "the delivery buffer; compute='selected' would gather "
-                    "by schedule, not by delivery — use compute='full'")
             if self.aggregation == "hierarchical":
                 raise ValueError(
                     "aggregation_async composes with the single-tier "
@@ -350,7 +345,7 @@ def async_busy(queue: tuple, n_users: int) -> jnp.ndarray:
 def async_queue_step(queue: tuple, client_params: PyTree,
                      dispatch: jnp.ndarray, comp_time: jnp.ndarray,
                      data_sizes: jnp.ndarray, r, tick_end,
-                     staleness_alpha) -> tuple:
+                     staleness_alpha, admit_idx=None) -> tuple:
     """Advance the event queue by one tick: admit, deliver, evict.
 
     Merges this tick's dispatches (``dispatch`` [N] bool, ``comp_time`` [N]
@@ -359,6 +354,15 @@ def async_queue_step(queue: tuple, client_params: PyTree,
     completion time and truncates to capacity (latest completions evicted —
     they are the stalest-to-be).  Same-tick deliveries have staleness 0 and
     weight exactly 1.0 for any alpha.
+
+    ``admit_idx`` ([cap] int32, optional) admits a COMPRESSED update batch:
+    ``client_params`` leaves are [cap, ...] rows owned by clients
+    ``admit_idx`` (the sparse ``compute="selected"`` path).  Because
+    :func:`repro.fl.client.topk_selected_indices` lists dispatched clients
+    in ascending client index — the same relative order as the dense [N]
+    admit — the stable completion-time sort sees an identical live-entry
+    order and the queue evolves identically when the cap covers the
+    dispatch set (dead padding rows admit as empty slots).
 
     Returns ``(queue', delivered, wstale, delivered_updates, diag)``:
     ``delivered`` [N] bool / ``wstale`` [N] f32 / ``delivered_updates``
@@ -370,27 +374,33 @@ def async_queue_step(queue: tuple, client_params: PyTree,
     n = dispatch.shape[0]
     b = comp_q.shape[0]
     r = jnp.asarray(r, jnp.int32)
-    comp = jnp.concatenate([comp_q, jnp.where(dispatch, comp_time, jnp.inf)])
-    tick = jnp.concatenate([tick_q, jnp.full((n,), r, jnp.int32)])
-    idx = jnp.concatenate(
-        [idx_q, jnp.where(dispatch, jnp.arange(n, dtype=jnp.int32), n)])
+    if admit_idx is None:
+        row_disp = dispatch
+        row_comp, row_size = comp_time, data_sizes
+        row_idx = jnp.arange(n, dtype=jnp.int32)
+    else:
+        row_disp = dispatch[admit_idx]
+        row_comp, row_size = comp_time[admit_idx], data_sizes[admit_idx]
+        row_idx = admit_idx.astype(jnp.int32)
+    a = row_disp.shape[0]
+    comp = jnp.concatenate([comp_q, jnp.where(row_disp, row_comp, jnp.inf)])
+    tick = jnp.concatenate([tick_q, jnp.full((a,), r, jnp.int32)])
+    idx = jnp.concatenate([idx_q, jnp.where(row_disp, row_idx, n)])
     size = jnp.concatenate(
         [size_q,
-         jnp.where(dispatch, data_sizes.astype(jnp.float32), 0.0)])
+         jnp.where(row_disp, row_size.astype(jnp.float32), 0.0)])
     upd = jax.tree.map(
         lambda q, c: jnp.concatenate([q, c.astype(q.dtype)]),
         upd_q, client_params)
 
-    deliver = jnp.isfinite(comp) & (comp <= tick_end)       # [B+N]
+    deliver = jnp.isfinite(comp) & (comp <= tick_end)       # [B+A]
     wst = fl_server.staleness_weights(r - tick, staleness_alpha)
     # scatter delivered entries to their client's row; busy-masking makes
     # the delivered indices unique, non-delivered rows go to the sentinel
     scat = jnp.where(deliver, idx, n)
     delivered = jnp.zeros((n,), bool).at[scat].set(True, mode="drop")
     wstale = jnp.zeros((n,), jnp.float32).at[scat].set(wst, mode="drop")
-    delivered_upd = jax.tree.map(
-        lambda u: jnp.zeros((n,) + u.shape[1:], u.dtype)
-                     .at[scat].set(u, mode="drop"), upd)
+    delivered_upd = fl_client.scatter_client_tree(n, scat, upd)
 
     # survivors: delivered slots become empty (inf) and the stable sort
     # sinks them past the live prefix; entries beyond capacity are evicted
@@ -432,31 +442,52 @@ def async_round_tick(loss_fn, params: PyTree, queue: tuple, x_clients,
                      y_clients, keys, dispatch, t_user, data_sizes, r, *,
                      tick_s: float, staleness_alpha, epochs: int,
                      batch_size: int, lr: float, fedavg_backend: str = "jax",
+                     compute: str = "full", select_cap: int | None = None,
                      corrupt=None, corrupt_mode_id=0, corrupt_scale=1.0,
                      clip_norm=None) -> tuple:
     """One buffered-async tick of the data plane (shared by the engine and
     the batched learning-curve sweep).
 
-    Trains the full fleet (the constant-graph ``compute="full"`` path),
-    stamps each dispatched client's Eq. (1) completion time relative to the
-    tick clock ``now = r * tick_s``, advances the event queue, and applies
-    the staleness-weighted Eq. (2) over whatever landed this tick.  Fully
-    traced; ``r`` may be a host int or the fused scan's counter.
+    Trains the fleet — all of it (the constant-graph ``compute="full"``
+    path) or only a static ``select_cap``-sized gather of this tick's
+    dispatch set (``compute="selected"``: training AND the queue admit are
+    [cap]-shaped, so per-tick learning state scales with the dispatch cap,
+    not the population) — stamps each dispatched client's Eq. (1)
+    completion time relative to the tick clock ``now = r * tick_s``,
+    advances the event queue, and applies the staleness-weighted Eq. (2)
+    over whatever landed this tick.  Fully traced; ``r`` may be a host int
+    or the fused scan's counter.
 
     Returns ``(params, queue, delivered, diag)``.
     """
-    client_params = fl_client.fleet_local_sgd(
-        loss_fn, params, x_clients, y_clients, keys,
-        epochs=epochs, batch_size=batch_size, lr=lr)
-    if corrupt is not None:
-        client_params = fl_faults.corrupt_updates(
-            client_params, corrupt, corrupt_mode_id, corrupt_scale)
+    if compute == "selected":
+        n = dispatch.shape[0]
+        cap = n if select_cap is None else min(int(select_cap), n)
+        idx = fl_client.topk_selected_indices(dispatch, cap)
+        client_params = fl_client.fleet_local_sgd(
+            loss_fn, params, x_clients[idx], y_clients[idx], keys[idx],
+            epochs=epochs, batch_size=batch_size, lr=lr)
+        if corrupt is not None:
+            client_params = fl_faults.corrupt_updates(
+                client_params, corrupt[idx], corrupt_mode_id, corrupt_scale)
+        admit_idx = idx
+    elif compute == "full":
+        client_params = fl_client.fleet_local_sgd(
+            loss_fn, params, x_clients, y_clients, keys,
+            epochs=epochs, batch_size=batch_size, lr=lr)
+        if corrupt is not None:
+            client_params = fl_faults.corrupt_updates(
+                client_params, corrupt, corrupt_mode_id, corrupt_scale)
+        admit_idx = None
+    else:
+        raise ValueError(f"unknown compute mode {compute!r}; "
+                         f"choose from {COMPUTE_MODES}")
     now = jnp.asarray(r, jnp.float32) * jnp.float32(tick_s)
     comp_time = now + t_user
     tick_end = now + jnp.float32(tick_s)
     queue, delivered, wstale, delivered_upd, diag = async_queue_step(
         queue, client_params, dispatch, comp_time, data_sizes, r, tick_end,
-        staleness_alpha)
+        staleness_alpha, admit_idx=admit_idx)
     params = aggregate_weighted(params, delivered_upd, delivered, data_sizes,
                                 wstale, fedavg_backend=fedavg_backend,
                                 clip_norm=clip_norm)
@@ -505,22 +536,26 @@ def hierarchical_round(loss_fn, global_params: PyTree, edge_params: PyTree,
     """
     moved = (serving != prev_bs) & (prev_bs >= 0)
     handover_rate = jnp.mean(moved.astype(jnp.float32))
-    init = jax.tree.map(lambda e: e[serving], edge_params)
     # delivery masks the assignment: an undelivered client's upload reaches
     # no BS (its assignment column zeroes out of the segment weights)
     assign_eff = assign if delivered is None else assign & delivered[:, None]
 
     if compute == "selected":
+        # sparse selected state: gather the serving-cell index FIRST, then
+        # pull only the selected clients' edge models — e[serving[idx]] ==
+        # e[serving][idx] exactly, but the per-client init pytree is born
+        # [cap, model] and the dense [N, model] copy never materialises
         n = x_clients.shape[0]
         cap = n if select_cap is None else min(int(select_cap), n)
         idx = fl_client.topk_selected_indices(selected, cap)
+        init = fl_client.gather_client_tree(edge_params, serving[idx])
         client_params = fl_client.fleet_local_sgd_per_client(
-            loss_fn, jax.tree.map(lambda a: a[idx], init),
-            x_clients[idx], y_clients[idx], keys[idx],
+            loss_fn, init, x_clients[idx], y_clients[idx], keys[idx],
             epochs=epochs, batch_size=batch_size, lr=lr)
         assign_r, sizes = assign_eff[idx], data_sizes[idx]
         corr = None if corrupt is None else corrupt[idx]
     elif compute == "full":
+        init = fl_client.gather_client_tree(edge_params, serving)
         client_params = fl_client.fleet_local_sgd_per_client(
             loss_fn, init, x_clients, y_clients, keys,
             epochs=epochs, batch_size=batch_size, lr=lr)
@@ -960,7 +995,8 @@ class FLSimulation:
             keys, dispatch, t_user, self.data_sizes, r,
             tick_s=self._tick_s, staleness_alpha=self._alpha,
             epochs=cfg.local_epochs, batch_size=cfg.batch_size, lr=cfg.lr,
-            fedavg_backend=cfg.fedavg_backend, corrupt=corrupt,
+            fedavg_backend=cfg.fedavg_backend, compute=cfg.compute,
+            select_cap=self._select_cap, corrupt=corrupt,
             corrupt_mode_id=fp["corrupt_mode_id"],
             corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
         # participation follows delivery, as in the sync engine

@@ -99,6 +99,9 @@ def bandwidth_solve(coeff: jnp.ndarray, tcomp: jnp.ndarray,
     k, u = coeff.shape
     rb = min(row_block, k)
     pad = (-k) % rb
+    # compact channel storage may hand us bf16 coeff — solve in f32
+    coeff = coeff.astype(jnp.float32)
+    tcomp = tcomp.astype(jnp.float32)
     mask_f = mask.astype(jnp.float32)
     lo = jnp.zeros((k,), jnp.float32) if lo is None else lo
     if pad:

@@ -14,6 +14,7 @@ from repro.kernels import ssd_scan as ssd
 from repro.kernels import rmsnorm as rms
 from repro.kernels import bandwidth_solve as bws
 from repro.kernels import fedavg_reduce as favg
+from repro.kernels import select_topk as sel
 
 
 def _on_tpu() -> bool:
@@ -42,6 +43,28 @@ def bandwidth_solve(coeff, tcomp, mask, bw):
     if _on_tpu():
         return bws.bandwidth_solve(coeff, tcomp, mask, bw)
     return ref.bandwidth_solve(coeff, tcomp, mask, bw)
+
+
+def masked_bs_argmax(snr, remaining, scale=None, block: int | None = None):
+    """Per-BS argmax of the remaining users: streaming kernel on TPU,
+    chunked jnp when a ``block`` is given (the --user-chunk path), dense
+    oracle otherwise.  All three are ``jnp.argmax``-tie exact."""
+    if _on_tpu():
+        ub = block if block is not None else sel.DEFAULT_USER_BLOCK
+        return sel.masked_bs_argmax(snr, remaining, scale, user_block=ub)
+    if block is not None:
+        return sel.masked_bs_argmax_chunked(snr, remaining, block, scale)
+    return ref.masked_bs_argmax(snr, remaining, scale)
+
+
+def best_bs_argmax(snr, scale=None, block: int | None = None):
+    """Per-user best BS (Algorithm 1 step 1) with the same dispatch."""
+    if _on_tpu():
+        ub = block if block is not None else sel.DEFAULT_USER_BLOCK
+        return sel.best_bs_argmax(snr, scale, user_block=ub)
+    if block is not None:
+        return sel.best_bs_argmax_chunked(snr, block, scale)
+    return ref.best_bs_argmax(snr, scale)
 
 
 def fedavg_reduce(global_params, client_params, selected, data_sizes):

@@ -57,6 +57,33 @@ def fedavg_segment_reduce(edge_params, client_params, assign, data_sizes,
                             clip_norm=clip_norm)
 
 
+def masked_bs_argmax(snr, remaining, scale=None):
+    """Dense per-BS argmax over the remaining users (Algorithm 1 step 3).
+
+    snr [N, M] (any dtype), remaining [N] bool, optional scale [M] per-BS
+    dequantisation step -> (cand [M] int32, best [M] f32).  The masked
+    comparison value is -inf where no user remains; ``jnp.argmax`` supplies
+    the lowest-index tie rule the kernel must reproduce.
+    """
+    vals = snr.astype(jnp.float32)
+    if scale is not None:
+        vals = vals * scale.astype(jnp.float32)[None, :]
+    vals = jnp.where(remaining[:, None], vals, -jnp.inf)
+    return jnp.argmax(vals, axis=0).astype(jnp.int32), jnp.max(vals, axis=0)
+
+
+def best_bs_argmax(snr, scale=None):
+    """Dense per-user best-BS argmax (Algorithm 1 step 1) -> [N] int32.
+
+    With per-BS int8 scales the row comparison must run on the scaled
+    (dB-domain) values — raw codes are only ordered within a column.
+    """
+    vals = snr.astype(jnp.float32)
+    if scale is not None:
+        vals = vals * scale.astype(jnp.float32)[None, :]
+    return jnp.argmax(vals, axis=1).astype(jnp.int32)
+
+
 def bandwidth_solve(coeff, tcomp, mask, bw, iters: int | None = None,
                     method: str = "newton", lo=None) -> jnp.ndarray:
     """Batched Eq.(11) root-finding oracle (safeguarded Newton or bisection).

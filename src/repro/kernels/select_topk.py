@@ -1,0 +1,214 @@
+"""Streaming segmented-argmax selection as a Pallas TPU kernel.
+
+Algorithm 1 step 3 picks, for every BS, the best-channel user not yet
+scheduled: ``argmax_i snr[i, k]`` under the ``remaining`` mask.  The dense
+lowering materialises a masked ``[N, M]`` float32 copy of the SNR matrix
+per greedy step (``jnp.where(remaining[:, None], snr, -inf)`` +
+``argmax(axis=0)``) — at a million users and 100 BSs that is 400 MB of
+temporary per iteration of the greedy while-loop.
+
+This kernel streams the SNR in HBM blocks of ``user_block`` rows and keeps
+only the per-BS running (best value, best index) pair resident in VMEM —
+one bandwidth-bound pass, no ``[N, M]`` temporaries.  Selection semantics
+match ``jnp.argmax`` exactly: the LOWEST index wins ties (blocks are
+visited in ascending order and a block only overwrites on a strictly
+greater value), and an all-masked column returns index 0, like argmax over
+an all ``-inf`` column.
+
+Compact channel storage (docs/SCALING.md) feeds the same entry points:
+``snr`` may be float32, bfloat16, or int8; an optional per-BS ``scale``
+row (the dB-domain quantisation step of
+:func:`repro.core.channel.quantize_snr_int8`) is applied INSIDE the kernel
+(``snr.astype(f32) * scale``), so the dequantised values never exist at
+``[N, M]`` either.  The scaled comparison runs in the dB domain, which is
+order-equivalent to linear SNR per BS.
+
+Pure-jnp paths with identical tie semantics live alongside the kernel:
+:func:`masked_bs_argmax_chunked` / :func:`best_bs_argmax_chunked` stream
+the same blocks with ``lax.map`` for backends without Pallas (the
+``--user-chunk`` CPU path), and :mod:`repro.kernels.ref` holds the dense
+oracles.  Dispatch lives in :mod:`repro.kernels.ops`; the DAGSA greedy
+(:mod:`repro.core.dagsa_jit`) routes here via ``backend="pallas"`` /
+``selection_block``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Streaming block of users per grid step.  f32 x 2048 x M stays well under
+# VMEM for any realistic BS count while amortising the grid overhead.
+DEFAULT_USER_BLOCK = 2048
+
+
+def _running_argmax(vals, sentinel: int):
+    """Per-column (max, first-max-row) of a [B, M] block.
+
+    ``jnp.argmax`` tie semantics: among equal maxima the lowest row wins
+    (an all ``-inf`` column yields row 0).  2-D iota per the TPU tiling
+    rules; ``sentinel`` (>= B) pads the non-max rows out of the min.
+    """
+    best = jnp.max(vals, axis=0, keepdims=True)                  # [1, M]
+    rows = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 0)
+    arg = jnp.min(jnp.where(vals == best, rows, sentinel), axis=0,
+                  keepdims=True)                                 # [1, M]
+    return best, arg
+
+
+def _select_kernel(snr_ref, mask_ref, scale_ref, val_ref, idx_ref, *,
+                   block: int):
+    """One user block: dequantise, mask, fold into the running best."""
+    jb = pl.program_id(0)
+
+    @pl.when(jb == 0)
+    def _init():
+        # running state is resident across the whole grid (constant
+        # index_map); -inf/0 reproduces argmax over an all-masked column
+        val_ref[...] = jnp.full_like(val_ref, -jnp.inf)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    s = snr_ref[...].astype(jnp.float32) * scale_ref[...]        # [B, M]
+    m = mask_ref[...].astype(jnp.float32)                        # [B, 1]
+    vals = jnp.where(m > 0.0, s, -jnp.inf)
+    best, arg = _running_argmax(vals, block)
+    # strictly-greater update: earlier blocks (lower indices) win ties
+    upd = best > val_ref[...]
+    val_ref[...] = jnp.where(upd, best, val_ref[...])
+    idx_ref[...] = jnp.where(upd, jb * block + arg, idx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("user_block", "interpret"))
+def masked_bs_argmax(snr, remaining, scale=None,
+                     user_block: int = DEFAULT_USER_BLOCK,
+                     interpret: bool | None = None):
+    """Streaming per-BS argmax over the remaining users.
+
+    Args:
+      snr: [N, M] channel quality (f32 / bf16 / int8 storage).
+      remaining: [N] bool, users still schedulable.
+      scale: optional [M] per-BS dequantisation step (int8 storage);
+        applied inside the kernel.
+      interpret: Pallas interpret-mode override (auto: True off-TPU).
+
+    Returns:
+      (cand [M] int32, best [M] f32): ``jnp.argmax``-tie-compatible index
+      of the best remaining user per BS and its (dequantised, masked)
+      comparison value (-inf where no user remains).
+    """
+    n, m = snr.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ub = min(user_block, n)
+    pad = (-n) % ub
+    mask = remaining.astype(jnp.float32).reshape(n, 1)
+    if pad:
+        snr = jnp.pad(snr, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))    # padded rows masked out
+    scale_row = (jnp.ones((1, m), jnp.float32) if scale is None
+                 else scale.astype(jnp.float32).reshape(1, m))
+    val, idx = pl.pallas_call(
+        functools.partial(_select_kernel, block=ub),
+        grid=((n + pad) // ub,),
+        in_specs=[pl.BlockSpec((ub, m), lambda j: (j, 0)),
+                  pl.BlockSpec((ub, 1), lambda j: (j, 0)),
+                  pl.BlockSpec((1, m), lambda j: (0, 0))],
+        out_specs=(pl.BlockSpec((1, m), lambda j: (0, 0)),
+                   pl.BlockSpec((1, m), lambda j: (0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((1, m), jnp.float32),
+                   jax.ShapeDtypeStruct((1, m), jnp.int32)),
+        interpret=interpret,
+    )(snr, mask, scale_row)
+    return idx[0], val[0]
+
+
+def _rowmax_kernel(snr_ref, scale_ref, out_ref):
+    """Per-user best BS of one [B, M] block (argmax over lanes)."""
+    s = snr_ref[...].astype(jnp.float32) * scale_ref[...]        # [B, M]
+    best = jnp.max(s, axis=1, keepdims=True)
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    out_ref[...] = jnp.min(jnp.where(s == best, cols, s.shape[1]),
+                           axis=1, keepdims=True)                # [B, 1]
+
+
+@functools.partial(jax.jit, static_argnames=("user_block", "interpret"))
+def best_bs_argmax(snr, scale=None, user_block: int = DEFAULT_USER_BLOCK,
+                   interpret: bool | None = None):
+    """[N] int32 best-channel BS per user, streamed in user blocks.
+
+    Algorithm 1 step 1 (necessary users camp on their best BS).  With int8
+    storage the per-BS ``scale`` MUST be applied before the row argmax —
+    dequantisation is only order-preserving within a column — which the
+    kernel does per block, dB-domain.
+    """
+    n, m = snr.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ub = min(user_block, n)
+    pad = (-n) % ub
+    if pad:
+        snr = jnp.pad(snr, ((0, pad), (0, 0)))
+    scale_row = (jnp.ones((1, m), jnp.float32) if scale is None
+                 else scale.astype(jnp.float32).reshape(1, m))
+    out = pl.pallas_call(
+        _rowmax_kernel,
+        grid=((n + pad) // ub,),
+        in_specs=[pl.BlockSpec((ub, m), lambda j: (j, 0)),
+                  pl.BlockSpec((1, m), lambda j: (0, 0))],
+        out_specs=pl.BlockSpec((ub, 1), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, 1), jnp.int32),
+        interpret=interpret,
+    )(snr, scale_row)
+    return out[:n, 0]
+
+
+# ----------------------------------------------- chunked jnp (CPU) paths --
+def masked_bs_argmax_chunked(snr, remaining, block: int, scale=None):
+    """Pure-jnp streaming variant: identical results, [block, M] temporaries.
+
+    ``lax.map`` over user blocks keeps per-block (max, argmax) pairs
+    [N/block, M] and combines with a first-max reduction — the same
+    lowest-index tie rule as the dense oracle, bit-identical output.  This
+    is the ``--user-chunk`` selection path off-TPU.
+    """
+    n, m = snr.shape
+    b = min(int(block), n)
+    pad = (-n) % b
+    mask = remaining
+    if pad:
+        snr = jnp.pad(snr, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad),))           # padded rows masked out
+    scale_row = (jnp.ones((m,), jnp.float32) if scale is None
+                 else scale.astype(jnp.float32))
+
+    def blk(args):
+        s, r = args
+        vals = jnp.where(r[:, None], s.astype(jnp.float32) * scale_row,
+                         -jnp.inf)
+        return jnp.max(vals, axis=0), jnp.argmax(vals, axis=0)
+
+    vals, idxs = jax.lax.map(
+        blk, (snr.reshape(-1, b, m), mask.reshape(-1, b)))
+    # first-max across blocks: argmax picks the lowest block on ties, and
+    # within a block argmax already picked the lowest row -> global lowest
+    kb = jnp.argmax(vals, axis=0)                                # [M]
+    ar = jnp.arange(m)
+    cand = (kb * b + idxs[kb, ar]).astype(jnp.int32)
+    return cand, vals[kb, ar]
+
+
+def best_bs_argmax_chunked(snr, block: int, scale=None):
+    """Pure-jnp streaming per-user best BS (bit-identical to the oracle)."""
+    n, m = snr.shape
+    b = min(int(block), n)
+    pad = (-n) % b
+    if pad:
+        snr = jnp.pad(snr, ((0, pad), (0, 0)))
+    scale_row = (jnp.ones((m,), jnp.float32) if scale is None
+                 else scale.astype(jnp.float32))
+    out = jax.lax.map(
+        lambda s: jnp.argmax(s.astype(jnp.float32) * scale_row, axis=1),
+        snr.reshape(-1, b, m))
+    return out.reshape(-1)[:n].astype(jnp.int32)

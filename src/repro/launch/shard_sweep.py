@@ -75,11 +75,13 @@ def _grid_shape(outs: dict, n_cells: int, n_scen: int, n_seeds: int) -> dict:
 # ---------------------------------------------------------- wireless sweep --
 @partial(jax.jit, static_argnames=("mesh", "cfg", "n_rounds",
                                    "min_participants", "backend",
-                                   "user_chunk", "n_models"))
+                                   "user_chunk", "channel_dtype",
+                                   "n_models"))
 def _shard_sweep_bucket(cell_params: dict, cell_keys: jax.Array, *, mesh,
                         cfg: WirelessConfig, n_rounds: int,
                         min_participants: int, backend: str,
-                        user_chunk: int | None, n_models: int) -> dict:
+                        user_chunk: int | None, channel_dtype: str,
+                        n_models: int) -> dict:
     """One shape bucket's padded cell grid, shard_map'ed over the mesh.
 
     ``n_models`` pins the mobility-registry size into the compilation key
@@ -87,7 +89,7 @@ def _shard_sweep_bucket(cell_params: dict, cell_keys: jax.Array, *, mesh,
     """
     run = partial(sweep._one_cell, cfg=cfg, n_rounds=n_rounds,
                   min_participants=min_participants, backend=backend,
-                  user_chunk=user_chunk)
+                  user_chunk=user_chunk, channel_dtype=channel_dtype)
     mapped = shard_map(
         jax.vmap(lambda p, k: run(p, k)), mesh=mesh,
         in_specs=(P("data"), P("data")), out_specs=P("data"),
@@ -98,7 +100,8 @@ def _shard_sweep_bucket(cell_params: dict, cell_keys: jax.Array, *, mesh,
 def run_shard_sweep(scenarios: Sequence[str | ScenarioSpec],
                     n_seeds: int = 4, n_rounds: int = 10,
                     cfg: WirelessConfig | None = None, backend: str = "jax",
-                    user_chunk: int | None = None, seed: int = 0,
+                    user_chunk: int | None = None,
+                    channel_dtype: str = "f32", seed: int = 0,
                     mesh=None, n_devices: int | None = None) -> list[dict]:
     """Device-sharded :func:`repro.launch.sweep.run_sweep`.
 
@@ -127,6 +130,7 @@ def run_shard_sweep(scenarios: Sequence[str | ScenarioSpec],
             pad_leading(cell_params, n_pad), pad_leading(cell_keys, n_pad),
             mesh=mesh, cfg=bcfg, n_rounds=n_rounds, min_participants=minp,
             backend=backend, user_chunk=user_chunk,
+            channel_dtype=channel_dtype,
             n_models=len(mobility.MOBILITY_MODELS))
         outs = _grid_shape(outs, n_cells, len(group), n_seeds)
         records.update(sweep._wireless_records(group, outs, n_seeds,
@@ -142,7 +146,8 @@ def run_shard_sweep(scenarios: Sequence[str | ScenarioSpec],
                                    "tau_global", "scheduler", "faults_on",
                                    "clip_on", "async_on", "tick_s",
                                    "staleness_alpha", "buffer_size",
-                                   "user_chunk", "n_models"))
+                                   "user_chunk", "channel_dtype",
+                                   "n_models"))
 def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                            cell_seed: jax.Array, x_c, y_c, w0, x_test,
                            y_test, *, mesh, cfg: WirelessConfig,
@@ -153,7 +158,8 @@ def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                            scheduler: str, faults_on: bool, clip_on: bool,
                            async_on: bool, tick_s: float,
                            staleness_alpha: float, buffer_size: int,
-                           user_chunk: int | None, n_models: int) -> dict:
+                           user_chunk: int | None, channel_dtype: str,
+                           n_models: int) -> dict:
     """Learning-sweep bucket over the mesh.
 
     The per-seed client data / model inits stay replicated ([seeds, ...]
@@ -171,7 +177,8 @@ def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                   tau_global=tau_global, scheduler=scheduler,
                   faults_on=faults_on, clip_on=clip_on, async_on=async_on,
                   tick_s=tick_s, staleness_alpha=staleness_alpha,
-                  buffer_size=buffer_size, user_chunk=user_chunk)
+                  buffer_size=buffer_size, user_chunk=user_chunk,
+                  channel_dtype=channel_dtype)
 
     def local(cp, ck, cs, xc, yc, w, xt, yt):
         def cell(p, k, j):
@@ -207,7 +214,8 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                              tick_s: float | None = None,
                              staleness_alpha: float = 0.0,
                              buffer_size: int | None = None,
-                             user_chunk: int | None = None, seed: int = 0,
+                             user_chunk: int | None = None,
+                             channel_dtype: str = "f32", seed: int = 0,
                              mesh=None,
                              n_devices: int | None = None) -> list[dict]:
     """Device-sharded :func:`repro.launch.sweep.run_learning_sweep`.
@@ -281,7 +289,8 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
             tick_s=(float(tick_s) if aggregation_async else 1.0),
             staleness_alpha=float(staleness_alpha),
             buffer_size=(buf if aggregation_async else 1),
-            user_chunk=user_chunk, n_models=len(mobility.MOBILITY_MODELS))
+            user_chunk=user_chunk, channel_dtype=channel_dtype,
+            n_models=len(mobility.MOBILITY_MODELS))
         outs = _grid_shape(outs, n_cells, len(group), n_seeds)
         async_info = ({"aggregation_async": True, "tick_s": float(tick_s),
                        "staleness_alpha": float(staleness_alpha),
@@ -295,10 +304,11 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
 
 # ------------------------------------------------------- fleet scheduler ---
 @partial(jax.jit, static_argnames=("mesh", "min_participants", "method",
-                                   "iters", "backend", "interpret"))
+                                   "iters", "backend", "interpret",
+                                   "selection_block"))
 def _shard_schedule(snr, coeff, tcomp, bs_bw, necessary, keys, *, mesh,
                     min_participants: int, method: str, iters, backend: str,
-                    interpret):
+                    interpret, selection_block=None):
     """Padded fleet arrays, shard_map'ed over the mesh.
 
     Module-level jit (mesh and greedy knobs static) so repeated
@@ -307,7 +317,8 @@ def _shard_schedule(snr, coeff, tcomp, bs_bw, necessary, keys, *, mesh,
     """
     fn = partial(dagsa_jit._schedule_batch,
                  min_participants=min_participants, method=method,
-                 iters=iters, backend=backend, interpret=interpret)
+                 iters=iters, backend=backend, interpret=interpret,
+                 selection_block=selection_block)
     mapped = shard_map(
         lambda s, c, t, b, ne, k: fn(s, c, t, b, ne, keys=k), mesh=mesh,
         in_specs=(P("data"),) * 6, out_specs=P("data"), check_rep=False)
@@ -316,7 +327,8 @@ def _shard_schedule(snr, coeff, tcomp, bs_bw, necessary, keys, *, mesh,
 
 def shard_schedule_batch(problems, keys: jax.Array, method: str = "newton",
                          iters: int | None = None, backend: str = "jax",
-                         interpret: bool | None = None, mesh=None,
+                         interpret: bool | None = None,
+                         selection_block: int | None = None, mesh=None,
                          n_devices: int | None = None) -> ScheduleResult:
     """:func:`repro.core.dagsa_jit.dagsa_schedule_batch` over a device mesh.
 
@@ -340,7 +352,8 @@ def shard_schedule_batch(problems, keys: jax.Array, method: str = "newton",
     out = _shard_schedule(*arrs, mesh=mesh,
                           min_participants=int(problems.min_participants),
                           method=method, iters=iters, backend=backend,
-                          interpret=interpret)
+                          interpret=interpret,
+                          selection_block=selection_block)
     assign, selected, bw, t_k, t_round = unpad_leading(out, fleet)
     return ScheduleResult(assign=assign, selected=selected, bw=bw,
                           bs_time=t_k, t_round=t_round)

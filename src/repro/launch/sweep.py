@@ -150,10 +150,13 @@ def _dist_and_shadow(pos, bs_pos, shadow_sigma, k_shadow,
 
     The shadowing field evaluates 64 random Fourier features per (user, BS)
     pair — the O(N x M x F) intermediate that dominates memory at fleet
-    scale.  ``user_chunk`` bounds it: a ``lax.map`` over N/user_chunk user
-    blocks keeps the peak at [user_chunk, M, F] while producing bit-identical
-    values (both terms are per-user independent, and the field's
-    frequencies/phases depend only on ``k_shadow``).
+    scale.  ``user_chunk`` bounds it: a ``lax.map`` over ceil(N/user_chunk)
+    user blocks keeps the peak at [user_chunk, M, F] while producing
+    bit-identical values (both terms are per-user independent, and the
+    field's frequencies/phases depend only on ``k_shadow``).  A final
+    partial block is padded with dummy rows and sliced off — per-row
+    determinism means real rows are unaffected, so arbitrary fleet sizes
+    work with any chunk.
     """
     def block(pos_blk):
         d = MobilityState(user_pos=pos_blk, bs_pos=bs_pos).distances()
@@ -164,26 +167,31 @@ def _dist_and_shadow(pos, bs_pos, shadow_sigma, k_shadow,
     n = pos.shape[0]
     if not user_chunk or user_chunk >= n:
         return block(pos)
-    d, sh = jax.lax.map(block, pos.reshape(n // user_chunk, user_chunk, 2))
-    return d.reshape(n, -1), sh.reshape(n, -1)
+    pad = (-n) % user_chunk
+    if pad:
+        pos = jnp.pad(pos, ((0, pad), (0, 0)))
+    d, sh = jax.lax.map(block, pos.reshape(-1, user_chunk, 2))
+    return d.reshape(n + pad, -1)[:n], sh.reshape(n + pad, -1)[:n]
 
 
 def _check_user_chunk(user_chunk: int | None, n_users: int) -> None:
-    if user_chunk is None:
-        return
-    if user_chunk < 1:
+    if user_chunk is not None and user_chunk < 1:
         raise ValueError(f"user_chunk must be >= 1, got {user_chunk}")
-    if n_users % user_chunk:
-        raise ValueError(
-            f"user_chunk={user_chunk} must divide n_users={n_users} "
-            f"(blocks are reshaped, not padded — padding would change the "
-            f"per-user PRNG layout)")
 
 
 def _one_cell(p: dict, key: jax.Array, cfg: WirelessConfig, n_rounds: int,
               min_participants: int, backend: str,
-              user_chunk: int | None = None) -> dict:
-    """One (scenario, seed) cell: init world, scan the wireless loop."""
+              user_chunk: int | None = None,
+              channel_dtype: str = "f32") -> dict:
+    """One (scenario, seed) cell: init world, scan the wireless loop.
+
+    ``channel_dtype="bf16"`` stores the per-round [N, M] SNR (and the
+    coefficient matrix derived from it) in bfloat16 — half the bytes/user
+    of the channel plane (docs/SCALING.md); selection and the Eq. (11)
+    solves upcast per block/row.  ``user_chunk`` additionally routes
+    Algorithm 1 steps 1/3 through the streaming chunked selection
+    (bit-identical decisions, no [N, M] selection temporaries).
+    """
     k_pos, k_bs, k_bw, k_aux, k_shadow, k_run = jax.random.split(key, 6)
     pos0 = jax.random.uniform(k_pos, (cfg.n_users, 2), minval=0.0,
                               maxval=cfg.area_m)
@@ -203,8 +211,11 @@ def _one_cell(p: dict, key: jax.Array, cfg: WirelessConfig, n_rounds: int,
         # sigma 0 (scenario off) makes it a no-op multiplier.
         dist, shadow_db = _dist_and_shadow(pos, bs_pos, p["shadow_sigma"],
                                            k_shadow, cfg, user_chunk)
-        snr = channel.sample_snr(k_snr, dist, cfg, shadow_db=shadow_db)
-        coeff = channel.bandwidth_time_coeff(snr, cfg)
+        snr = channel.compress_channel(
+            channel.sample_snr(k_snr, dist, cfg, shadow_db=shadow_db),
+            channel_dtype)
+        coeff = channel.compress_channel(
+            channel.bandwidth_time_coeff(snr, cfg), channel_dtype)
         u = jax.random.uniform(k_tc, (cfg.n_users,))
         tcomp = p["tcomp_min"] + u * (p["tcomp_max"] - p["tcomp_min"])
         # Eq. (8g): post-round requirement — participate if sitting out
@@ -213,7 +224,7 @@ def _one_cell(p: dict, key: jax.Array, cfg: WirelessConfig, n_rounds: int,
         necessary = counts < cfg.rho1 * (r + 1.0)
         _, selected, _, _, t_round = dagsa_jit._schedule(
             snr, coeff, tcomp, bs_bw, necessary, min_participants, k_sched,
-            backend=backend)
+            backend=backend, selection_block=user_chunk)
         counts = counts + selected.astype(counts.dtype)
         out = {
             "t_round": t_round,
@@ -229,11 +240,12 @@ def _one_cell(p: dict, key: jax.Array, cfg: WirelessConfig, n_rounds: int,
 
 @partial(jax.jit, static_argnames=("cfg", "n_rounds", "n_seeds",
                                    "min_participants", "backend",
-                                   "user_chunk", "n_models"))
+                                   "user_chunk", "channel_dtype",
+                                   "n_models"))
 def _sweep_bucket(params: dict, key: jax.Array, *, cfg: WirelessConfig,
                   n_rounds: int, n_seeds: int, min_participants: int,
                   backend: str, user_chunk: int | None,
-                  n_models: int) -> dict:
+                  channel_dtype: str, n_models: int) -> dict:
     """All scenarios of one shape bucket x all seeds, one compiled call.
 
     Returns a dict of [S, n_seeds, n_rounds] arrays.  ``n_models`` is the
@@ -244,7 +256,7 @@ def _sweep_bucket(params: dict, key: jax.Array, *, cfg: WirelessConfig,
     seed_keys = jax.random.split(key, n_seeds)   # shared: paired comparisons
     run = partial(_one_cell, cfg=cfg, n_rounds=n_rounds,
                   min_participants=min_participants, backend=backend,
-                  user_chunk=user_chunk)
+                  user_chunk=user_chunk, channel_dtype=channel_dtype)
     return jax.vmap(lambda p: jax.vmap(lambda k: run(p, k))(seed_keys))(
         params)
 
@@ -297,14 +309,17 @@ def _wireless_records(group: list[tuple[int, ScenarioSpec]], outs: dict,
 def run_sweep(scenarios: Sequence[str | ScenarioSpec], n_seeds: int = 4,
               n_rounds: int = 10, cfg: WirelessConfig | None = None,
               backend: str = "jax", seed: int = 0,
-              user_chunk: int | None = None) -> list[dict]:
+              user_chunk: int | None = None,
+              channel_dtype: str = "f32") -> list[dict]:
     """Run the batched wireless sweep; one record dict per scenario.
 
     Scenarios are bucketed by resolved array shape (n_users, n_bs); each
     bucket is ONE jit-compiled call covering all its scenarios x seeds.
     ``user_chunk`` bounds the per-round O(N x M x F) channel intermediates
-    (see :func:`_dist_and_shadow`); it must divide every bucket's n_users.
-    See the module docstring for the record schema.
+    (see :func:`_dist_and_shadow`) and streams Algorithm 1's selection in
+    blocks of that size (any value works — partial blocks are padded).
+    ``channel_dtype="bf16"`` stores the [N, M] channel planes compactly
+    (docs/SCALING.md).  See the module docstring for the record schema.
     """
     specs = [get_scenario(s) if isinstance(s, str) else s for s in scenarios]
     base = cfg or WirelessConfig()
@@ -318,6 +333,7 @@ def run_sweep(scenarios: Sequence[str | ScenarioSpec], n_seeds: int = 4,
                              n_rounds=n_rounds, n_seeds=n_seeds,
                              min_participants=minp, backend=backend,
                              user_chunk=user_chunk,
+                             channel_dtype=channel_dtype,
                              n_models=len(mobility.MOBILITY_MODELS))
         records.update(_wireless_records(group, outs, n_seeds, n_rounds))
     # preserve the caller's scenario order
@@ -334,7 +350,8 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                        faults_on: bool = False, clip_on: bool = False,
                        async_on: bool = False, tick_s: float = 1.0,
                        staleness_alpha: float = 0.0, buffer_size: int = 1,
-                       user_chunk: int | None = None) -> dict:
+                       user_chunk: int | None = None,
+                       channel_dtype: str = "f32") -> dict:
     """One (scenario, seed) FL cell: init world, scan the full round loop
     (wireless control plane + local SGD + Eq. (2) aggregation — single-tier
     or hierarchical per-BS edges with a tau_global sync — + periodic
@@ -398,8 +415,11 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
             p["speed"], p["pause_s"], p["gm_memory"])
         dist, shadow_db = _dist_and_shadow(pos, bs_pos, p["shadow_sigma"],
                                            k_shadow, cfg, user_chunk)
-        snr = channel.sample_snr(k_snr, dist, cfg, shadow_db=shadow_db)
-        coeff = channel.bandwidth_time_coeff(snr, cfg)
+        snr = channel.compress_channel(
+            channel.sample_snr(k_snr, dist, cfg, shadow_db=shadow_db),
+            channel_dtype)
+        coeff = channel.compress_channel(
+            channel.bandwidth_time_coeff(snr, cfg), channel_dtype)
         u = jax.random.uniform(k_tc, (cfg.n_users,))
         tcomp = p["tcomp_min"] + u * (p["tcomp_max"] - p["tcomp_min"])
         # Eq. (8g), post-round requirement (matches channel.make_problem)
@@ -417,7 +437,7 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                 score = snr * jnp.clip(p_est, 0.0, 1.0)[:, None]
         assign, selected, bw, _, t_round = dagsa_jit._schedule(
             score, coeff, tcomp, bs_bw, necessary, minp, k_sched,
-            backend=backend)
+            backend=backend, selection_block=user_chunk)
         if faults_on:
             tcomp_eff, alive, corrupt = fl_faults.sample_round_faults(
                 k_fault, fp, edge_frac, handover, tcomp)
@@ -446,7 +466,8 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                 cnn.loss_fn, params, queue, x_c, y_c, keys, dispatch,
                 t_user, data_sizes, r, tick_s=tick_s,
                 staleness_alpha=staleness_alpha, epochs=epochs,
-                batch_size=batch_size, lr=lr,
+                batch_size=batch_size, lr=lr, compute=compute,
+                select_cap=select_cap,
                 fedavg_backend=fedavg_backend, corrupt=corrupt,
                 corrupt_mode_id=fp["corrupt_mode_id"],
                 corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
@@ -553,7 +574,8 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                                    "select_cap", "aggregation", "tau_global",
                                    "scheduler", "faults_on", "clip_on",
                                    "async_on", "tick_s", "staleness_alpha",
-                                   "buffer_size", "user_chunk", "n_models"))
+                                   "buffer_size", "user_chunk",
+                                   "channel_dtype", "n_models"))
 def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                      x_test, y_test, *, cfg: WirelessConfig, n_rounds: int,
                      minp: int, epochs: int, batch_size: int, lr: float,
@@ -562,7 +584,8 @@ def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                      tau_global: int, scheduler: str, faults_on: bool,
                      clip_on: bool, async_on: bool, tick_s: float,
                      staleness_alpha: float, buffer_size: int,
-                     user_chunk: int | None, n_models: int) -> dict:
+                     user_chunk: int | None, channel_dtype: str,
+                     n_models: int) -> dict:
     """All scenarios of one shape bucket x all seeds, one compiled call.
 
     ``x_c``/``y_c``/``w0`` carry a leading seed axis (per-seed Non-IID
@@ -578,7 +601,8 @@ def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                   tau_global=tau_global, scheduler=scheduler,
                   faults_on=faults_on, clip_on=clip_on, async_on=async_on,
                   tick_s=tick_s, staleness_alpha=staleness_alpha,
-                  buffer_size=buffer_size, user_chunk=user_chunk)
+                  buffer_size=buffer_size, user_chunk=user_chunk,
+                  channel_dtype=channel_dtype)
 
     def per_scenario(p):
         return jax.vmap(lambda k, xc, yc, w: run(p, k, xc, yc, w,
@@ -772,9 +796,6 @@ def _check_async_args(aggregation_async: bool, tick_s, staleness_alpha,
     if aggregation_async:
         if tick_s is None:
             raise ValueError("aggregation_async=True needs tick_s")
-        if compute != "full":
-            raise ValueError("aggregation_async needs compute='full' "
-                             "(aggregation masks by delivery, not schedule)")
         if aggregation == "hierarchical":
             raise ValueError("aggregation_async composes with single-tier "
                              "aggregation only")
@@ -803,6 +824,7 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                        staleness_alpha: float = 0.0,
                        buffer_size: int | None = None,
                        user_chunk: int | None = None,
+                       channel_dtype: str = "f32",
                        seed: int = 0) -> list[dict]:
     """Accuracy-vs-simulated-wall-clock curves, one record per scenario.
 
@@ -831,6 +853,13 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     ``n_inflight`` / ``n_dropped`` / delivery curves, so sync and async
     runs of the same scenarios yield directly comparable
     accuracy-vs-wall-clock curves.
+
+    ``user_chunk`` streams the per-user channel tensors AND Algorithm 1's
+    selection in blocks (any value; partial blocks are padded);
+    ``channel_dtype="bf16"`` stores the [N, M] channel planes compactly;
+    ``compute="selected"`` + ``select_cap`` keeps per-round learning state
+    [cap]-shaped in both the sync and buffered-async engines
+    (docs/SCALING.md).
     """
     from repro.data import make_dataset
     from repro.models import cnn
@@ -884,7 +913,8 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
             tick_s=(float(tick_s) if aggregation_async else 1.0),
             staleness_alpha=float(staleness_alpha),
             buffer_size=(buf if aggregation_async else 1),
-            user_chunk=user_chunk, n_models=len(mobility.MOBILITY_MODELS))
+            user_chunk=user_chunk, channel_dtype=channel_dtype,
+            n_models=len(mobility.MOBILITY_MODELS))
         async_info = ({"aggregation_async": True, "tick_s": float(tick_s),
                        "staleness_alpha": float(staleness_alpha),
                        "buffer_size": buf}
@@ -915,9 +945,24 @@ def main() -> None:
                          "visible device; force host devices with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=D)")
     ap.add_argument("--user-chunk", type=int, default=None, metavar="B",
-                    help="compute per-user channel tensors in blocks of B "
-                         "users (bounds the O(N*M*F) shadowing "
-                         "intermediates; must divide n_users)")
+                    help="compute per-user channel tensors AND Algorithm 1 "
+                         "selection in blocks of B users (bounds the "
+                         "O(N*M*F) shadowing and [N, M] selection "
+                         "intermediates; partial final blocks are padded)")
+    ap.add_argument("--n-users", type=int, default=None, metavar="N",
+                    help="override WirelessConfig.n_users (fleet size) for "
+                         "every scenario")
+    ap.add_argument("--rho1", type=float, default=None,
+                    help="override WirelessConfig.rho1 (per-user "
+                         "participation floor, Eq. (8g))")
+    ap.add_argument("--rho2", type=float, default=None,
+                    help="override WirelessConfig.rho2 (per-round "
+                         "participation fraction floor)")
+    ap.add_argument("--channel-dtype", default="f32",
+                    choices=channel.CHANNEL_DTYPES,
+                    help="storage dtype of the per-round [N, M] channel "
+                         "planes (bf16 halves channel bytes/user; "
+                         "docs/SCALING.md)")
     ap.add_argument("--out", default="-",
                     help="output path for the JSON list ('-' = stdout)")
     ap.add_argument("--learning", action="store_true",
@@ -973,6 +1018,11 @@ def main() -> None:
 
     names = list(SCENARIOS) if args.scenarios == "all" \
         else args.scenarios.split(",")
+    overrides = {k: v for k, v in (("n_users", args.n_users),
+                                   ("rho1", args.rho1),
+                                   ("rho2", args.rho2)) if v is not None}
+    cfg = dataclasses.replace(WirelessConfig(), **overrides) \
+        if overrides else None
     if args.mesh is not None and not args.shard:
         ap.error("--mesh only applies with --shard; it would silently "
                  "do nothing")
@@ -1000,7 +1050,7 @@ def main() -> None:
         learning_fn, wireless_fn = run_learning_sweep, run_sweep
     if args.learning:
         records = learning_fn(
-            names, n_seeds=args.seeds, n_rounds=args.rounds,
+            names, n_seeds=args.seeds, n_rounds=args.rounds, cfg=cfg,
             dataset=args.dataset, n_train=args.n_train, n_test=args.n_test,
             local_epochs=args.local_epochs, batch_size=args.batch_size,
             lr=args.lr, eval_every=args.eval_every, backend=args.backend,
@@ -1011,15 +1061,19 @@ def main() -> None:
             aggregation_async=args.async_agg, tick_s=args.tick,
             staleness_alpha=args.staleness_alpha,
             buffer_size=args.buffer_size,
-            user_chunk=args.user_chunk, seed=args.seed)
+            user_chunk=args.user_chunk,
+            channel_dtype=args.channel_dtype, seed=args.seed)
         summary = " ".join(
             f"{r['scenario']}="
             f"{r['final_acc_mean']:.3f}" if r["final_acc_mean"] is not None
             else f"{r['scenario']}=n/a" for r in records)
     else:
         records = wireless_fn(names, n_seeds=args.seeds,
-                              n_rounds=args.rounds, backend=args.backend,
-                              user_chunk=args.user_chunk, seed=args.seed)
+                              n_rounds=args.rounds, cfg=cfg,
+                              backend=args.backend,
+                              user_chunk=args.user_chunk,
+                              channel_dtype=args.channel_dtype,
+                              seed=args.seed)
         summary = " ".join(f"{r['scenario']}={r['t_round_mean_s']:.3f}s"
                            for r in records)
     payload = json.dumps(records, indent=2)

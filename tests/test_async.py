@@ -56,9 +56,9 @@ def test_flconfig_async_validation():
                  staleness_alpha=-0.5)
     with pytest.raises(ValueError, match="buffer_size"):
         FLConfig(**SMALL, aggregation_async=True, tick_s=1.0, buffer_size=0)
-    with pytest.raises(ValueError, match="compute"):
-        FLConfig(**SMALL, aggregation_async=True, tick_s=1.0,
-                 compute="selected")
+    # async + compute="selected" is supported (sparse selected-state path)
+    FLConfig(**SMALL, aggregation_async=True, tick_s=1.0,
+             compute="selected")
     with pytest.raises(ValueError, match="single-tier"):
         FLConfig(**SMALL, aggregation_async=True, tick_s=1.0,
                  aggregation="hierarchical")
@@ -99,6 +99,35 @@ def test_async_degenerates_to_sync_bit_identical():
         assert ra.n_delivered == ra.n_selected
         assert ra.n_inflight == 0
         assert ra.n_dropped == 0
+
+
+def test_async_selected_covering_cap_bit_identical():
+    """compute='selected' with a cap covering the fleet is the full-fleet
+    async engine bit for bit — params AND records (NaN-aware: test_acc is
+    NaN on non-eval ticks, and NaN != NaN under dataclass equality)."""
+    n = SMALL["wireless"].n_users
+    kw = dict(aggregation_async=True, tick_s=2.0, staleness_alpha=0.3,
+              buffer_size=6)
+    full = FLSimulation(FLConfig(**SMALL, **kw))
+    recs_full = full.run(4)
+    sel = FLSimulation(FLConfig(**SMALL, **kw, compute="selected",
+                                select_cap=n))
+    recs_sel = sel.run(4)
+    _assert_params_identical(full.params, sel.params)
+    for rf, rs in zip(recs_full, recs_sel):
+        for f in rf.__dataclass_fields__:
+            a, b = getattr(rf, f), getattr(rs, f)
+            assert a == b or (np.isnan(a) and np.isnan(b)), (f, a, b)
+
+
+def test_async_selected_tight_cap_runs():
+    """A cap below the dispatch set is a documented approximation: the
+    engine must stay finite and keep aggregating."""
+    sim = FLSimulation(FLConfig(**SMALL, aggregation_async=True, tick_s=2.0,
+                                compute="selected", select_cap=4))
+    recs = sim.run(4)
+    assert all(np.isfinite(r.t_round) for r in recs)
+    assert sum(r.n_delivered for r in recs) > 0
 
 
 def test_async_alpha_free_when_same_tick():

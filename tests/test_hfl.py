@@ -164,6 +164,25 @@ def test_hierarchical_fused_matches_step():
                           sims["fused"].edge_params) <= 1e-6
 
 
+def test_hierarchical_selected_covering_cap_bit_identical():
+    """compute='selected' gathers only the [cap] selected clients' learning
+    state; with a cap covering the fleet, the hierarchical trajectory must
+    be the dense engine bit for bit."""
+    n = SMALL["wireless"].n_users
+    full = FLSimulation(FLConfig(**SMALL, aggregation="hierarchical",
+                                 tau_global=2))
+    sel = FLSimulation(FLConfig(**SMALL, aggregation="hierarchical",
+                                tau_global=2, compute="selected",
+                                select_cap=n))
+    r_full = full.run(4, mode="fused")
+    r_sel = sel.run(4, mode="fused")
+    assert [r.n_selected for r in r_full] == [r.n_selected for r in r_sel]
+    np.testing.assert_array_equal([r.test_acc for r in r_full],
+                                  [r.test_acc for r in r_sel])
+    assert _max_leaf_diff(full.params, sel.params) == 0.0
+    assert _max_leaf_diff(full.edge_params, sel.edge_params) == 0.0
+
+
 def test_hierarchical_tau1_tracks_single_tier():
     """tau_global=1 syncs every round; the two-stage weighted mean equals
     the single-tier Eq. (2) up to float reordering, so the trajectories

@@ -139,12 +139,17 @@ def test_user_chunk_bit_identical():
     assert _same(full, shard_chunked)
 
 
-def test_user_chunk_must_divide():
-    with pytest.raises(ValueError, match="must divide"):
-        run_sweep(["paper-default"], n_seeds=1, n_rounds=1, user_chunk=7)
-    with pytest.raises(ValueError, match="must divide"):
-        run_shard_sweep(["paper-default"], n_seeds=1, n_rounds=1,
-                        user_chunk=7)
+def test_user_chunk_validation_and_padding():
+    """A non-divisor chunk is legal (the final partial block is padded)
+    and bit-identical to the unchunked sweep; only chunk < 1 rejects."""
+    kw = dict(n_seeds=1, n_rounds=1)
+    dense = run_sweep(["paper-default"], **kw)
+    assert run_sweep(["paper-default"], user_chunk=7, **kw) == dense
+    assert run_shard_sweep(["paper-default"], user_chunk=7, **kw) == dense
+    with pytest.raises(ValueError, match=">= 1"):
+        run_sweep(["paper-default"], user_chunk=0, **kw)
+    with pytest.raises(ValueError, match=">= 1"):
+        run_shard_sweep(["paper-default"], user_chunk=0, **kw)
 
 
 # -------------------------------------------------------- learning parity ---
