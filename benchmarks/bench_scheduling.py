@@ -8,10 +8,28 @@ Each row is emitted twice: the harness CSV contract and a ``#json `` line
 (CI extracts these as ``BENCH_scheduling.json``; a committed baseline
 snapshot lives in ``benchmarks/baselines/``).
 
+The bake-off head-to-head (``kind="regret"``) runs every batched policy —
+the Eq. (8-11) greedy, the classic baselines and the stateful online
+schedulers (UCB, proportional-fair, ...) — through the SAME control-plane
+world (one key: same mobility, fading and compute draws; participation
+state evolves per policy) and reports the cumulative Eq. (3) round-latency
+gap against the ``dagsa_jit`` oracle:
+
+    regret(T) = sum_t [ t_round(policy, t) - t_round(dagsa_jit, t) ]
+
+A policy that LEARNS the channel/compute statistics should drive its
+per-round gap toward the oracle's; ``regret_vs_oracle`` is the gated
+scalar (``benchmarks/compare.py``).
+
 JSON record schemas:
 
     {"bench": "scheduling", "kind": "sched_call", "setting": str,
      "scheduler": str, "us_per_call": float, "schedules_per_sec": float}
+
+    {"bench": "scheduling", "kind": "regret", "setting": str,
+     "scheduler": str, "n_rounds": int, "cum_latency_s": float,
+     "oracle_cum_latency_s": float, "regret_vs_oracle": float,
+     "regret_per_round_s": float}
 
     {"bench": "scheduling", "kind": "fig2", "setting": str,
      "dataset": str, "scheduler": str, "n_rounds": int,
@@ -21,6 +39,7 @@ JSON record schemas:
 from __future__ import annotations
 
 import json
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -28,10 +47,78 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.core import WirelessConfig, channel, mobility, schedule
+from repro.core import scheduler as sched_mod
+from repro.core.types import MobilityState
 from repro.fl import FLConfig, FLSimulation
 from repro.fl.rounds import accuracy_at_budget
 
 SCHEDULERS = ["dagsa", "rs", "ub", "fedcs_low", "fedcs_high", "sa"]
+
+# the head-to-head field: every policy with a traced path (the host-numpy
+# "dagsa" can't ride the regret scan), oracle first
+REGRET_SCHEDULERS = ["dagsa_jit", "dagsa-r", "rs", "ub", "fedcs_low",
+                     "fedcs_high", "sa", "ucb", "biased-adaptive", "rr",
+                     "pf"]
+
+
+@partial(jax.jit, static_argnames=("name", "n_rounds", "cfg"))
+def _policy_latency_scan(name: str, n_rounds: int, cfg: WirelessConfig,
+                         key: jax.Array) -> jnp.ndarray:
+    """[n_rounds] Eq. (3) round latencies of one policy, control plane only.
+
+    One fused ``lax.scan`` over rounds (mobility -> channel -> schedule) —
+    no data plane, so the bake-off isolates pure scheduling quality.  All
+    policies called with the same ``key`` see the SAME world draws;
+    stateful policies thread their SchedulerState through the carry.
+    """
+    k_pos, k_run = jax.random.split(key)
+    state0 = mobility.init_positions_grid_bs(k_pos, cfg)
+    aux0 = mobility.init_aux(jax.random.fold_in(k_pos, 1), cfg.n_users, cfg)
+    counts0 = jnp.zeros((cfg.n_users,))
+    sstate0 = sched_mod.scheduler_state_init(name, cfg.n_users)
+
+    def step(carry, r):
+        pos, aux, counts, sstate, k = carry
+        k, k_mob, k_prob, k_sched = jax.random.split(k, 4)
+        pos, aux = mobility.step_named("rd", k_mob, pos, aux, cfg)
+        mstate = MobilityState(user_pos=pos, bs_pos=state0.bs_pos)
+        prob = channel.make_problem(k_prob, mstate, cfg, counts, r)
+        if name in sched_mod.STATEFUL_SCHEDULERS:
+            res, sstate = sched_mod.schedule_stateful(name, prob, cfg,
+                                                      k_sched, sstate)
+        else:
+            res = sched_mod.schedule(name, prob, cfg, k_sched)
+        counts = counts + res.selected.astype(counts.dtype)
+        return (pos, aux, counts, sstate, k), res.t_round
+
+    carry0 = (state0.user_pos, aux0, counts0, sstate0, k_run)
+    _, t_rounds = jax.lax.scan(step, carry0, jnp.arange(n_rounds))
+    return t_rounds
+
+
+def _bench_regret(quick: bool) -> None:
+    """Cumulative round-latency regret vs the dagsa_jit oracle, per policy."""
+    setting = "quick" if quick else "full"
+    cfg = WirelessConfig()
+    n_rounds = 20 if quick else 100
+    key = jax.random.PRNGKey(7)
+    cums = {}
+    for name in REGRET_SCHEDULERS:
+        t = np.asarray(_policy_latency_scan(name, n_rounds, cfg, key),
+                       np.float64)
+        cums[name] = float(t.sum())
+    oracle = cums["dagsa_jit"]
+    for name in REGRET_SCHEDULERS:
+        regret = cums[name] - oracle
+        emit(f"regret_{name}", regret * 1e6,
+             f"regret_per_round={regret / n_rounds:.4f}s")
+        rec = {"bench": "scheduling", "kind": "regret", "setting": setting,
+               "scheduler": name, "n_rounds": n_rounds,
+               "cum_latency_s": cums[name],
+               "oracle_cum_latency_s": oracle,
+               "regret_vs_oracle": regret,
+               "regret_per_round_s": regret / n_rounds}
+        print(f"#json {json.dumps(rec)}")
 
 
 def _bench_scheduler_calls(quick: bool) -> None:
@@ -63,6 +150,7 @@ def _bench_scheduler_calls(quick: bool) -> None:
 
 def run(quick: bool = True) -> None:
     _bench_scheduler_calls(quick)
+    _bench_regret(quick)
     datasets = ["mnist"] if quick else ["mnist", "fashionmnist", "cifar10"]
     n_rounds = 14 if quick else 30
     for ds in datasets:

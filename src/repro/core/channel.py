@@ -84,17 +84,79 @@ def bandwidth_time_coeff(snr: jnp.ndarray, cfg: WirelessConfig) -> jnp.ndarray:
 # selection/equalisation only need ~0.3 dB fidelity, so bf16 (8-bit mantissa,
 # exact under monotone casts -> identical argmax ties) halves bytes/user and
 # int8 dB codes with a per-BS scale quarter them.
-CHANNEL_DTYPES = ("f32", "bf16")
+CHANNEL_DTYPES = ("f32", "bf16", "int8")
 
 
 def compress_channel(x: jnp.ndarray, channel_dtype: str) -> jnp.ndarray:
-    """Cast a channel-plane array to its storage dtype ("f32" is a no-op)."""
+    """Cast a channel-plane array to its storage dtype ("f32" is a no-op).
+
+    ``"int8"`` is not a plain cast (it needs the per-BS scale row) — use
+    :func:`encode_channel` for the full storage tuple.
+    """
     if channel_dtype == "f32":
         return x
     if channel_dtype == "bf16":
         return x.astype(jnp.bfloat16)
+    if channel_dtype == "int8":
+        raise ValueError("channel_dtype 'int8' carries a per-BS scale row; "
+                         "encode with channel.encode_channel, not "
+                         "compress_channel")
     raise ValueError(f"unknown channel_dtype {channel_dtype!r}; "
                      f"choose from {CHANNEL_DTYPES}")
+
+
+def encode_channel(snr: jnp.ndarray, channel_dtype: str):
+    """Encode one round's linear SNR into its channel-plane storage.
+
+    Returns ``(snr_store, snr_scale, snr_linear)``:
+
+      * ``snr_store`` — what selection consumes: the (possibly compressed)
+        linear SNR for f32/bf16, or the int8 dB codes.  Feed it to
+        ``dagsa_jit._schedule`` together with ``snr_scale`` — the selection
+        kernels dequantise in-block.
+      * ``snr_scale`` — the [M] per-BS dequantisation scale (int8 only,
+        else None).
+      * ``snr_linear`` — a linear-domain SNR for everything that needs
+        values rather than ranks (delivery discounts, baseline schedulers,
+        rate estimates).  For f32/bf16 this IS ``snr_store`` (bit-identical
+        to the pre-int8 path); for int8 it is the dequantised f32 plane.
+    """
+    if channel_dtype == "int8":
+        q, scale = quantize_snr_int8(snr)
+        return q, scale, dequantize_snr_int8(q, scale)
+    s = compress_channel(snr, channel_dtype)
+    return s, None, s
+
+
+def dist_and_shadow(pos: jnp.ndarray, bs_pos: jnp.ndarray, shadow_sigma,
+                    k_shadow: jax.Array, cfg: WirelessConfig,
+                    user_chunk: int | None):
+    """[N, M] distances + shadowing field, optionally in user blocks.
+
+    The shadowing field evaluates 64 random Fourier features per (user, BS)
+    pair — the O(N x M x F) intermediate that dominates memory at fleet
+    scale.  ``user_chunk`` bounds it: a ``lax.map`` over ceil(N/user_chunk)
+    user blocks keeps the peak at [user_chunk, M, F] while producing
+    bit-identical values (both terms are per-user independent, and the
+    field's frequencies/phases depend only on ``k_shadow``).  A final
+    partial block is padded with dummy rows and sliced off — per-row
+    determinism means real rows are unaffected, so arbitrary fleet sizes
+    work with any chunk.
+    """
+    def block(pos_blk):
+        d = MobilityState(user_pos=pos_blk, bs_pos=bs_pos).distances()
+        sh = shadow_sigma * sample_shadowing(k_shadow, pos_blk, bs_pos, cfg,
+                                             sigma_db=1.0)
+        return d, sh
+
+    n = pos.shape[0]
+    if not user_chunk or user_chunk >= n:
+        return block(pos)
+    pad = (-n) % user_chunk
+    if pad:
+        pos = jnp.pad(pos, ((0, pad), (0, 0)))
+    d, sh = jax.lax.map(block, pos.reshape(-1, user_chunk, 2))
+    return d.reshape(n + pad, -1)[:n], sh.reshape(n + pad, -1)[:n]
 
 
 def quantize_snr_int8(snr: jnp.ndarray):

@@ -250,7 +250,9 @@ def _schedule_batch(snr, coeff, tcomp, bs_bw, necessary, min_participants,
 def dagsa_schedule_batch(problems, keys: jax.Array, method: str = "newton",
                          iters: int | None = None, backend: str = "jax",
                          interpret: bool | None = None,
-                         selection_block: int | None = None) -> ScheduleResult:
+                         selection_block: int | None = None,
+                         snr_scale: jnp.ndarray | None = None
+                         ) -> ScheduleResult:
     """DAGSA-X over a whole fleet of cells in ONE compiled call.
 
     Args:
@@ -266,6 +268,9 @@ def dagsa_schedule_batch(problems, keys: jax.Array, method: str = "newton",
       selection_block: static user-block size for streamed selection; with
         backend="jax" this switches Algorithm 1 steps 1/3 to the chunked
         jnp path (bit-identical decisions, [block, M] temporaries).
+      snr_scale: [F, M] per-BS dequantisation scales when ``problems.snr``
+        holds int8 dB codes (channel.quantize_snr_int8); None for linear
+        SNR.  Selection compares dequantised values in-block.
 
     Returns:
       ScheduleResult with a leading fleet axis on every field.  Decisions
@@ -278,6 +283,6 @@ def dagsa_schedule_batch(problems, keys: jax.Array, method: str = "newton",
         problems.snr, problems.coeff, problems.tcomp, problems.bs_bw,
         problems.necessary, int(problems.min_participants), keys,
         method=method, iters=iters, backend=backend, interpret=interpret,
-        selection_block=selection_block)
+        selection_block=selection_block, snr_scale=snr_scale)
     return ScheduleResult(assign=assign, selected=selected, bw=bw,
                           bs_time=t_k, t_round=t_round)

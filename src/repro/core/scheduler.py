@@ -2,22 +2,37 @@
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import baselines, dagsa
-from repro.core.types import ScheduleResult, SchedulingProblem, WirelessConfig
+from repro.core.types import (ScheduleResult, SchedulerState,
+                              SchedulingProblem, WirelessConfig)
+
+# Stateful online policies: they carry per-user running estimates across
+# rounds (a SchedulerState slot in the round carry) instead of assuming
+# perfect CSI like DAGSA.  All are pure carry transforms — no host
+# callbacks — so they run inside the fused lax.scan.
+STATEFUL_SCHEDULERS = ("ucb", "biased-adaptive", "rr", "pf")
 
 SCHEDULERS = ("dagsa", "dagsa_jit", "dagsa-r", "dagsa-r-host", "rs", "ub",
-              "fedcs_low", "fedcs_high", "sa")
+              "fedcs_low", "fedcs_high", "sa") + STATEFUL_SCHEDULERS
 
 # Schedulers with a fleet-batched entry point (see schedule_batch).
-BATCH_SCHEDULERS = ("dagsa_jit", "dagsa-r")
+BATCH_SCHEDULERS = ("dagsa_jit", "dagsa-r", "rs", "ub", "fedcs_low",
+                    "fedcs_high", "sa") + STATEFUL_SCHEDULERS
 
 # FedCS time thresholds from paper §IV.
 FEDCS_LOW_S = 0.6
 FEDCS_HIGH_S = 1.0
+
+# Stateful-policy constants (EQUATIONS.md "UCB index").
+UCB_C = 1.0          # exploration weight of the UCB bonus
+PF_EWMA = 0.1        # proportional-fair rate-average step
+BIASED_T0 = 10.0     # biased-adaptive: rounds until the deficit term
+                     # carries half the score weight
 
 
 @dataclasses.dataclass
@@ -57,9 +72,126 @@ def delivery_discounted(problem: SchedulingProblem) -> SchedulingProblem:
     return dataclasses.replace(problem, snr=scaled)
 
 
+# ------------------------------------------------ stateful online policies --
+def scheduler_state_init(name: str, n_users: int) -> SchedulerState | None:
+    """Fresh per-user estimate state, or None for stateless schedulers.
+
+    Every stateful policy shares the one :class:`SchedulerState` layout so
+    the round carry's pytree STRUCTURE is identical across policies within
+    a compile bucket (the policy itself is a static argument).
+    """
+    if name not in STATEFUL_SCHEDULERS:
+        return None
+    z = jnp.zeros((n_users,), jnp.float32)
+    return SchedulerState(n_obs=z, rate_sum=z, tcomp_sum=z, sel_count=z,
+                          ewma=z, ptr=jnp.zeros((), jnp.int32),
+                          t=jnp.zeros((), jnp.float32))
+
+
+def _best_se(problem: SchedulingProblem) -> jnp.ndarray:
+    """[N] observed best-BS spectral efficiency, log2(1 + max_k snr)."""
+    return jnp.log2(1.0 + jnp.max(problem.snr.astype(jnp.float32), axis=1))
+
+
+def scheduler_state_update(state: SchedulerState,
+                           problem: SchedulingProblem,
+                           selected: jnp.ndarray) -> SchedulerState:
+    """Post-round observation update shared by every stateful policy.
+
+    Bandit semantics: scheduling user i REVEALS its rate/compute draw this
+    round (the BS measured the uplink), so sums/counts advance only where
+    ``selected``.  The round clock ``t`` and the round-robin window always
+    advance.
+    """
+    sel = selected.astype(jnp.float32)
+    se = _best_se(problem)
+    n = state.n_obs.shape[0]
+    return SchedulerState(
+        n_obs=state.n_obs + sel,
+        rate_sum=state.rate_sum + sel * se,
+        tcomp_sum=state.tcomp_sum + sel * problem.tcomp.astype(jnp.float32),
+        sel_count=state.sel_count + sel,
+        ewma=(1.0 - PF_EWMA) * state.ewma + PF_EWMA * se * sel,
+        ptr=(state.ptr + jnp.int32(problem.min_participants)) % n,
+        t=state.t + 1.0)
+
+
+def _select_topk(score: jnp.ndarray, necessary: jnp.ndarray,
+                 k: int) -> jnp.ndarray:
+    """Top-k selection by score with Eq. (8g) necessary users forced in.
+
+    Necessary users get +inf score so they occupy the first slots; the
+    union with ``necessary`` also covers k < #necessary.  Stable argsort
+    breaks score ties by user index (deterministic across backends).
+    """
+    n = score.shape[0]
+    boosted = jnp.where(necessary, jnp.inf, score)
+    order = jnp.argsort(-boosted, stable=True)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    return necessary | (rank < k)
+
+
+def schedule_stateful(name: str, problem: SchedulingProblem,
+                      cfg: WirelessConfig, key: jax.Array,
+                      state: SchedulerState
+                      ) -> tuple[ScheduleResult, SchedulerState]:
+    """One round of a stateful policy: score -> top-k -> optimal bandwidth.
+
+    All policies select Eq. (8h)'s ``min_participants`` users (plus any
+    Eq. (8g) necessary users), assign each to its best-SNR BS, and solve
+    the Eq. (11) bandwidth sub-problem exactly — they differ ONLY in the
+    selection score, so latency gaps vs the DAGSA oracle isolate the
+    selection policy (the regret bench's premise).
+    """
+    del key  # deterministic given state; keeps the registry signature
+    n = problem.snr.shape[0]
+    k = int(problem.min_participants)
+    if name == "rr":
+        # sliding window of k users, advancing by k each round
+        idx = (jnp.arange(n, dtype=jnp.int32) - state.ptr) % n
+        selected = (idx < k) | problem.necessary
+    else:
+        if name == "ucb":
+            # optimism in the face of latency: 1 / (estimated per-user
+            # latency) + exploration bonus; unobserved users first
+            n_obs = jnp.maximum(state.n_obs, 1.0)
+            mu_se = state.rate_sum / n_obs
+            mu_tc = state.tcomp_sum / n_obs
+            bbar = jnp.mean(problem.bs_bw.astype(jnp.float32))
+            t_est = mu_tc + cfg.model_mbit / jnp.maximum(bbar * mu_se, 1e-9)
+            bonus = UCB_C * jnp.sqrt(2.0 * jnp.log(state.t + 2.0) / n_obs)
+            score = jnp.where(state.n_obs > 0.0, 1.0 / t_est + bonus,
+                              jnp.inf)
+        elif name == "biased-adaptive":
+            # over-sample strong channels early; as t grows, weight shifts
+            # to each user's selection-count deficit vs the fair share k/n
+            se = _best_se(problem)
+            strength = se / (jnp.max(se) + 1e-9)
+            deficit = (k / n) * state.t - state.sel_count
+            dnorm = deficit / (jnp.max(jnp.abs(deficit)) + 1e-9)
+            wt = state.t / (state.t + BIASED_T0)
+            score = (1.0 - wt) * strength + wt * dnorm
+        elif name == "pf":
+            # proportional fair: instantaneous rate over its EWMA average
+            score = _best_se(problem) / jnp.maximum(state.ewma, 1e-6)
+        else:
+            raise ValueError(f"unknown stateful scheduler {name!r}; "
+                             f"choose from {STATEFUL_SCHEDULERS}")
+        selected = _select_topk(score, problem.necessary, k)
+    assign = baselines._best_bs_assign(problem.snr, selected)
+    result = baselines._optimal_result(problem, assign)
+    return result, scheduler_state_update(state, problem, result.selected)
+
+
 def schedule(name: str, problem: SchedulingProblem, cfg: WirelessConfig,
              key: jax.Array, seed: int = 0) -> ScheduleResult:
     """Dispatch one round of scheduling by algorithm name."""
+    if name in STATEFUL_SCHEDULERS:
+        # one-shot convenience: fresh state (round 0 behaviour).  Engines
+        # that carry state across rounds call schedule_stateful directly.
+        state = scheduler_state_init(name, problem.snr.shape[0])
+        result, _ = schedule_stateful(name, problem, cfg, key, state)
+        return result
     if name == "dagsa":
         return dagsa.dagsa_schedule(problem, seed=seed)
     if name == "dagsa_jit":
@@ -101,5 +233,38 @@ def schedule_batch(name: str, problems, keys: jax.Array,
             problems = dagsa_jit.stack_problems(problems)
         return dagsa_jit.dagsa_schedule_batch(delivery_discounted(problems),
                                               keys, **kwargs)
+    if name in BATCH_SCHEDULERS:
+        from repro.core import dagsa_jit
+        if not isinstance(problems, SchedulingProblem):
+            problems = dagsa_jit.stack_problems(problems)
+        cfg = kwargs.pop("cfg", None) or WirelessConfig()
+        if kwargs:
+            raise TypeError(f"schedule_batch({name!r}) got unexpected "
+                            f"kwargs {sorted(kwargs)}")
+        assign, selected, bw, t_k, t_round = _schedule_batch_generic(
+            name, problems.snr, problems.tcomp, problems.bs_bw,
+            problems.coeff, problems.necessary, keys,
+            int(problems.min_participants), cfg)
+        return ScheduleResult(assign=assign, selected=selected, bw=bw,
+                              bs_time=t_k, t_round=t_round)
     raise ValueError(f"unknown batch scheduler {name!r}; "
                      f"choose from {BATCH_SCHEDULERS}")
+
+
+@partial(jax.jit, static_argnames=("name", "minp", "cfg"))
+def _schedule_batch_generic(name, snr, tcomp, bs_bw, coeff, necessary, keys,
+                            minp, cfg):
+    """Fleet-vmapped path for the jnp-pure schedulers (stateful policies
+    start from fresh state — the batched entry is the bake-off/test seam,
+    not the across-round carry, which lives in the round engines)."""
+    def one(s, tc, bw, co, ne, k):
+        prob = SchedulingProblem(snr=s, tcomp=tc, bs_bw=bw, coeff=co,
+                                 necessary=ne, min_participants=minp)
+        if name in STATEFUL_SCHEDULERS:
+            res, _ = schedule_stateful(
+                name, prob, cfg, k, scheduler_state_init(name, s.shape[0]))
+        else:
+            res = schedule(name, prob, cfg, k)
+        return res.assign, res.selected, res.bw, res.bs_time, res.t_round
+
+    return jax.vmap(one)(snr, tcomp, bs_bw, coeff, necessary, keys)

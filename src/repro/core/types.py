@@ -8,7 +8,9 @@ All quantities follow the paper's units:
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
+import jax
 import jax.numpy as jnp
 
 
@@ -97,3 +99,87 @@ class MobilityState:
         d = jnp.linalg.norm(self.user_pos[:, None, :] - self.bs_pos[None, :, :],
                             axis=-1)
         return jnp.maximum(d, 1.0)
+
+
+# --------------------------------------------------- typed round-step state --
+# The round engines' lax.scan carry, split into four orthogonal slots
+# (docs/ARCHITECTURE.md).  All four are registered pytree dataclasses, so
+# they flow through jit/vmap/shard_map/lax.scan unchanged; optional slots
+# hold ``None`` (an empty subtree) when the feature is off, which keeps the
+# carry STRUCTURE static per compile bucket.  Splitting the carry changes
+# only the pytree structure, never the leaves — trajectories stay
+# bit-identical to the tuple-carry engines these types replaced.
+
+
+def _pytree_dataclass(cls):
+    """frozen dataclass + pytree registration (every field is data)."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    jax.tree_util.register_dataclass(
+        cls, data_fields=[f.name for f in dataclasses.fields(cls)],
+        meta_fields=[])
+    return cls
+
+
+@_pytree_dataclass
+class WorldState:
+    """Dense O(N) physical world: where everyone is and how they move."""
+
+    pos: jnp.ndarray        # [N, 2] user positions (metres)
+    mob_aux: Any            # mobility model's kinematic aux pytree
+
+
+@_pytree_dataclass
+class ClientState:
+    """Per-client bookkeeping the server carries across rounds."""
+
+    counts: jnp.ndarray             # [N] Eq. (8g) participation counts
+    prev_bs: jnp.ndarray | None     # [N] i32 last round's serving BS
+                                    # (hierarchical handover / fault layer);
+                                    # None when neither feature is on
+
+
+@_pytree_dataclass
+class ServerState:
+    """Global + edge models and the async in-flight event queue."""
+
+    params: Any                         # global model pytree
+    edge_params: Any = None             # [M, ...] per-BS edge models (hier)
+    edge_weight: jnp.ndarray | None = None  # [M] data mass since last sync
+    queue: tuple | None = None          # buffered-async event queue
+
+
+@_pytree_dataclass
+class SchedulerState:
+    """Per-user running estimates for stateful online schedulers.
+
+    One uniform state serves every policy in
+    ``repro.core.scheduler.STATEFUL_SCHEDULERS`` (a policy reads only the
+    fields it needs; the shared update keeps all of them fresh):
+
+      n_obs:     [N] observation counts (rounds the user was scheduled)
+      rate_sum:  [N] summed observed best-BS spectral efficiency
+      tcomp_sum: [N] summed observed compute latency
+      sel_count: [N] selection counts (biased-adaptive deficit base)
+      ewma:      [N] exponentially-weighted rate average (PF)
+      ptr:       [] i32 round-robin window start
+      t:         [] f32 rounds elapsed (UCB exploration clock)
+    """
+
+    n_obs: jnp.ndarray
+    rate_sum: jnp.ndarray
+    tcomp_sum: jnp.ndarray
+    sel_count: jnp.ndarray
+    ewma: jnp.ndarray
+    ptr: jnp.ndarray
+    t: jnp.ndarray
+
+
+@_pytree_dataclass
+class RoundState:
+    """The full round-step carry: one slot per concern + the PRNG key."""
+
+    world: WorldState
+    clients: ClientState
+    server: ServerState
+    sched: SchedulerState | None    # None for stateless schedulers
+    key: jax.Array

@@ -59,6 +59,13 @@ def local_sgd(loss_fn: Callable, params: PyTree, x: jnp.ndarray,
     return params
 
 
+def resolve_cap(n: int, select_cap: int | None) -> int:
+    """Static gather width for ``compute="selected"``: ``select_cap``
+    clamped to the fleet size, or the full fleet when unset.  One helper so
+    every engine's shape bucket keys on the same cap value."""
+    return n if select_cap is None else min(int(select_cap), n)
+
+
 def topk_selected_indices(selected: jnp.ndarray, cap: int) -> jnp.ndarray:
     """[cap] client indices with every selected client first (stable order).
 

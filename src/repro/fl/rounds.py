@@ -71,8 +71,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (MobilityState, ParticipationState, WirelessConfig,
-                        channel, latency, mobility, scheduler as sched)
+                        channel, dagsa_jit, latency, mobility,
+                        scheduler as sched)
 from repro.core.scenario import AGGREGATIONS, get_scenario
+from repro.core.types import (ClientState, RoundState, ScheduleResult,
+                              SchedulingProblem, ServerState, WorldState)
 from repro.data import make_dataset
 from repro.fl import client as fl_client
 from repro.fl import faults as fl_faults
@@ -84,8 +87,10 @@ PyTree = Any
 
 # Schedulers whose round step traces (everything but the host-numpy
 # greedies; "dagsa-r-host" is the host-side parity twin of "dagsa-r").
+# The stateful online policies trace too — their per-user estimates ride
+# the RoundState.sched carry slot as pure transforms.
 FUSED_SCHEDULERS = ("dagsa_jit", "dagsa-r", "rs", "ub", "fedcs_low",
-                    "fedcs_high", "sa")
+                    "fedcs_high", "sa") + sched.STATEFUL_SCHEDULERS
 
 COMPUTE_MODES = ("full", "selected")
 FEDAVG_BACKENDS = ("jax", "pallas")
@@ -593,6 +598,377 @@ def hierarchical_round(loss_fn, global_params: PyTree, edge_params: PyTree,
     return global_params, edge_params, edge_weight, serving, handover_rate
 
 
+# ------------------------------------------------- canonical round step --
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """The STATIC half of a round step: every knob that shapes the traced
+    graph (and therefore keys a compile bucket).  Hashable by construction,
+    so it can ride ``jax.jit`` static arguments directly.
+
+    ``world`` picks the step's PRNG/world flavor:
+
+      * ``"engine"`` — :class:`FLSimulation`'s trajectory: per-round
+        ``split(key, 5|6)``, mobility by static model name, channel via
+        :func:`repro.core.channel.make_problem`, scheduler through the
+        registry.  Bit-identical to the pre-refactor engine.
+      * ``"sweep"``  — the batched learning sweep's trajectory: per-round
+        ``split(key, 6|7)`` (separate SNR/tcomp subkeys), mobility by
+        traced ``model_id`` switch, scenario knobs as DATA, and the DAGSA
+        greedy called directly so int8/bf16 channel codes stream through
+        selection.  Bit-identical to the pre-refactor
+        ``sweep._one_learning_cell``.
+
+    The two flavors draw different random worlds by construction (they
+    always did); everything downstream of the drawn world — fault realize,
+    latency, data plane, bookkeeping — is ONE shared code path.
+    """
+
+    scheduler: str
+    epochs: int
+    batch_size: int
+    lr: float
+    eval_every: int
+    compute: str = "full"
+    select_cap: int | None = None
+    fedavg_backend: str = "jax"
+    aggregation: str = "single"
+    tau_global: int = 1
+    async_on: bool = False
+    tick_s: float = 1.0
+    staleness_alpha: float = 0.0
+    buffer_size: int = 1
+    faults_on: bool = False
+    clip_on: bool = False
+    backend: str = "jax"
+    user_chunk: int | None = None
+    channel_dtype: str = "f32"
+    world: str = "engine"
+
+
+def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
+                    x_clients, y_clients, data_sizes, x_test, y_test,
+                    bs_pos, bs_bw, k_shadow, min_participants: int,
+                    params0, pos0, aux0, counts0, key0, clip_norm=None,
+                    prev_bs0=None, edge_params0=None, edge_weight0=None,
+                    queue0=None):
+    """Build ONE canonical fused round step: ``(init_state, step_fn)``.
+
+    ``step_fn(state, r) -> (state', out)`` is a pure
+    :class:`~repro.core.types.RoundState` transform — ``lax.scan`` it over
+    round indices (the fused engines), call it per round under jit (step
+    mode), or vmap the whole scan over seeds x scenarios (the learning
+    sweep).  Every consumer — :class:`FLSimulation`,
+    ``launch.sweep._one_learning_cell``, ``launch.shard_sweep``,
+    ``launch.fl_sim`` — routes through here; there is no second round-step
+    body.
+
+    Args:
+      scenario: ``world="engine"``: a dict of STATIC scenario knobs
+        (``mob_model``, ``pause_s``, ``gm_memory``, ``shadow_sigma``).
+        ``world="sweep"``: the traced per-scenario parameter struct from
+        ``launch.sweep._scenario_params`` (one row — knobs are data).
+      faults: fault-severity params (``repro.fl.faults.fault_params``
+        layout), host floats or traced arrays; consumed only when
+        ``plan.faults_on``.
+      clip_norm: the engine world's static norm-clip value (None = off);
+        the sweep world clips by the traced ``faults["clip_norm"]`` when
+        ``plan.clip_on``.
+      min_participants: Eq. (8h) floor as a static int (the sweep world
+        builds its SchedulingProblem from it; the engine world's
+        ``make_problem`` recomputes the identical value).
+      *0: initial carry values.  Optional slots default to the canonical
+        initialisation (prev_bs -1-sentinel, edge models broadcast from the
+        global, empty async queue, fresh SchedulerState) when the feature
+        is on and the caller passed None.
+
+    Returns:
+      ``(init_state, step_fn)`` with ``init_state`` a fully-populated
+      :class:`RoundState` whose optional slots are ``None`` exactly when
+      the corresponding feature is off (static carry structure per compile
+      bucket).
+    """
+    hier = plan.aggregation == "hierarchical"
+    need_prev = hier or plan.faults_on
+    fp = faults
+    n = w.n_users
+
+    if need_prev and prev_bs0 is None:
+        prev_bs0 = jnp.full((n,), -1, jnp.int32)
+    if hier and edge_params0 is None:
+        edge_params0 = jax.tree.map(
+            lambda q: jnp.repeat(q[None], w.n_bs, axis=0), params0)
+    if hier and edge_weight0 is None:
+        edge_weight0 = jnp.zeros((w.n_bs,), jnp.float32)
+    if plan.async_on and queue0 is None:
+        queue0 = async_queue_init(params0, n, plan.buffer_size)
+
+    init_state = RoundState(
+        world=WorldState(pos=pos0, mob_aux=aux0),
+        clients=ClientState(counts=counts0,
+                            prev_bs=prev_bs0 if need_prev else None),
+        server=ServerState(params=params0,
+                           edge_params=edge_params0 if hier else None,
+                           edge_weight=edge_weight0 if hier else None,
+                           queue=queue0 if plan.async_on else None),
+        sched=sched.scheduler_state_init(plan.scheduler, n),
+        key=key0)
+
+    def step_fn(state: RoundState, r):
+        params = state.server.params
+        pos, aux = state.world.pos, state.world.mob_aux
+        counts, key = state.clients.counts, state.key
+        prev_bs = state.clients.prev_bs
+
+        # -- 1+2. world advance + channel observation (per-flavor PRNG) ----
+        if plan.world == "engine":
+            if plan.faults_on:
+                # one extra subkey for the fault realization — gated
+                # statically so fault-free runs keep the exact trajectory
+                key, k_mob, k_prob, k_sched, k_fleet, k_fault = \
+                    jax.random.split(key, 6)
+            else:
+                key, k_mob, k_prob, k_sched, k_fleet = \
+                    jax.random.split(key, 5)
+            pos, aux = mobility.step_named(
+                scenario["mob_model"], k_mob, pos, aux, w,
+                pause_s=scenario["pause_s"], gm_memory=scenario["gm_memory"])
+            mstate = MobilityState(user_pos=pos, bs_pos=bs_pos)
+            shadow_db = None
+            if scenario["shadow_sigma"] > 0.0:
+                shadow_db = scenario["shadow_sigma"] * \
+                    channel.sample_shadowing(k_shadow, pos, bs_pos, w,
+                                             sigma_db=1.0)
+            prob = channel.make_problem(k_prob, mstate, w, counts, r,
+                                        bs_bw=bs_bw, shadow_db=shadow_db)
+            snr_store, snr_scale = prob.snr, None
+            if need_prev:
+                # geometry the hierarchy / fault layer observes (CSE'd
+                # against make_problem's internal distance computation)
+                dist = mstate.distances()
+        elif plan.world == "sweep":
+            p = scenario
+            if plan.faults_on:
+                key, k_mob, k_snr, k_tc, k_sched, k_fleet, k_fault = \
+                    jax.random.split(key, 7)
+            else:
+                key, k_mob, k_snr, k_tc, k_sched, k_fleet = \
+                    jax.random.split(key, 6)
+            pos, aux = mobility.step_switch(
+                p["model_id"], k_mob, pos, aux, w.area_m,
+                w.round_duration_s, p["speed"], p["pause_s"], p["gm_memory"])
+            # same k_shadow every round -> the field is consistent in time
+            dist, shadow_db = channel.dist_and_shadow(
+                pos, bs_pos, p["shadow_sigma"], k_shadow, w, plan.user_chunk)
+            snr_store, snr_scale, snr_lin = channel.encode_channel(
+                channel.sample_snr(k_snr, dist, w, shadow_db=shadow_db),
+                plan.channel_dtype)
+            if plan.channel_dtype == "int8":
+                # Eq. (11) needs real coefficients — derive from the
+                # dequantised plane (f32; the codes carry only ranks+dB)
+                coeff = channel.bandwidth_time_coeff(snr_lin, w)
+            else:
+                coeff = channel.compress_channel(
+                    channel.bandwidth_time_coeff(snr_store, w),
+                    plan.channel_dtype)
+            u = jax.random.uniform(k_tc, (n,))
+            tcomp = p["tcomp_min"] + u * (p["tcomp_max"] - p["tcomp_min"])
+            # Eq. (8g), post-round requirement (matches make_problem)
+            necessary = counts < w.rho1 * (r + 1.0)
+            prob = SchedulingProblem(snr=snr_lin, tcomp=tcomp, bs_bw=bs_bw,
+                                     coeff=coeff, necessary=necessary,
+                                     min_participants=min_participants)
+        else:
+            raise ValueError(f"unknown world {plan.world!r}; "
+                             f"choose 'engine' or 'sweep'")
+
+        # -- 2b. hierarchy / fault geometry --------------------------------
+        if need_prev:
+            serving = camped_bs(dist)
+        if plan.faults_on:
+            edge_frac = fl_faults.edge_proximity(dist, serving, w)
+            handover = (serving != prev_bs) & (prev_bs >= 0)
+            # pre-scheduling delivery estimate — what dagsa-r discounts by
+            p_est = fl_faults.delivery_probability(fp, edge_frac, handover)
+            if plan.world == "engine":
+                prob = dataclasses.replace(prob, p_deliver=p_est)
+
+        # -- 3. schedule (static dispatch by name) -------------------------
+        sched_state = state.sched
+        if plan.scheduler in sched.STATEFUL_SCHEDULERS:
+            res, sched_state = sched.schedule_stateful(
+                plan.scheduler, prob, w, k_sched, sched_state)
+        elif plan.world == "engine":
+            res = sched.schedule(plan.scheduler, prob, w, k_sched)
+        elif plan.scheduler in ("dagsa_jit", "dagsa-r"):
+            # direct greedy call: the sweep streams the (possibly int8/bf16)
+            # channel codes + scale through the selection kernels
+            score, scale = snr_store, snr_scale
+            if plan.faults_on and plan.scheduler == "dagsa-r":
+                # the delivery-discounted candidate score (the per-user
+                # scale leaves each user's best-BS argmax unchanged)
+                score = prob.snr * jnp.clip(p_est, 0.0, 1.0)[:, None]
+                scale = None
+            assign, selected, user_bw, t_k, t_star = dagsa_jit._schedule(
+                score, prob.coeff, prob.tcomp, bs_bw, prob.necessary,
+                min_participants, k_sched, backend=plan.backend,
+                selection_block=plan.user_chunk, snr_scale=scale)
+            res = ScheduleResult(assign=assign, selected=selected,
+                                 bw=user_bw, bs_time=t_k, t_round=t_star)
+        else:
+            res = sched.schedule(plan.scheduler, prob, w, k_sched)
+
+        # -- 3b. realize faults: stragglers stretch tcomp, outages/crashes
+        # kill uplinks, the deadline drops late survivors (truncated Eq. 3)
+        if plan.faults_on:
+            tcomp_eff, alive, corrupt = fl_faults.sample_round_faults(
+                k_fault, fp, edge_frac, handover, prob.tcomp)
+            t_user = latency.per_user_latency(prob, res, tcomp=tcomp_eff)
+            gate = alive & latency.on_time(t_user, fp["deadline_s"])
+            clip = (clip_norm if plan.world == "engine"
+                    else (fp["clip_norm"] if plan.clip_on else None))
+        else:
+            corrupt, clip = None, None
+            if plan.async_on:
+                t_user = latency.per_user_latency(prob, res)
+                gate = jnp.ones_like(res.selected)
+
+        # -- 4. data plane: local SGD + Eq. (2) aggregation ----------------
+        keys = jax.random.split(k_fleet, n)
+        edge = state.server.edge_params
+        edge_w = state.server.edge_weight
+        queue = state.server.queue
+        if plan.async_on:
+            # faults gate at dispatch: a dead/late uplink never enters the
+            # queue (same delivery mask as the sync engine carries over)
+            eligible = res.selected & ~async_busy(queue, n)
+            dispatch = eligible & gate
+            params, queue, delivered, diag = async_round_tick(
+                cnn.loss_fn, params, queue, x_clients, y_clients, keys,
+                dispatch, t_user, data_sizes, r, tick_s=plan.tick_s,
+                staleness_alpha=plan.staleness_alpha, epochs=plan.epochs,
+                batch_size=plan.batch_size, lr=plan.lr,
+                fedavg_backend=plan.fedavg_backend, compute=plan.compute,
+                select_cap=plan.select_cap, corrupt=corrupt,
+                corrupt_mode_id=fp["corrupt_mode_id"],
+                corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
+            t_round = jnp.full((), plan.tick_s, jnp.float32)
+            eval_args, eval_model = params, lambda q: q
+        else:
+            if plan.faults_on:
+                delivered = res.selected & gate
+                t_round = latency.deadline_round_latency(
+                    t_user, res.selected, fp["deadline_s"])
+            else:
+                delivered = res.selected
+                t_round = res.t_round
+            if hier:
+                (params, edge, edge_w, prev_bs, handover_rate) = \
+                    hierarchical_round(
+                        cnn.loss_fn, params, edge, edge_w, prev_bs,
+                        x_clients, y_clients, keys, res.assign,
+                        res.selected, serving, data_sizes, r,
+                        tau_global=plan.tau_global, epochs=plan.epochs,
+                        batch_size=plan.batch_size, lr=plan.lr,
+                        compute=plan.compute, select_cap=plan.select_cap,
+                        fedavg_backend=plan.fedavg_backend,
+                        delivered=delivered if plan.faults_on else None,
+                        corrupt=corrupt,
+                        corrupt_mode_id=fp["corrupt_mode_id"],
+                        corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
+                # eval sees the virtual global (edge mixture); built inside
+                # the cond so non-eval rounds skip the O(M x model) mixture
+                eval_args = (params, edge, edge_w)
+                eval_model = lambda a: fl_server.edge_global_sync(*a)
+            else:
+                params = train_and_aggregate(
+                    cnn.loss_fn, params, x_clients, y_clients, keys,
+                    res.selected, data_sizes, epochs=plan.epochs,
+                    batch_size=plan.batch_size, lr=plan.lr,
+                    compute=plan.compute, select_cap=plan.select_cap,
+                    fedavg_backend=plan.fedavg_backend,
+                    delivered=delivered if plan.faults_on else None,
+                    corrupt=corrupt,
+                    corrupt_mode_id=fp["corrupt_mode_id"],
+                    corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
+                eval_args, eval_model = params, lambda q: q
+
+        # -- 5. bookkeeping + eval.  Participation follows DELIVERY under
+        # faults: a user whose update was lost stays "necessary" (Eq. 8g),
+        # so the fairness loop self-heals failures.
+        counts = counts + delivered.astype(counts.dtype)
+        if plan.eval_every:
+            acc = jax.lax.cond(
+                (r + 1) % plan.eval_every == 0,
+                lambda a: cnn.accuracy(eval_model(a), x_test, y_test),
+                lambda a: jnp.float32(jnp.nan), eval_args)
+        else:
+            acc = jnp.float32(jnp.nan)
+
+        out = {
+            "t_round": t_round,
+            "test_acc": acc,
+            "min_part_rate": jnp.min(counts) / (r + 1.0),
+        }
+        n_sel = jnp.sum(eligible) if plan.async_on else jnp.sum(res.selected)
+        if plan.world == "engine":
+            # engine records keep integer dtypes (host RoundRecords)
+            out["n_selected"] = n_sel.astype(jnp.int32)
+            if plan.async_on:
+                n_del = diag["n_delivered"]
+                out["n_delivered"] = n_del
+                # deliveries lag dispatches in async, so normalise by the
+                # fleet (bounded [0,1]) rather than the eligible count
+                out["delivered_rate"] = (n_del / n).astype(jnp.float32)
+                out["goodput_mbit_s"] = (
+                    n_del * w.model_mbit / plan.tick_s).astype(jnp.float32)
+                out["n_inflight"] = diag["n_inflight"]
+                out["n_dropped"] = diag["n_dropped"]
+            elif plan.faults_on:
+                n_del = jnp.sum(delivered)
+                out["n_delivered"] = n_del.astype(jnp.int32)
+                out["delivered_rate"] = (
+                    n_del / jnp.maximum(jnp.sum(res.selected), 1)
+                ).astype(jnp.float32)
+                out["goodput_mbit_s"] = (
+                    n_del * w.model_mbit / jnp.maximum(t_round, 1e-9)
+                ).astype(jnp.float32)
+        else:
+            # sweep records are all-f32 (they stack across seeds/scenarios)
+            out["n_selected"] = n_sel.astype(jnp.float32)
+            if plan.async_on:
+                n_del = diag["n_delivered"].astype(jnp.float32)
+                out["n_delivered"] = n_del
+                out["delivered_rate"] = n_del / n
+                out["goodput_mbit_s"] = (n_del * w.model_mbit
+                                         / jnp.float32(plan.tick_s))
+                out["n_inflight"] = diag["n_inflight"].astype(jnp.float32)
+                out["n_dropped"] = diag["n_dropped"].astype(jnp.float32)
+            elif plan.faults_on:
+                n_del = jnp.sum(delivered).astype(jnp.float32)
+                out["n_delivered"] = n_del
+                out["delivered_rate"] = n_del / jnp.maximum(
+                    jnp.sum(res.selected).astype(jnp.float32), 1.0)
+                out["goodput_mbit_s"] = (n_del * w.model_mbit
+                                         / jnp.maximum(t_round, 1e-9))
+        if hier:
+            out["handover_rate"] = handover_rate
+
+        if need_prev and not hier:
+            prev_bs = serving
+        new_state = RoundState(
+            world=WorldState(pos=pos, mob_aux=aux),
+            clients=ClientState(counts=counts,
+                                prev_bs=prev_bs if need_prev else None),
+            server=ServerState(params=params,
+                               edge_params=edge if hier else None,
+                               edge_weight=edge_w if hier else None,
+                               queue=queue if plan.async_on else None),
+            sched=sched_state, key=key)
+        return new_state, out
+
+    return init_state, step_fn
+
+
 class FLSimulation:
     """Owns all state of one FL run; `run(n_rounds)` yields RoundRecords."""
 
@@ -766,162 +1142,85 @@ class FLSimulation:
         # (re)traced, so tests can assert ONE compile per shape bucket
         self._async_traces = 0
 
+        # -- the canonical fused round step (shared with the learning sweep,
+        # shard sweep and serving stub — ROADMAP item 5's seam) ------------
+        self._plan = RoundPlan(
+            scheduler=cfg.scheduler, epochs=cfg.local_epochs,
+            batch_size=cfg.batch_size, lr=cfg.lr, eval_every=cfg.eval_every,
+            compute=cfg.compute, select_cap=self._select_cap,
+            fedavg_backend=cfg.fedavg_backend, aggregation=agg,
+            tau_global=tau, async_on=self._async,
+            tick_s=(self._tick_s if self._async else 1.0),
+            staleness_alpha=self._alpha, buffer_size=self._buffer_size,
+            faults_on=self._faulty,
+            clip_on=self.faults.clip_norm is not None, world="engine")
+        scenario_cp = {"mob_model": self._mob_model,
+                       "pause_s": self._mob_pause,
+                       "gm_memory": self._mob_gm,
+                       "shadow_sigma": self._shadow_sigma}
+        init_state, self._step_fn = make_round_step(
+            self._plan, w, scenario=scenario_cp, faults=self._fault_params,
+            x_clients=self.x_clients, y_clients=self.y_clients,
+            data_sizes=self.data_sizes, x_test=self.data.x_test,
+            y_test=self.data.y_test, bs_pos=self.mob.bs_pos,
+            bs_bw=self.bs_bw, k_shadow=self._k_shadow,
+            min_participants=int(np.ceil(w.rho2 * w.n_users)),
+            params0=self.params, pos0=self.mob.user_pos,
+            aux0=self._mob_aux, counts0=self.part.counts, key0=self._key,
+            clip_norm=self.faults.clip_norm)
+        # stateful online schedulers (ucb, pf, ...) carry per-user estimates
+        # across rounds; None for the stateless registry entries
+        self._sched_state = init_state.sched
+
     # -------------------------------------------------------- fused engine --
     @property
     def fused_capable(self) -> bool:
         return self.cfg.scheduler in FUSED_SCHEDULERS
 
-    def _carry(self) -> tuple:
-        base = (self.params, self.mob.user_pos, self._mob_aux,
-                self.part.counts, self._key)
-        if self._hier:
-            return base + (self.edge_params, self.edge_weight, self._prev_bs)
-        if self._async:
-            base = base + (self._queue,)
-        if self._faulty:
-            base = base + (self._prev_bs,)
-        return base
+    def _carry(self) -> RoundState:
+        """The engine's attributes as one typed :class:`RoundState`.
 
-    def _set_carry(self, carry: tuple) -> None:
-        params, pos, aux, counts, key = carry[:5]
-        self.params = params
-        self.mob = MobilityState(user_pos=pos, bs_pos=self.mob.bs_pos)
-        self._mob_aux = aux
-        self.part = ParticipationState(counts=counts,
+        Optional slots are ``None`` exactly when the feature is off, so the
+        carry's pytree STRUCTURE is a static function of the compile bucket
+        (same leaves -> same traced graph -> no silent recompiles)."""
+        need_prev = self._hier or self._faulty
+        return RoundState(
+            world=WorldState(pos=self.mob.user_pos, mob_aux=self._mob_aux),
+            clients=ClientState(
+                counts=self.part.counts,
+                prev_bs=self._prev_bs if need_prev else None),
+            server=ServerState(
+                params=self.params,
+                edge_params=self.edge_params if self._hier else None,
+                edge_weight=self.edge_weight if self._hier else None,
+                queue=self._queue if self._async else None),
+            sched=self._sched_state, key=self._key)
+
+    def _set_carry(self, state: RoundState) -> None:
+        self.params = state.server.params
+        self.mob = MobilityState(user_pos=state.world.pos,
+                                 bs_pos=self.mob.bs_pos)
+        self._mob_aux = state.world.mob_aux
+        self.part = ParticipationState(counts=state.clients.counts,
                                        round_idx=self.round_idx)
-        self._key = key
+        self._key = state.key
+        self._sched_state = state.sched
         if self._hier:
-            self.edge_params, self.edge_weight, self._prev_bs = carry[5:]
-            return
-        rest = list(carry[5:])
+            self.edge_params = state.server.edge_params
+            self.edge_weight = state.server.edge_weight
+        if self._hier or self._faulty:
+            self._prev_bs = state.clients.prev_bs
         if self._async:
-            self._queue = rest.pop(0)
-        if self._faulty:
-            self._prev_bs = rest.pop(0)
+            self._queue = state.server.queue
 
-    def _round_step(self, carry: tuple, r) -> tuple[tuple, dict]:
+    def _round_step(self, carry: RoundState, r) -> tuple[RoundState, dict]:
         """One fully-traced round: mobility -> channel -> schedule -> local
         SGD -> masked FedAvg (single-tier Eq. (2) or per-BS edge
         aggregation + tau_global sync) -> eval under ``lax.cond``.  ``r``
         may be a host int (per-round step) or a traced counter (fused
-        scan)."""
-        cfg, w = self.cfg, self.wireless
-        fp = self._fault_params
-        params, pos, aux, counts, key = carry[:5]
-        if self._faulty:
-            # one extra subkey for the fault realization — gated statically
-            # so fault-free runs keep the seed's exact PRNG trajectory
-            key, k_mob, k_prob, k_sched, k_fleet, k_fault = \
-                jax.random.split(key, 6)
-        else:
-            key, k_mob, k_prob, k_sched, k_fleet = jax.random.split(key, 5)
-
-        # 1. mobility (model chosen by the scenario; plain RD by default)
-        pos, aux = mobility.step_named(
-            self._mob_model, k_mob, pos, aux, w,
-            pause_s=self._mob_pause, gm_memory=self._mob_gm)
-        state = MobilityState(user_pos=pos, bs_pos=self.mob.bs_pos)
-        # 2. observe channels (shadowing field is consistent across rounds)
-        shadow_db = None
-        if self._shadow_sigma > 0.0:
-            shadow_db = self._shadow_sigma * channel.sample_shadowing(
-                self._k_shadow, pos, self.mob.bs_pos, w, sigma_db=1.0)
-        prob = channel.make_problem(k_prob, state, w, counts, r,
-                                    bs_bw=self.bs_bw, shadow_db=shadow_db)
-        # 2b. geometry the hierarchy / fault layer observes (CSE'd against
-        # make_problem's internal distance computation)
-        if self._hier or self._faulty:
-            dist = state.distances()
-            serving = camped_bs(dist)
-            prev_bs = carry[-1]
-        if self._faulty:
-            edge_frac = fl_faults.edge_proximity(dist, serving, w)
-            handover = (serving != prev_bs) & (prev_bs >= 0)
-            # pre-scheduling delivery estimate — what dagsa-r discounts by
-            prob = dataclasses.replace(
-                prob, p_deliver=fl_faults.delivery_probability(
-                    fp, edge_frac, handover))
-        # 3. schedule (static dispatch by name; jit-able schedulers only)
-        res = sched.schedule(cfg.scheduler, prob, w, k_sched)
-        # 3b. realize faults: stragglers stretch tcomp, outages/crashes kill
-        # uplinks, the deadline drops late survivors (truncated Eq. (3))
-        if self._faulty:
-            tcomp_eff, alive, corrupt = fl_faults.sample_round_faults(
-                k_fault, fp, edge_frac, handover, prob.tcomp)
-            t_user = latency.per_user_latency(prob, res, tcomp=tcomp_eff)
-            delivered = (res.selected & alive
-                         & latency.on_time(t_user, fp["deadline_s"]))
-            t_round = latency.deadline_round_latency(t_user, res.selected,
-                                                     fp["deadline_s"])
-            clip = self.faults.clip_norm
-        else:
-            delivered, corrupt, clip = res.selected, None, None
-            t_round = res.t_round
-        # 4. data plane: local SGD + Eq. (2) aggregation
-        keys = jax.random.split(k_fleet, w.n_users)
-        if self._hier:
-            edge, edge_w = carry[5:7]
-            (params, edge, edge_w, prev_bs, handover_rate) = \
-                hierarchical_round(
-                    cnn.loss_fn, params, edge, edge_w, prev_bs,
-                    self.x_clients, self.y_clients, keys, res.assign,
-                    res.selected, serving, self.data_sizes, r,
-                    tau_global=self.tau_global, epochs=cfg.local_epochs,
-                    batch_size=cfg.batch_size, lr=cfg.lr,
-                    compute=cfg.compute, select_cap=self._select_cap,
-                    fedavg_backend=cfg.fedavg_backend,
-                    delivered=delivered if self._faulty else None,
-                    corrupt=corrupt, corrupt_mode_id=fp["corrupt_mode_id"],
-                    corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
-            # eval sees the virtual global (edge mixture); built inside the
-            # cond so non-eval rounds skip the O(M x model) reduction
-            eval_args = (params, edge, edge_w)
-            eval_model = lambda a: fl_server.edge_global_sync(*a)
-        else:
-            params = train_and_aggregate(
-                cnn.loss_fn, params, self.x_clients, self.y_clients, keys,
-                res.selected, self.data_sizes, epochs=cfg.local_epochs,
-                batch_size=cfg.batch_size, lr=cfg.lr, compute=cfg.compute,
-                select_cap=self._select_cap,
-                fedavg_backend=cfg.fedavg_backend,
-                delivered=delivered if self._faulty else None,
-                corrupt=corrupt, corrupt_mode_id=fp["corrupt_mode_id"],
-                corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
-            eval_args, eval_model = params, lambda p: p
-        # 5. bookkeeping — everything stays on device.  Participation
-        # follows DELIVERY under faults: a user whose update was lost stays
-        # "necessary" (Eq. 8g), so the fairness loop self-heals failures.
-        counts = counts + delivered.astype(counts.dtype)
-        if cfg.eval_every:
-            acc = jax.lax.cond(
-                (r + 1) % cfg.eval_every == 0,
-                lambda a: cnn.accuracy(eval_model(a), self.data.x_test,
-                                       self.data.y_test),
-                lambda a: jnp.float32(jnp.nan), eval_args)
-        else:
-            acc = jnp.float32(jnp.nan)
-        out = {
-            "t_round": t_round,
-            "n_selected": jnp.sum(res.selected).astype(jnp.int32),
-            "test_acc": acc,
-            "min_part_rate": jnp.min(counts) / (r + 1.0),
-        }
-        if self._faulty:
-            n_del = jnp.sum(delivered)
-            out["n_delivered"] = n_del.astype(jnp.int32)
-            out["delivered_rate"] = (
-                n_del / jnp.maximum(jnp.sum(res.selected), 1)
-            ).astype(jnp.float32)
-            out["goodput_mbit_s"] = (
-                n_del * w.model_mbit / jnp.maximum(t_round, 1e-9)
-            ).astype(jnp.float32)
-        new_carry = (params, pos, aux, counts, key)
-        if self._hier:
-            out["handover_rate"] = handover_rate
-            new_carry = new_carry + (edge, edge_w, prev_bs)
-        elif self._faulty:
-            new_carry = new_carry + (serving,)
-        return new_carry, out
+        scan).  The body is the canonical :func:`make_round_step` step —
+        the same function the learning sweep scans."""
+        return self._step_fn(carry, r)
 
     def _run_scan(self, carry: tuple, r0, n_rounds: int):
         """n_rounds of :meth:`_round_step` as one ``lax.scan``."""
@@ -929,7 +1228,7 @@ class FLSimulation:
         return jax.lax.scan(self._round_step, carry, rs)
 
     # ------------------------------------------------- buffered-async engine --
-    def _async_step(self, carry: tuple, r) -> tuple[tuple, dict]:
+    def _async_step(self, carry: RoundState, r) -> tuple[RoundState, dict]:
         """One fully-traced async tick: mobility -> channel -> schedule ->
         dispatch the non-busy scheduled clients with their Eq. (1)
         completion times -> advance the event queue -> staleness-weighted
@@ -942,93 +1241,7 @@ class FLSimulation:
         than a different random trajectory.
         """
         self._async_traces += 1          # python side effect: trace-time only
-        cfg, w = self.cfg, self.wireless
-        fp = self._fault_params
-        params, pos, aux, counts, key = carry[:5]
-        queue = carry[5]
-        if self._faulty:
-            key, k_mob, k_prob, k_sched, k_fleet, k_fault = \
-                jax.random.split(key, 6)
-        else:
-            key, k_mob, k_prob, k_sched, k_fleet = jax.random.split(key, 5)
-
-        pos, aux = mobility.step_named(
-            self._mob_model, k_mob, pos, aux, w,
-            pause_s=self._mob_pause, gm_memory=self._mob_gm)
-        state = MobilityState(user_pos=pos, bs_pos=self.mob.bs_pos)
-        shadow_db = None
-        if self._shadow_sigma > 0.0:
-            shadow_db = self._shadow_sigma * channel.sample_shadowing(
-                self._k_shadow, pos, self.mob.bs_pos, w, sigma_db=1.0)
-        prob = channel.make_problem(k_prob, state, w, counts, r,
-                                    bs_bw=self.bs_bw, shadow_db=shadow_db)
-        if self._faulty:
-            dist = state.distances()
-            serving = camped_bs(dist)
-            prev_bs = carry[-1]
-            edge_frac = fl_faults.edge_proximity(dist, serving, w)
-            handover = (serving != prev_bs) & (prev_bs >= 0)
-            prob = dataclasses.replace(
-                prob, p_deliver=fl_faults.delivery_probability(
-                    fp, edge_frac, handover))
-        res = sched.schedule(cfg.scheduler, prob, w, k_sched)
-        # faults at dispatch: a crashed/outaged uplink never enters the
-        # queue (the server can't see it, but the client is free again next
-        # tick); a deadline-stale update is discarded the same way, so the
-        # deadline-truncated sync delivery mask carries over exactly
-        if self._faulty:
-            tcomp_eff, alive, corrupt = fl_faults.sample_round_faults(
-                k_fault, fp, edge_frac, handover, prob.tcomp)
-            t_user = latency.per_user_latency(prob, res, tcomp=tcomp_eff)
-            gate = alive & latency.on_time(t_user, fp["deadline_s"])
-            clip = self.faults.clip_norm
-        else:
-            t_user = latency.per_user_latency(prob, res)
-            gate = jnp.ones_like(res.selected)
-            corrupt, clip = None, None
-        eligible = res.selected & ~async_busy(queue, w.n_users)
-        dispatch = eligible & gate
-
-        keys = jax.random.split(k_fleet, w.n_users)
-        params, queue, delivered, diag = async_round_tick(
-            cnn.loss_fn, params, queue, self.x_clients, self.y_clients,
-            keys, dispatch, t_user, self.data_sizes, r,
-            tick_s=self._tick_s, staleness_alpha=self._alpha,
-            epochs=cfg.local_epochs, batch_size=cfg.batch_size, lr=cfg.lr,
-            fedavg_backend=cfg.fedavg_backend, compute=cfg.compute,
-            select_cap=self._select_cap, corrupt=corrupt,
-            corrupt_mode_id=fp["corrupt_mode_id"],
-            corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
-        # participation follows delivery, as in the sync engine
-        counts = counts + delivered.astype(counts.dtype)
-        if cfg.eval_every:
-            acc = jax.lax.cond(
-                (r + 1) % cfg.eval_every == 0,
-                lambda p: cnn.accuracy(p, self.data.x_test,
-                                       self.data.y_test),
-                lambda p: jnp.float32(jnp.nan), params)
-        else:
-            acc = jnp.float32(jnp.nan)
-        n_sel = jnp.sum(eligible).astype(jnp.int32)
-        n_del = diag["n_delivered"]
-        out = {
-            "t_round": jnp.full((), self._tick_s, jnp.float32),
-            "n_selected": n_sel,
-            "test_acc": acc,
-            "min_part_rate": jnp.min(counts) / (r + 1.0),
-            "n_delivered": n_del,
-            # deliveries lag dispatches in async, so normalise by the fleet
-            # (bounded [0,1]) rather than this tick's eligible count
-            "delivered_rate": (n_del / w.n_users).astype(jnp.float32),
-            "goodput_mbit_s": (n_del * w.model_mbit / self._tick_s
-                               ).astype(jnp.float32),
-            "n_inflight": diag["n_inflight"],
-            "n_dropped": diag["n_dropped"],
-        }
-        new_carry = (params, pos, aux, counts, key, queue)
-        if self._faulty:
-            new_carry = new_carry + (serving,)
-        return new_carry, out
+        return self._step_fn(carry, r)
 
     def _run_async_scan(self, carry: tuple, r0, n_rounds: int):
         """n_rounds ticks of :meth:`_async_step` as one ``lax.scan``."""
@@ -1075,6 +1288,11 @@ class FLSimulation:
             raise ValueError(
                 "aggregation='hierarchical' lives in the traced round step; "
                 "use mode='fused' or mode='step'")
+        if mode == "eager" and self.cfg.scheduler in sched.STATEFUL_SCHEDULERS:
+            raise ValueError(
+                f"stateful scheduler {self.cfg.scheduler!r} carries per-user "
+                f"estimates in the fused RoundState; mode='eager' would "
+                f"restart them every round — use mode='fused' or 'step'")
         if n_rounds <= 0:
             return []
         if mode == "fused":

@@ -9,16 +9,24 @@ it.  It now only re-exports the supported sweep entry points so stale
   single-device wireless / FL-learning sweeps (also the CLI:
   ``python -m repro.launch.sweep``);
 * :func:`repro.launch.shard_sweep.run_shard_sweep` /
-  ``run_shard_learning_sweep`` — the same grids over a device mesh.
+  ``run_shard_learning_sweep`` — the same grids over a device mesh;
+* :func:`repro.fl.rounds.make_round_step` — the canonical
+  ``(init_state, step_fn)`` round-step builder every engine scans.  A
+  future online-serving loop (ROADMAP item 5: a server process that
+  schedules real client check-ins) should drive THIS seam — one
+  ``step_fn(state, r)`` per wall-clock round over a live
+  :class:`repro.core.types.RoundState` — instead of growing a second
+  round-step body here.
 """
 from __future__ import annotations
 
+from repro.fl.rounds import RoundPlan, make_round_step
 from repro.launch.shard_sweep import (run_shard_learning_sweep,
                                       run_shard_sweep)
 from repro.launch.sweep import run_learning_sweep, run_sweep
 
 __all__ = ["run_sweep", "run_learning_sweep", "run_shard_sweep",
-           "run_shard_learning_sweep"]
+           "run_shard_learning_sweep", "RoundPlan", "make_round_step"]
 
 
 def main() -> None:

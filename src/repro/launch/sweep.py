@@ -94,10 +94,13 @@ from repro.core.types import MobilityState, WirelessConfig
 # registers the faulty-* scenarios and supplies the traced fault samplers
 from repro.fl import faults as fl_faults
 
-# Learning-sweep scheduler choices: the compiled greedy, or its
-# failure-aware variant that discounts candidates by estimated delivery
-# probability (identical to dagsa_jit when the scenario has no faults).
-SWEEP_SCHEDULERS = ("dagsa_jit", "dagsa-r")
+# Learning-sweep scheduler choices: the compiled greedy, its failure-aware
+# variant that discounts candidates by estimated delivery probability
+# (identical to dagsa_jit when the scenario has no faults), the random
+# baseline, and the stateful online policies (per-user running estimates
+# riding the scan carry) — the bake-off set.
+SWEEP_SCHEDULERS = ("dagsa_jit", "dagsa-r", "rs", "ucb", "biased-adaptive",
+                    "rr", "pf")
 
 
 # -------------------------------------------------------------- lowering ---
@@ -144,34 +147,9 @@ def _bs_positions(key: jax.Array, layout_id, cfg: WirelessConfig):
 
 
 # ------------------------------------------------------------ compiled core --
-def _dist_and_shadow(pos, bs_pos, shadow_sigma, k_shadow,
-                     cfg: WirelessConfig, user_chunk: int | None):
-    """[N, M] distances + shadowing field, optionally in user blocks.
-
-    The shadowing field evaluates 64 random Fourier features per (user, BS)
-    pair — the O(N x M x F) intermediate that dominates memory at fleet
-    scale.  ``user_chunk`` bounds it: a ``lax.map`` over ceil(N/user_chunk)
-    user blocks keeps the peak at [user_chunk, M, F] while producing
-    bit-identical values (both terms are per-user independent, and the
-    field's frequencies/phases depend only on ``k_shadow``).  A final
-    partial block is padded with dummy rows and sliced off — per-row
-    determinism means real rows are unaffected, so arbitrary fleet sizes
-    work with any chunk.
-    """
-    def block(pos_blk):
-        d = MobilityState(user_pos=pos_blk, bs_pos=bs_pos).distances()
-        sh = shadow_sigma * channel.sample_shadowing(
-            k_shadow, pos_blk, bs_pos, cfg, sigma_db=1.0)
-        return d, sh
-
-    n = pos.shape[0]
-    if not user_chunk or user_chunk >= n:
-        return block(pos)
-    pad = (-n) % user_chunk
-    if pad:
-        pos = jnp.pad(pos, ((0, pad), (0, 0)))
-    d, sh = jax.lax.map(block, pos.reshape(-1, user_chunk, 2))
-    return d.reshape(n + pad, -1)[:n], sh.reshape(n + pad, -1)[:n]
+# The chunked distance/shadowing evaluation moved to the channel layer
+# (PR 9); the alias keeps this module's long-standing name importable.
+_dist_and_shadow = channel.dist_and_shadow
 
 
 def _check_user_chunk(user_chunk: int | None, n_users: int) -> None:
@@ -211,11 +189,16 @@ def _one_cell(p: dict, key: jax.Array, cfg: WirelessConfig, n_rounds: int,
         # sigma 0 (scenario off) makes it a no-op multiplier.
         dist, shadow_db = _dist_and_shadow(pos, bs_pos, p["shadow_sigma"],
                                            k_shadow, cfg, user_chunk)
-        snr = channel.compress_channel(
+        snr_store, snr_scale, snr_lin = channel.encode_channel(
             channel.sample_snr(k_snr, dist, cfg, shadow_db=shadow_db),
             channel_dtype)
-        coeff = channel.compress_channel(
-            channel.bandwidth_time_coeff(snr, cfg), channel_dtype)
+        if channel_dtype == "int8":
+            # Eq. (11) needs real coefficients — derive from the dequantised
+            # plane (the int8 codes carry only ranks + dB values)
+            coeff = channel.bandwidth_time_coeff(snr_lin, cfg)
+        else:
+            coeff = channel.compress_channel(
+                channel.bandwidth_time_coeff(snr_store, cfg), channel_dtype)
         u = jax.random.uniform(k_tc, (cfg.n_users,))
         tcomp = p["tcomp_min"] + u * (p["tcomp_max"] - p["tcomp_min"])
         # Eq. (8g): post-round requirement — participate if sitting out
@@ -223,8 +206,9 @@ def _one_cell(p: dict, key: jax.Array, cfg: WirelessConfig, n_rounds: int,
         # one); matches channel.make_problem.
         necessary = counts < cfg.rho1 * (r + 1.0)
         _, selected, _, _, t_round = dagsa_jit._schedule(
-            snr, coeff, tcomp, bs_bw, necessary, min_participants, k_sched,
-            backend=backend, selection_block=user_chunk)
+            snr_store, coeff, tcomp, bs_bw, necessary, min_participants,
+            k_sched, backend=backend, selection_block=user_chunk,
+            snr_scale=snr_scale)
         counts = counts + selected.astype(counts.dtype)
         out = {
             "t_round": t_round,
@@ -375,12 +359,16 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
     ``(1+s)^(-staleness_alpha)``.  The control plane (PRNG splits,
     mobility, channel, scheduling, fault realization) is untouched, so
     sync-vs-async curves compare the aggregation discipline alone.
-    """
-    from repro.fl.rounds import async_busy, async_queue_init, \
-        async_round_tick, hierarchical_round, camped_bs, train_and_aggregate
-    from repro.models import cnn
 
-    hier = aggregation == "hierarchical"
+    The round body itself is the canonical
+    :func:`repro.fl.rounds.make_round_step` step (``world="sweep"``) —
+    the SAME function :class:`repro.fl.rounds.FLSimulation` scans; this
+    cell only draws the world (positions, BS layout, bandwidths,
+    kinematics) and hands the typed :class:`~repro.core.types.RoundState`
+    to the scan.
+    """
+    from repro.fl.rounds import RoundPlan, make_round_step
+
     fp = {k: p[f"f_{k}"] for k in fl_faults.FAULT_PARAM_KEYS}
     k_pos, k_bs, k_bw, k_aux, k_shadow, k_run = jax.random.split(key, 6)
     pos0 = jax.random.uniform(k_pos, (cfg.n_users, 2), minval=0.0,
@@ -392,179 +380,20 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
     counts0 = jnp.zeros((cfg.n_users,))
     data_sizes = jnp.full((cfg.n_users,), x_c.shape[1])
 
-    def round_body(carry, r):
-        queue = None
-        if hier:
-            params, edge, edge_w, prev_bs, pos, aux, counts, key = carry
-        elif async_on and faults_on:
-            params, pos, aux, counts, key, queue, prev_bs = carry
-        elif async_on:
-            params, pos, aux, counts, key, queue = carry
-        elif faults_on:
-            params, pos, aux, counts, key, prev_bs = carry
-        else:
-            params, pos, aux, counts, key = carry
-        if faults_on:
-            key, k_mob, k_snr, k_tc, k_sched, k_fleet, k_fault = \
-                jax.random.split(key, 7)
-        else:
-            key, k_mob, k_snr, k_tc, k_sched, k_fleet = \
-                jax.random.split(key, 6)
-        pos, aux = mobility.step_switch(
-            p["model_id"], k_mob, pos, aux, cfg.area_m, cfg.round_duration_s,
-            p["speed"], p["pause_s"], p["gm_memory"])
-        dist, shadow_db = _dist_and_shadow(pos, bs_pos, p["shadow_sigma"],
-                                           k_shadow, cfg, user_chunk)
-        snr = channel.compress_channel(
-            channel.sample_snr(k_snr, dist, cfg, shadow_db=shadow_db),
-            channel_dtype)
-        coeff = channel.compress_channel(
-            channel.bandwidth_time_coeff(snr, cfg), channel_dtype)
-        u = jax.random.uniform(k_tc, (cfg.n_users,))
-        tcomp = p["tcomp_min"] + u * (p["tcomp_max"] - p["tcomp_min"])
-        # Eq. (8g), post-round requirement (matches channel.make_problem)
-        necessary = counts < cfg.rho1 * (r + 1.0)
-        if hier or faults_on:
-            serving = camped_bs(dist)
-        score = snr
-        if faults_on:
-            handover = (serving != prev_bs) & (prev_bs >= 0)
-            edge_frac = fl_faults.edge_proximity(dist, serving, cfg)
-            p_est = fl_faults.delivery_probability(fp, edge_frac, handover)
-            if scheduler == "dagsa-r":
-                # the delivery-discounted candidate score (the per-user
-                # scale leaves each user's best-BS argmax unchanged)
-                score = snr * jnp.clip(p_est, 0.0, 1.0)[:, None]
-        assign, selected, bw, _, t_round = dagsa_jit._schedule(
-            score, coeff, tcomp, bs_bw, necessary, minp, k_sched,
-            backend=backend, selection_block=user_chunk)
-        if faults_on:
-            tcomp_eff, alive, corrupt = fl_faults.sample_round_faults(
-                k_fault, fp, edge_frac, handover, tcomp)
-            c_user = jnp.sum(jnp.where(assign, coeff, 0.0), axis=1)
-            t_user = tcomp_eff + jnp.where(
-                selected, c_user / jnp.maximum(bw, 1e-12), 0.0)
-            gate = alive & (t_user <= fp["deadline_s"])
-            delivered = selected & gate
-            t_round = jnp.minimum(
-                jnp.max(jnp.where(selected, t_user, 0.0)), fp["deadline_s"])
-            clip = fp["clip_norm"] if clip_on else None
-        else:
-            delivered, corrupt, clip = selected, None, None
-            if async_on:
-                c_user = jnp.sum(jnp.where(assign, coeff, 0.0), axis=1)
-                t_user = tcomp + jnp.where(
-                    selected, c_user / jnp.maximum(bw, 1e-12), 0.0)
-                gate = jnp.ones_like(selected)
-        keys = jax.random.split(k_fleet, cfg.n_users)
-        if async_on:
-            # faults gate at dispatch: a dead/late uplink never enters the
-            # queue (same delivery mask as the sync engine carries over)
-            eligible = selected & ~async_busy(queue, cfg.n_users)
-            dispatch = eligible & gate
-            params, queue, delivered, diag = async_round_tick(
-                cnn.loss_fn, params, queue, x_c, y_c, keys, dispatch,
-                t_user, data_sizes, r, tick_s=tick_s,
-                staleness_alpha=staleness_alpha, epochs=epochs,
-                batch_size=batch_size, lr=lr, compute=compute,
-                select_cap=select_cap,
-                fedavg_backend=fedavg_backend, corrupt=corrupt,
-                corrupt_mode_id=fp["corrupt_mode_id"],
-                corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
-            t_round = jnp.full((), tick_s, jnp.float32)
-            eval_args, eval_model = params, lambda q: q
-        elif hier:
-            from repro.fl import server as fl_server
-            (params, edge, edge_w, prev_bs, handover_rate) = \
-                hierarchical_round(
-                    cnn.loss_fn, params, edge, edge_w, prev_bs, x_c, y_c,
-                    keys, assign, selected, serving, data_sizes, r,
-                    tau_global=tau_global, epochs=epochs,
-                    batch_size=batch_size, lr=lr, compute=compute,
-                    select_cap=select_cap, fedavg_backend=fedavg_backend,
-                    delivered=delivered if faults_on else None,
-                    corrupt=corrupt, corrupt_mode_id=fp["corrupt_mode_id"],
-                    corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
-            # virtual global built inside the eval cond: non-eval rounds
-            # skip the O(M x model) edge mixture
-            eval_args = (params, edge, edge_w)
-            eval_model = lambda a: fl_server.edge_global_sync(*a)
-        else:
-            params = train_and_aggregate(
-                cnn.loss_fn, params, x_c, y_c, keys, selected, data_sizes,
-                epochs=epochs, batch_size=batch_size, lr=lr, compute=compute,
-                select_cap=select_cap, fedavg_backend=fedavg_backend,
-                delivered=delivered if faults_on else None,
-                corrupt=corrupt, corrupt_mode_id=fp["corrupt_mode_id"],
-                corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
-            eval_args, eval_model = params, lambda q: q
-        # participation follows DELIVERY under faults (a lost update keeps
-        # the user necessary, so the Eq. (8g) loop self-heals failures)
-        counts = counts + delivered.astype(counts.dtype)
-        if eval_every:
-            # the predicate only depends on the (unbatched) scan counter, so
-            # the cond survives the seeds x scenarios vmaps as a real branch
-            acc = jax.lax.cond(
-                (r + 1) % eval_every == 0,
-                lambda a: cnn.accuracy(eval_model(a), x_test, y_test),
-                lambda a: jnp.float32(jnp.nan), eval_args)
-        else:
-            acc = jnp.float32(jnp.nan)
-        out = {
-            "t_round": t_round,
-            "n_selected": (jnp.sum(eligible) if async_on
-                           else jnp.sum(selected)).astype(jnp.float32),
-            "test_acc": acc,
-            "min_part_rate": jnp.min(counts) / (r + 1.0),
-        }
-        if async_on:
-            n_del = diag["n_delivered"].astype(jnp.float32)
-            out["n_delivered"] = n_del
-            # deliveries lag dispatches in async, so normalise by the
-            # fleet (bounded [0,1]) rather than this tick's eligible count
-            out["delivered_rate"] = n_del / cfg.n_users
-            out["goodput_mbit_s"] = (n_del * cfg.model_mbit
-                                     / jnp.float32(tick_s))
-            out["n_inflight"] = diag["n_inflight"].astype(jnp.float32)
-            out["n_dropped"] = diag["n_dropped"].astype(jnp.float32)
-        elif faults_on:
-            n_del = jnp.sum(delivered).astype(jnp.float32)
-            out["n_delivered"] = n_del
-            out["delivered_rate"] = n_del / jnp.maximum(
-                jnp.sum(selected).astype(jnp.float32), 1.0)
-            out["goodput_mbit_s"] = (n_del * cfg.model_mbit
-                                     / jnp.maximum(t_round, 1e-9))
-        if hier:
-            out["handover_rate"] = handover_rate
-            new_carry = (params, edge, edge_w, prev_bs, pos, aux, counts,
-                         key)
-        elif async_on and faults_on:
-            new_carry = (params, pos, aux, counts, key, queue, serving)
-        elif async_on:
-            new_carry = (params, pos, aux, counts, key, queue)
-        elif faults_on:
-            new_carry = (params, pos, aux, counts, key, serving)
-        else:
-            new_carry = (params, pos, aux, counts, key)
-        return new_carry, out
-
-    if hier:
-        edge0 = jax.tree.map(
-            lambda q: jnp.repeat(q[None], cfg.n_bs, axis=0), params0)
-        carry0 = (params0, edge0, jnp.zeros((cfg.n_bs,), jnp.float32),
-                  jnp.full((cfg.n_users,), -1, jnp.int32),
-                  pos0, aux0, counts0, k_run)
-    elif async_on:
-        queue0 = async_queue_init(params0, cfg.n_users, buffer_size)
-        carry0 = (params0, pos0, aux0, counts0, k_run, queue0)
-        if faults_on:
-            carry0 = carry0 + (jnp.full((cfg.n_users,), -1, jnp.int32),)
-    elif faults_on:
-        carry0 = (params0, pos0, aux0, counts0, k_run,
-                  jnp.full((cfg.n_users,), -1, jnp.int32))
-    else:
-        carry0 = (params0, pos0, aux0, counts0, k_run)
-    _, outs = jax.lax.scan(round_body, carry0, jnp.arange(n_rounds))
+    plan = RoundPlan(
+        scheduler=scheduler, epochs=epochs, batch_size=batch_size, lr=lr,
+        eval_every=eval_every, compute=compute, select_cap=select_cap,
+        fedavg_backend=fedavg_backend, aggregation=aggregation,
+        tau_global=tau_global, async_on=async_on, tick_s=tick_s,
+        staleness_alpha=staleness_alpha, buffer_size=buffer_size,
+        faults_on=faults_on, clip_on=clip_on, backend=backend,
+        user_chunk=user_chunk, channel_dtype=channel_dtype, world="sweep")
+    init_state, step = make_round_step(
+        plan, cfg, scenario=p, faults=fp, x_clients=x_c, y_clients=y_c,
+        data_sizes=data_sizes, x_test=x_test, y_test=y_test, bs_pos=bs_pos,
+        bs_bw=bs_bw, k_shadow=k_shadow, min_participants=minp,
+        params0=params0, pos0=pos0, aux0=aux0, counts0=counts0, key0=k_run)
+    _, outs = jax.lax.scan(step, init_state, jnp.arange(n_rounds))
     return outs
 
 

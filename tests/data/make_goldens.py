@@ -1,0 +1,97 @@
+"""Regenerate tests/data/golden_trajectories.npz (bit-identity anchors).
+
+Run from the repo root against a commit whose trajectories are the
+reference (the pre-refactor engine for PR 9):
+
+    PYTHONPATH=src python tests/data/make_goldens.py
+
+The configs are deliberately tiny — the goldens pin bit-identity of the
+round-step PLUMBING (PRNG split order, carry layout, reduction order),
+not model quality, so a few rounds over a dozen users suffice.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+
+from repro.core.types import WirelessConfig  # noqa: E402
+from repro.fl.rounds import FLConfig, FLSimulation  # noqa: E402
+from repro.launch.sweep import run_learning_sweep  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "golden_trajectories.npz")
+
+TINY_W = WirelessConfig(n_users=12, n_bs=4)
+N_ROUNDS = 3
+
+
+def engine_case(name: str, **cfg_kwargs) -> dict[str, np.ndarray]:
+    cfg = FLConfig(wireless=TINY_W, n_train=120, n_test=40, local_epochs=1,
+                   batch_size=10, eval_every=1, seed=7, **cfg_kwargs)
+    sim = FLSimulation(cfg)
+    recs = sim.run(N_ROUNDS)
+    out = {}
+    for field in ("t_round", "wall_clock", "test_acc", "min_part_rate",
+                  "n_selected", "handover_rate", "n_delivered",
+                  "delivered_rate", "goodput_mbit_s", "n_inflight",
+                  "n_dropped"):
+        out[f"{name}/{field}"] = np.asarray(
+            [getattr(r, field) for r in recs], np.float64)
+    return out
+
+
+def sweep_case(name: str, scenarios, **kwargs) -> dict[str, np.ndarray]:
+    recs = run_learning_sweep(
+        scenarios, n_seeds=2, n_rounds=N_ROUNDS, cfg=TINY_W, n_train=120,
+        n_test=40, local_epochs=1, batch_size=10, eval_every=1, seed=7,
+        **kwargs)
+    out = {}
+    for i, rec in enumerate(recs):
+        sc = rec["seed_curves"]
+        acc = [[np.nan if v is None else v for v in row]
+               for row in sc["test_acc"]]
+        out[f"{name}/{i}/wall_clock_s"] = np.asarray(sc["wall_clock_s"],
+                                                     np.float64)
+        out[f"{name}/{i}/test_acc"] = np.asarray(acc, np.float64)
+        out[f"{name}/{i}/t_round_s"] = np.asarray(rec["curves"]["t_round_s"],
+                                                  np.float64)
+        out[f"{name}/{i}/n_selected"] = np.asarray(
+            rec["curves"]["n_selected"], np.float64)
+        out[f"{name}/{i}/min_part_rate"] = np.asarray(
+            [rec["min_part_rate"]] if "min_part_rate" in rec else [np.nan],
+            np.float64)
+    return out
+
+
+def main() -> None:
+    arrays: dict[str, np.ndarray] = {}
+    arrays.update(engine_case("engine_sync", scheduler="dagsa_jit"))
+    arrays.update(engine_case("engine_fedcs", scheduler="fedcs_low"))
+    arrays.update(engine_case("engine_hier", scheduler="dagsa_jit",
+                              aggregation="hierarchical", tau_global=2))
+    arrays.update(engine_case("engine_async", scheduler="dagsa_jit",
+                              aggregation_async=True, tick_s=0.5,
+                              staleness_alpha=0.5))
+    arrays.update(engine_case("engine_faulty", scheduler="dagsa-r",
+                              faults="faulty-uplink"))
+    arrays.update(engine_case("engine_faulty_async", scheduler="dagsa-r",
+                              faults="faulty-uplink", aggregation_async=True,
+                              tick_s=0.5, staleness_alpha=0.5))
+    arrays.update(sweep_case("sweep_sync",
+                             ["paper-default", "high-mobility"]))
+    arrays.update(sweep_case("sweep_hier", ["paper-default"],
+                             aggregation="hierarchical", tau_global=2))
+    arrays.update(sweep_case("sweep_faulty", ["faulty-uplink"],
+                             scheduler="dagsa-r"))
+    arrays.update(sweep_case("sweep_faulty_async", ["faulty-uplink"],
+                             scheduler="dagsa-r", aggregation_async=True,
+                             tick_s=0.5, staleness_alpha=0.5))
+    np.savez(OUT, **arrays)
+    print(f"wrote {OUT}: {len(arrays)} arrays")
+
+
+if __name__ == "__main__":
+    main()

@@ -161,7 +161,7 @@ def test_batch_constraints_and_registry():
     assert (res.selected.sum(axis=1) >=
             np.asarray([p.min_participants for p in probs])).all()  # (8h)
     with pytest.raises(ValueError):
-        schedule_batch("rs", probs, keys)
+        schedule_batch("dagsa", probs, keys)   # host-numpy: unbatchable
 
 
 def test_batch_pallas_backend_matches_jax():
