@@ -1,0 +1,132 @@
+"""Compressed-uplink accuracy vs uplink-bytes trade-off (docs/COMPRESSION.md).
+
+For each scenario the same world runs across the compression grid
+``topk_frac in {1.0, 0.1, 0.01} x {f32 (topk), int8 (topk-int8)}`` on the
+fused engine — the ``(1.0, f32)`` corner IS the uncompressed reference
+(``compress=None``: dense f32 payload, the paper's constant-S Eq. (1)).
+Every other cell uploads per-user payload ``s_k = S * ratio`` where
+``ratio`` comes from the nominal payload model
+(:func:`repro.kernels.compress_topk.compression_ratio`: kept entries cost
+value + 32-bit index bits), so smaller payloads directly shrink the
+Eq. (1)/(3) upload latencies the scheduler optimizes over.
+
+The headline pair the regression gate checks, per cell:
+
+* ``bytes_reduction_vs_uncompressed`` — dense bits / compressed bits
+  (deterministic payload arithmetic; the ISSUE target is >= 5x at
+  ``topk_frac = 0.1``), and
+* ``acc_drop_vs_uncompressed`` — uncompressed final accuracy minus the
+  cell's (deterministic fused-scan trajectories; target <= 0.05 abs at
+  ``topk_frac = 0.1`` on ``compressed-uplink``).
+
+Each record is emitted twice: a CSV row (harness contract
+``name,us_per_call,derived``; value = microseconds per engine round) and a
+machine-readable ``#json `` line (CI uploads these as
+``BENCH_compress.json``).
+
+JSON record schema (one line per scenario x grid cell):
+
+    {"bench": "compress",
+     "scenario": str,              # world (registry name)
+     "mode": "none" | "topk" | "topk-int8",
+     "topk_frac": float,           # 1.0 for the uncompressed reference
+     "setting": str,               # quick | full
+     "n_users": int, "n_bs": int, "n_rounds": int,
+     "us_per_round": float, "rounds_per_sec": float,
+     "uplink_mbit_per_client": float,      # nominal per-round s_k
+     "uplink_compression_ratio": float,    # s_k / dense S
+     "bytes_reduction_vs_uncompressed": float,   # 1 / ratio
+     "sim_wall_s": float,          # simulated seconds covered
+     "budget_s": float,            # shared accuracy budget (uncompressed/2)
+     "final_acc": float,
+     "acc_at_budget": float,
+     "acc_drop_vs_uncompressed": float}    # reference rows carry 0.0
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import emit
+from repro.core.types import WirelessConfig
+from repro.fl import FLConfig, FLSimulation
+from repro.fl.rounds import accuracy_at_budget
+from repro.kernels import compress_topk as ct
+from repro.models.cnn import CNNConfig
+
+# (n_users, n_bs, n_train, local_epochs, batch_size, n_rounds, cnn_cfg)
+QUICK = (32, 8, 320, 1, 8, 20,
+         CNNConfig(height=28, width=28, channels=1, c1=4, c2=8, hidden=16))
+FULL = (50, 8, 1000, 2, 10, 20, None)
+
+SCENARIO_NAMES = ("paper-default", "compressed-uplink")
+
+# the topk x value-dtype grid; (None, 1.0) is the uncompressed reference
+# and doubles as the (1.0, f32) corner
+GRID = ((None, 1.0), ("topk-int8", 1.0),
+        ("topk", 0.1), ("topk-int8", 0.1),
+        ("topk", 0.01), ("topk-int8", 0.01))
+
+
+def _make_sim(scenario, n_users, n_bs, n_train, epochs, batch, cnn_cfg,
+              compress, topk_frac) -> FLSimulation:
+    cfg = FLConfig(scheduler="dagsa_jit", scenario=scenario,
+                   wireless=WirelessConfig(n_users=n_users, n_bs=n_bs),
+                   n_train=n_train, n_test=100, local_epochs=epochs,
+                   batch_size=batch, eval_every=1, seed=0, cnn=cnn_cfg,
+                   compress=compress,
+                   topk_frac=topk_frac if compress else None)
+    return FLSimulation(cfg)
+
+
+def _time_steps(sim, n_steps: int) -> float:
+    """Best-of-3 seconds per engine round on an already-compiled sim."""
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        sim.run(n_steps)
+        best = min(best, time.perf_counter() - t0)
+    return best / n_steps
+
+
+def run(quick: bool = True) -> None:
+    setting = "quick" if quick else "full"
+    n_users, n_bs, n_train, epochs, batch, n_rounds, cnn_cfg = \
+        QUICK if quick else FULL
+
+    for scenario in SCENARIO_NAMES:
+        ref_acc = None
+        budget = None
+        for mode, frac in GRID:
+            sim = _make_sim(scenario, n_users, n_bs, n_train, epochs,
+                            batch, cnn_cfg, mode, frac)
+            recs = sim.run(n_rounds, mode="fused")   # compile + learn
+            sec = _time_steps(sim, n_rounds)
+            ratio = (ct.compression_ratio(sim.params, frac,
+                                          mode == "topk-int8")
+                     if mode else 1.0)
+            if mode is None:             # the grid starts on the reference
+                ref_acc = recs[-1].test_acc
+                budget = recs[-1].wall_clock / 2
+            rec = {
+                "bench": "compress", "scenario": scenario,
+                "mode": mode or "none", "topk_frac": frac,
+                "setting": setting, "n_users": n_users, "n_bs": n_bs,
+                "n_rounds": n_rounds,
+                "us_per_round": sec * 1e6, "rounds_per_sec": 1.0 / sec,
+                "uplink_mbit_per_client":
+                    sim.wireless.model_mbit * ratio,
+                "uplink_compression_ratio": ratio,
+                "bytes_reduction_vs_uncompressed": 1.0 / ratio,
+                "sim_wall_s": recs[-1].wall_clock, "budget_s": budget,
+                "final_acc": recs[-1].test_acc,
+                "acc_at_budget": accuracy_at_budget(recs, budget),
+                "acc_drop_vs_uncompressed": ref_acc - recs[-1].test_acc,
+            }
+            emit(f"compress_{scenario}_{rec['mode']}_{frac}_{setting}",
+                 rec["us_per_round"],
+                 f"final_acc={rec['final_acc']:.3f} "
+                 f"acc_drop={rec['acc_drop_vs_uncompressed']:+.3f} "
+                 f"bytes_x={rec['bytes_reduction_vs_uncompressed']:.1f} "
+                 f"uplink={rec['uplink_mbit_per_client']:.3f}Mbit")
+            print(f"#json {json.dumps(rec)}")

@@ -28,6 +28,8 @@ BENCHES = [
      "failure-aware scheduling under injected faults"),
     ("async", "benchmarks.bench_async",
      "buffered-async vs sync wall-clock-to-accuracy"),
+    ("compress", "benchmarks.bench_compress",
+     "compressed-uplink accuracy vs uplink-bytes trade-off"),
     ("roofline", "benchmarks.bench_roofline", "dry-run roofline terms"),
 ]
 

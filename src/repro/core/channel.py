@@ -69,13 +69,24 @@ def spectral_efficiency(snr: jnp.ndarray) -> jnp.ndarray:
     return jnp.log2(1.0 + snr)
 
 
-def bandwidth_time_coeff(snr: jnp.ndarray, cfg: WirelessConfig) -> jnp.ndarray:
-    """c_{i,k} = S / log2(1+snr_{i,k})  [MHz * s].
+def bandwidth_time_coeff(snr: jnp.ndarray, cfg: WirelessConfig,
+                         payload_mbit: jnp.ndarray | None = None
+                         ) -> jnp.ndarray:
+    """c_{i,k} = s_i / log2(1+snr_{i,k})  [MHz * s].
 
     Upload latency of user i on BS k with bandwidth B is c_{i,k} / B; this
     coefficient is the only thing the bandwidth solver needs per user.
+    ``payload_mbit`` optionally supplies a PER-USER uplink payload s_i
+    ([N], Mbit) — the compressed-uplink seam (docs/COMPRESSION.md): scaling
+    the coefficient rows is all Eq. (1)/(3)/(11) need, because every
+    downstream consumer reads payload only through c_{i,k}.  ``None``
+    keeps the uniform ``cfg.model_mbit`` exactly (no scaling op is
+    emitted, so compression-off graphs are unchanged).
     """
-    return cfg.model_mbit / jnp.maximum(spectral_efficiency(snr), 1e-9)
+    se = jnp.maximum(spectral_efficiency(snr), 1e-9)
+    if payload_mbit is None:
+        return cfg.model_mbit / se
+    return jnp.asarray(payload_mbit, jnp.float32)[:, None] / se
 
 
 # ------------------------------------------------- compact channel storage --
@@ -182,16 +193,26 @@ def dequantize_snr_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return jnp.power(10.0, db / 10.0)
 
 
-def sample_tcomp(key: jax.Array, cfg: WirelessConfig) -> jnp.ndarray:
-    """Per-user local computation latency ~ U(tmin, tmax) (paper §IV)."""
-    return jax.random.uniform(key, (cfg.n_users,), minval=cfg.tcomp_min_s,
-                              maxval=cfg.tcomp_max_s)
+def sample_tcomp(key: jax.Array, cfg: WirelessConfig,
+                 scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Per-user local computation latency ~ U(tmin, tmax) (paper §IV).
+
+    ``scale`` optionally stretches each user's draw by a per-user compute
+    multiplier ([N]; the device-heterogeneity knob, docs/COMPRESSION.md) —
+    ``None`` emits the homogeneous-fleet graph unchanged.
+    """
+    t = jax.random.uniform(key, (cfg.n_users,), minval=cfg.tcomp_min_s,
+                           maxval=cfg.tcomp_max_s)
+    return t if scale is None else t * scale
 
 
 def make_problem(key: jax.Array, state: MobilityState, cfg: WirelessConfig,
                  part_counts: jnp.ndarray, round_idx,
                  bs_bw: jnp.ndarray | None = None,
-                 shadow_db: jnp.ndarray | None = None) -> SchedulingProblem:
+                 shadow_db: jnp.ndarray | None = None,
+                 tcomp_scale: jnp.ndarray | None = None,
+                 power_scale: jnp.ndarray | None = None,
+                 payload_mbit: jnp.ndarray | None = None) -> SchedulingProblem:
     """Assemble one round's SchedulingProblem from the physical state.
 
     ``necessary`` implements Eq. (8g): user i must participate this round if
@@ -201,11 +222,19 @@ def make_problem(key: jax.Array, state: MobilityState, cfg: WirelessConfig,
     marks users necessary one round late and can never mark anyone at round
     0.)  ``shadow_db`` optionally stacks a [N, M] shadowing field (dB) on
     top of the Rayleigh fading (scenario engine's ``shadowing`` option).
+
+    Device-heterogeneity / compression hooks (all ``None`` = the exact
+    homogeneous full-payload graph): ``tcomp_scale`` [N] stretches compute
+    latency, ``power_scale`` [N] scales the LINEAR uplink SNR (a per-user
+    transmit-power deficit), ``payload_mbit`` [N] replaces the uniform
+    Eq. (1) payload S in the bandwidth-time coefficients.
     """
     k_snr, k_tc = jax.random.split(key)
     snr = sample_snr(k_snr, state.distances(), cfg, shadow_db=shadow_db)
-    tcomp = sample_tcomp(k_tc, cfg)
-    coeff = bandwidth_time_coeff(snr, cfg)
+    if power_scale is not None:
+        snr = snr * power_scale[:, None]
+    tcomp = sample_tcomp(k_tc, cfg, scale=tcomp_scale)
+    coeff = bandwidth_time_coeff(snr, cfg, payload_mbit=payload_mbit)
     if bs_bw is None:
         bs_bw = jnp.full((cfg.n_bs,), cfg.bs_bandwidth_mhz)
     # works for both host ints and traced round counters (fused round scan)
@@ -214,4 +243,5 @@ def make_problem(key: jax.Array, state: MobilityState, cfg: WirelessConfig,
     min_participants = int(math.ceil(cfg.rho2 * cfg.n_users))
     return SchedulingProblem(snr=snr, tcomp=tcomp, bs_bw=bs_bw, coeff=coeff,
                              necessary=necessary,
-                             min_participants=min_participants)
+                             min_participants=min_participants,
+                             payload_mbit=payload_mbit)

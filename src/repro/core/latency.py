@@ -4,6 +4,17 @@ variant the fault model introduces.
 t_round = max_i a_i (tcomp_i + t_up_i);  t_up_i = c_{i,k(i)} / B_i.
 Download latency is negligible (paper §II-C) and omitted, matching Eq. (9).
 
+Per-user payload (compressed uplink, docs/COMPRESSION.md): the paper's
+Eq. (1) uses one constant payload S for every user; with update compression
+user i uploads s_i Mbit instead, so t_up_i = s_i / (B_i log2(1+snr)) —
+which is exactly c_{i,k} / B_i once c_{i,k} is built from s_i
+(:func:`repro.core.channel.bandwidth_time_coeff` with ``payload_mbit``).
+Every function below therefore already handles per-user payloads with no
+per-user branch: Eq. (3) maxes over the same t_user, and the Eq. (11)
+bandwidth solver consumes the scaled coefficients untouched (it never
+reads S directly).  ``uplink_bits`` is the payload-accounting helper the
+goodput metric and benches share.
+
 Under a round deadline T_dl (repro.fl.faults.FaultSpec.deadline_s) the
 server stops waiting: t_round = min(T_dl, max_i a_i (tcomp_i + t_up_i)),
 and clients whose realized latency exceeds T_dl are dropped from the
@@ -15,6 +26,18 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.types import ScheduleResult, SchedulingProblem
+
+
+def uplink_bits(delivered, payload_mbit) -> jnp.ndarray:
+    """Total uplink traffic (bits) of one round's delivered updates.
+
+    ``delivered`` [N] bool; ``payload_mbit`` a scalar (uniform payload) or
+    [N] per-user s_k.  Mbit -> bits is 1e6 (decimal megabit, matching
+    WirelessConfig.model_mbit's convention).
+    """
+    p = jnp.asarray(payload_mbit, jnp.float32)
+    return jnp.sum(delivered.astype(jnp.float32)
+                   * jnp.broadcast_to(p, delivered.shape)) * 1e6
 
 
 def upload_latency(problem: SchedulingProblem,

@@ -38,6 +38,15 @@ BS_LAYOUTS = ("grid", "uniform")
 # repro.fl.rounds).
 AGGREGATIONS = ("single", "hierarchical")
 
+# Uplink update-compression modes (docs/COMPRESSION.md): top-k magnitude
+# sparsification, optionally + int8 stochastic-rounding quantization.
+# None = full f32 payload (the paper's constant S).
+COMPRESS_MODES = ("topk", "topk-int8")
+
+# Non-IID data partitioners (repro.fl.partition): the paper's label-shard
+# split or a per-user Dirichlet(alpha) class mixture.
+PARTITIONS = ("shard", "dirichlet")
+
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
@@ -72,6 +81,22 @@ class ScenarioSpec:
     # -- FL aggregation architecture ---------------------------------------
     aggregation: str = "single"         # single | hierarchical
     tau_global: int = 1                 # global sync period (hierarchical)
+    # -- device heterogeneity ----------------------------------------------
+    # Per-user static capability spreads (docs/COMPRESSION.md).  Each user
+    # draws u ~ U[0, 1) once (fixed across rounds — a slow device is always
+    # slow): compute latency stretches by compute_spread**u (so the fleet
+    # spans a 1..compute_spread range) and uplink SNR scales by
+    # 10^(-power_spread_db * u / 10) (a transmit-power deficit of up to
+    # power_spread_db dB).  The defaults (1.0 / 0.0) are IEEE-exact no-ops.
+    compute_spread: float = 1.0
+    power_spread_db: float = 0.0
+    # -- data partition ----------------------------------------------------
+    partition: str = "shard"            # shard | dirichlet
+    dirichlet_alpha: Optional[float] = None   # Dir(alpha) concentration
+                                              # (REQUIRED iff dirichlet)
+    # -- uplink compression ------------------------------------------------
+    compress: Optional[str] = None      # None | topk | topk-int8
+    topk_frac: float = 1.0              # kept fraction per leaf (0, 1]
     # -- fault model -------------------------------------------------------
     # A repro.fl.faults.FaultSpec (frozen/hashable) or None for the perfect
     # world.  Typed loosely because fl.faults imports this module to
@@ -104,6 +129,30 @@ class ScenarioSpec:
             raise ValueError("tau_global only applies to "
                              "aggregation='hierarchical'; it would silently "
                              "do nothing on a single-tier scenario")
+        if self.compute_spread < 1.0:
+            raise ValueError("compute_spread is the slowest/fastest device "
+                             "ratio; it must be >= 1.0")
+        if self.power_spread_db < 0.0:
+            raise ValueError("power_spread_db must be >= 0 (a deficit)")
+        if self.partition not in PARTITIONS:
+            raise ValueError(f"unknown partition {self.partition!r}; "
+                             f"choose from {PARTITIONS}")
+        if self.partition == "dirichlet":
+            if self.dirichlet_alpha is None or not self.dirichlet_alpha > 0:
+                raise ValueError("partition='dirichlet' needs "
+                                 "dirichlet_alpha > 0")
+        elif self.dirichlet_alpha is not None:
+            raise ValueError("dirichlet_alpha only applies to "
+                             "partition='dirichlet'; it would silently do "
+                             "nothing")
+        if self.compress is not None and self.compress not in COMPRESS_MODES:
+            raise ValueError(f"unknown compress mode {self.compress!r}; "
+                             f"choose from {COMPRESS_MODES}")
+        if not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError("topk_frac must be in (0, 1]")
+        if self.compress is None and self.topk_frac != 1.0:
+            raise ValueError("topk_frac only applies with a compress mode; "
+                             "it would silently do nothing")
         assert self.speed_mps >= 0.0 and self.pause_s >= 0.0
 
     # ------------------------------------------------------------- derive --
@@ -207,6 +256,27 @@ _BUILTINS = (
         n_bs=3, bs_layout="uniform",
         description="Hierarchical FL under sparse coverage: few large "
                     "cells, rare handovers, strongly non-IID edge models."),
+    # Heterogeneous-device / compressed-uplink worlds (ROADMAP item 4).
+    ScenarioSpec(
+        name="hetero-compute", figure="device heterogeneity",
+        compute_spread=4.0, power_spread_db=6.0,
+        description="ShuffleFL-style device spread: compute latency spans "
+                    "1-4x and transmit power a 6 dB deficit across the "
+                    "fleet, both fixed per user — stragglers are devices, "
+                    "not draws."),
+    ScenarioSpec(
+        name="non-iid-pathological", figure="data heterogeneity",
+        partition="dirichlet", dirichlet_alpha=0.1,
+        description="Dirichlet(0.1) per-user class mixtures: most users "
+                    "hold 1-2 classes, the pathological non-IID regime "
+                    "where selection fairness (Eq. 8g) matters most."),
+    ScenarioSpec(
+        name="compressed-uplink", figure="Eq. (1) payload",
+        compress="topk-int8", topk_frac=0.1,
+        description="Top-10% magnitude sparsification + int8 stochastic "
+                    "rounding on every uplink: ~8x smaller s_k in Eq. (1), "
+                    "so bandwidth allocation and scheduling see a much "
+                    "cheaper fleet (docs/COMPRESSION.md)."),
 )
 for _spec in _BUILTINS:
     register_scenario(_spec)

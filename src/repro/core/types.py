@@ -54,6 +54,13 @@ class SchedulingProblem:
               update is actually delivered (outage/crash hazard, see
               repro.fl.faults.delivery_probability).  None in the perfect
               world; only failure-aware schedulers (``dagsa-r``) read it.
+      payload_mbit: optional [N] per-user uplink payload s_k (Mbit) when
+              update compression is on (docs/COMPRESSION.md).  ``coeff``
+              is ALWAYS already payload-scaled — schedulers and the
+              Eq. (11) solver consume coeff only — so this field is
+              bookkeeping for anything that wants the raw s_k (goodput
+              accounting, payload-aware policies).  None means every user
+              uploads the full ``cfg.model_mbit``.
     """
 
     snr: jnp.ndarray
@@ -63,6 +70,7 @@ class SchedulingProblem:
     necessary: jnp.ndarray
     min_participants: int
     p_deliver: jnp.ndarray | None = None
+    payload_mbit: jnp.ndarray | None = None
 
 
 @dataclasses.dataclass

@@ -1,13 +1,23 @@
-"""Non-IID label-shard partitioner (paper §IV).
+"""Non-IID partitioners: label-shard (paper §IV) + Dirichlet.
 
 "We first sort the dataset according to labels.  For data with same label, it
 is divided into 10 shards, and the whole dataset is divided into 100 shards.
 Each user is assigned 2 shards randomly."  Generalized to N users x s shards.
+
+``dirichlet_partition`` is the standard smooth-knob alternative: each user
+draws a class distribution from Dir(alpha) and samples a fixed-size local
+dataset from it (small alpha -> near-pathological single-class users, large
+alpha -> IID).  Fixed ``samples_per_user`` keeps every shape static so the
+partition composes with the vmapped multi-seed sweeps.
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
+
+PARTITION_KINDS = ("shard", "dirichlet")
 
 
 def shard_partition(key: jax.Array, labels: jnp.ndarray, n_users: int,
@@ -16,7 +26,10 @@ def shard_partition(key: jax.Array, labels: jnp.ndarray, n_users: int,
 
     Sort-by-label -> equal shards -> each user gets ``shards_per_user``
     random shards.  Truncates the tail so every user has the same |D_i|
-    (the paper assumes equal local dataset sizes).
+    (the paper assumes equal local dataset sizes); the truncation is spread
+    evenly across the label-sorted order so no single class absorbs all the
+    dropped samples.  When the dataset divides evenly the spread is the
+    identity, so divisible configs keep their exact historical partitions.
     """
     n = labels.shape[0]
     n_shards = n_users * shards_per_user
@@ -24,8 +37,40 @@ def shard_partition(key: jax.Array, labels: jnp.ndarray, n_users: int,
     if shard_size == 0:
         raise ValueError(f"dataset of {n} too small for {n_shards} shards")
     order = jnp.argsort(labels, stable=True)
-    order = order[: n_shards * shard_size]
+    n_keep = n_shards * shard_size
+    # host-side exact integer spread: position i keeps sorted sample
+    # floor(i * n / n_keep); identity when n == n_keep
+    keep = np.arange(n_keep) * n // n_keep
+    order = order[jnp.asarray(keep)]
     shards = order.reshape(n_shards, shard_size)
     perm = jax.random.permutation(key, n_shards)
     shards = shards[perm].reshape(n_users, shards_per_user * shard_size)
     return shards
+
+
+def dirichlet_partition(key: jax.Array, labels: jnp.ndarray, n_users: int,
+                        samples_per_user: int, alpha: float,
+                        n_classes: int = 10) -> jnp.ndarray:
+    """Returns [n_users, samples_per_user] index matrix into the dataset.
+
+    Each user i draws class proportions p_i ~ Dir(alpha * 1_C), then samples
+    ``samples_per_user`` dataset indices with replacement, weighting sample j
+    by p_i[label_j].  Replacement keeps shapes static (sweep-compatible) and
+    matches the paper's equal-|D_i| assumption; classes a user draws zero
+    mass for are effectively excluded, so small alpha yields the
+    pathological few-classes-per-user regime.
+    """
+    if samples_per_user <= 0:
+        raise ValueError(f"samples_per_user must be positive, "
+                         f"got {samples_per_user}")
+    k_prop, k_draw = jax.random.split(key)
+    props = jax.random.dirichlet(
+        k_prop, alpha * jnp.ones((n_classes,), jnp.float32), (n_users,))
+    # per-user log-weight over SAMPLES: sample j carries its class's mass
+    logits = jnp.log(jnp.maximum(props[:, labels], 1e-30))     # [U, n]
+    draw_keys = jax.random.split(k_draw, n_users)
+    idx = jax.vmap(
+        lambda kk, lg: jax.random.categorical(kk, lg,
+                                              shape=(samples_per_user,))
+    )(draw_keys, logits)
+    return idx

@@ -73,14 +73,15 @@ import numpy as np
 from repro.core import (MobilityState, ParticipationState, WirelessConfig,
                         channel, dagsa_jit, latency, mobility,
                         scheduler as sched)
-from repro.core.scenario import AGGREGATIONS, get_scenario
+from repro.core.scenario import (AGGREGATIONS, COMPRESS_MODES, PARTITIONS,
+                                 get_scenario)
 from repro.core.types import (ClientState, RoundState, ScheduleResult,
                               SchedulingProblem, ServerState, WorldState)
 from repro.data import make_dataset
 from repro.fl import client as fl_client
 from repro.fl import faults as fl_faults
 from repro.fl import server as fl_server
-from repro.fl.partition import shard_partition
+from repro.fl.partition import dirichlet_partition, shard_partition
 from repro.models import cnn
 
 PyTree = Any
@@ -182,6 +183,20 @@ class FLConfig:
                                         # updates); default n_users, which
                                         # can never overflow (each client
                                         # has at most one update in flight)
+    compress: Optional[str] = None   # uplink update compression mode
+                                     # ("topk" | "topk-int8"); None inherits
+                                     # the scenario's choice (default off).
+                                     # docs/COMPRESSION.md
+    topk_frac: Optional[float] = None   # fraction of each leaf's entries a
+                                        # client uploads; None inherits the
+                                        # scenario's (default 1.0 = dense)
+    partition: Optional[str] = None  # data split: "shard" (paper §IV label
+                                     # shards) | "dirichlet" (per-user label
+                                     # mixture ~ Dir(alpha)); None inherits
+                                     # the scenario's choice (default shard)
+    dirichlet_alpha: Optional[float] = None   # Dirichlet concentration;
+                                              # REQUIRED when the resolved
+                                              # partition is "dirichlet"
 
     def __post_init__(self):
         if self.compute not in COMPUTE_MODES:
@@ -233,6 +248,28 @@ class FLConfig:
             raise ValueError("staleness_alpha must be >= 0")
         if self.buffer_size is not None and self.buffer_size < 1:
             raise ValueError("buffer_size must be >= 1")
+        if self.compress is not None and self.compress not in COMPRESS_MODES:
+            raise ValueError(f"unknown compress mode {self.compress!r}; "
+                             f"choose from {COMPRESS_MODES}")
+        if self.topk_frac is not None:
+            if not 0.0 < self.topk_frac <= 1.0:
+                raise ValueError("topk_frac must be in (0, 1]")
+            if self.compress is None and self.scenario is None:
+                raise ValueError(
+                    f"topk_frac={self.topk_frac} only applies with a "
+                    f"compress mode (or a scenario that sets one); it "
+                    f"would silently do nothing")
+        if self.partition is not None and self.partition not in PARTITIONS:
+            raise ValueError(f"unknown partition {self.partition!r}; "
+                             f"choose from {PARTITIONS}")
+        if self.dirichlet_alpha is not None:
+            if not self.dirichlet_alpha > 0.0:
+                raise ValueError("dirichlet_alpha must be > 0")
+            if self.partition == "shard":
+                raise ValueError(
+                    f"dirichlet_alpha={self.dirichlet_alpha} only applies "
+                    f"with partition='dirichlet'; it would silently do "
+                    f"nothing")
 
 
 @dataclasses.dataclass
@@ -258,13 +295,38 @@ class RoundRecord:
                               # this tick (-1 on synchronous runs)
 
 
+def _compress_updates(ref_params: PyTree, client_params: PyTree,
+                      compress: str, topk_frac: float, key,
+                      fedavg_backend: str):
+    """Client side of the compressed uplink (docs/COMPRESSION.md): deltas
+    w.r.t. the reference model -> top-k (+ optional int8 stochastic
+    rounding) codes.  Returns ``(codes, scales, finite)`` where ``finite``
+    [N] marks clients whose RAW update was all-finite — the compressor
+    screens non-finite entries to 0, so the caller must drop the screened
+    clients' Eq. (2) weight to keep the uncompressed exclusion semantics.
+
+    ``ref_params`` leaves may be the shared global model ([d...]) or
+    per-client references ([N, d...], the hierarchical serving-edge init).
+    """
+    from repro.kernels import compress_topk as ct
+    delta = jax.tree.map(
+        lambda c, g: c - (g if g.ndim == c.ndim else g[None]).astype(c.dtype),
+        client_params, ref_params)
+    finite = fl_server.finite_update_mask(delta)
+    codes, scales = ct.compress_delta_tree(
+        delta, topk_frac, quantize=(compress == "topk-int8"), key=key,
+        backend="pallas" if fedavg_backend == "pallas" else "jax")
+    return codes, scales, finite
+
+
 def train_and_aggregate(loss_fn, params: PyTree, x_clients, y_clients, keys,
                         selected, data_sizes, *, epochs: int, batch_size: int,
                         lr: float, compute: str = "full",
                         select_cap: int | None = None,
                         fedavg_backend: str = "jax",
                         delivered=None, corrupt=None, corrupt_mode_id=0,
-                        corrupt_scale=1.0, clip_norm=None) -> PyTree:
+                        corrupt_scale=1.0, clip_norm=None, compress=None,
+                        topk_frac: float = 1.0, compress_key=None) -> PyTree:
     """One round of the data plane: local SGD + masked FedAvg (Eq. 2).
 
     ``compute="full"`` trains every client and masks at aggregation (the
@@ -280,6 +342,13 @@ def train_and_aggregate(loss_fn, params: PyTree, x_clients, y_clients, keys,
     post-SGD (see :func:`repro.fl.faults.corrupt_updates`); ``clip_norm``
     enables the server's norm-clip defense.  All default to the perfect
     world.
+
+    Compressed uplink (``compress`` in :data:`~repro.core.scenario.
+    COMPRESS_MODES`): clients upload top-k (+ optional int8) codes of their
+    update DELTA and the server folds decompression into the streaming
+    Eq. (2) reduction (:mod:`repro.kernels.compress_topk`) — the dense
+    [N, model] f32 update tensor never re-materialises on the pallas
+    backend.  ``compress=None`` compiles the exact uncompressed graph.
     """
     if compute == "selected":
         n = x_clients.shape[0]
@@ -303,6 +372,18 @@ def train_and_aggregate(loss_fn, params: PyTree, x_clients, y_clients, keys,
     if corr is not None:
         client_params = fl_faults.corrupt_updates(
             client_params, corr, corrupt_mode_id, corrupt_scale)
+    if compress is not None:
+        codes, scales, finite = _compress_updates(
+            params, client_params, compress, topk_frac, compress_key,
+            fedavg_backend)
+        sel = sel & finite
+        if fedavg_backend == "pallas":
+            from repro.kernels.compress_topk import fedavg_decompress_reduce
+            return fedavg_decompress_reduce(params, codes, scales, sel,
+                                            sizes, clip_norm=clip_norm)
+        from repro.kernels.ref import fedavg_decompress_reduce
+        return fedavg_decompress_reduce(params, codes, scales, sel, sizes,
+                                        clip_norm=clip_norm)
     if fedavg_backend == "pallas":
         from repro.kernels.fedavg_reduce import fedavg_reduce
         return fedavg_reduce(params, client_params, sel, sizes,
@@ -449,7 +530,8 @@ def async_round_tick(loss_fn, params: PyTree, queue: tuple, x_clients,
                      batch_size: int, lr: float, fedavg_backend: str = "jax",
                      compute: str = "full", select_cap: int | None = None,
                      corrupt=None, corrupt_mode_id=0, corrupt_scale=1.0,
-                     clip_norm=None) -> tuple:
+                     clip_norm=None, compress=None, topk_frac: float = 1.0,
+                     compress_key=None) -> tuple:
     """One buffered-async tick of the data plane (shared by the engine and
     the batched learning-curve sweep).
 
@@ -462,6 +544,13 @@ def async_round_tick(loss_fn, params: PyTree, queue: tuple, x_clients,
     advances the event queue, and applies the staleness-weighted Eq. (2)
     over whatever landed this tick.  Fully traced; ``r`` may be a host int
     or the fused scan's counter.
+
+    Compressed uplink: the lossy compress->decompress round-trip happens AT
+    DISPATCH (clients upload codes; the queue parks exactly what the server
+    will decode), so delivery reuses the uncompressed staleness-weighted
+    reduction unchanged.  Clients whose raw update went non-finite are not
+    dispatched (the compressor would silently zero them while keeping their
+    Eq. (2) weight — matching the synchronous exclusion semantics instead).
 
     Returns ``(params, queue, delivered, diag)``.
     """
@@ -487,6 +576,22 @@ def async_round_tick(loss_fn, params: PyTree, queue: tuple, x_clients,
     else:
         raise ValueError(f"unknown compute mode {compute!r}; "
                          f"choose from {COMPUTE_MODES}")
+    if compress is not None:
+        codes, scales, finite = _compress_updates(
+            params, client_params, compress, topk_frac, compress_key,
+            fedavg_backend)
+        from repro.kernels.compress_topk import decompress_tree
+        client_params = jax.tree.map(
+            lambda g, d: g[None] + d.astype(g.dtype), params,
+            decompress_tree(codes, scales))
+        if admit_idx is None:
+            dispatch = dispatch & finite
+        else:
+            # scatter the [cap] finite rows back to the [N] dispatch mask
+            # (padding duplicates carry identical rows, so last-write-wins
+            # scatters the same value)
+            dispatch = dispatch & jnp.ones_like(dispatch).at[admit_idx].set(
+                finite, mode="drop")
     now = jnp.asarray(r, jnp.float32) * jnp.float32(tick_s)
     comp_time = now + t_user
     tick_end = now + jnp.float32(tick_s)
@@ -518,7 +623,8 @@ def hierarchical_round(loss_fn, global_params: PyTree, edge_params: PyTree,
                        select_cap: int | None = None,
                        fedavg_backend: str = "jax",
                        delivered=None, corrupt=None, corrupt_mode_id=0,
-                       corrupt_scale=1.0, clip_norm=None):
+                       corrupt_scale=1.0, clip_norm=None, compress=None,
+                       topk_frac: float = 1.0, compress_key=None):
     """One hierarchical data-plane round (arXiv 2108.09103's architecture).
 
     Each client pulls the edge model of its serving (camped) cell — so a
@@ -553,14 +659,16 @@ def hierarchical_round(loss_fn, global_params: PyTree, edge_params: PyTree,
         n = x_clients.shape[0]
         cap = n if select_cap is None else min(int(select_cap), n)
         idx = fl_client.topk_selected_indices(selected, cap)
-        init = fl_client.gather_client_tree(edge_params, serving[idx])
+        serving_r = serving[idx]
+        init = fl_client.gather_client_tree(edge_params, serving_r)
         client_params = fl_client.fleet_local_sgd_per_client(
             loss_fn, init, x_clients[idx], y_clients[idx], keys[idx],
             epochs=epochs, batch_size=batch_size, lr=lr)
         assign_r, sizes = assign_eff[idx], data_sizes[idx]
         corr = None if corrupt is None else corrupt[idx]
     elif compute == "full":
-        init = fl_client.gather_client_tree(edge_params, serving)
+        serving_r = serving
+        init = fl_client.gather_client_tree(edge_params, serving_r)
         client_params = fl_client.fleet_local_sgd_per_client(
             loss_fn, init, x_clients, y_clients, keys,
             epochs=epochs, batch_size=batch_size, lr=lr)
@@ -573,7 +681,27 @@ def hierarchical_round(loss_fn, global_params: PyTree, edge_params: PyTree,
             client_params, corr, corrupt_mode_id, corrupt_scale)
 
     # edge Eq. (2): every BS aggregates its users in one segment-reduce
-    if fedavg_backend == "pallas":
+    if compress is not None:
+        # compressed uplink: deltas vs the SERVING edge model (what the
+        # client trained from), decoded into the ASSIGNED BS's aggregation
+        # — the [N, model] client tensor never reconstructs densely on the
+        # pallas backend (docs/COMPRESSION.md)
+        codes, scales, finite = _compress_updates(
+            init, client_params, compress, topk_frac, compress_key,
+            fedavg_backend)
+        assign_r = assign_r & finite[:, None]
+        if fedavg_backend == "pallas":
+            from repro.kernels.compress_topk import \
+                fedavg_decompress_segment_reduce
+            edge_params = fedavg_decompress_segment_reduce(
+                edge_params, codes, scales, assign_r, serving_r, sizes,
+                clip_norm=clip_norm)
+        else:
+            from repro.kernels.ref import fedavg_decompress_segment_reduce
+            edge_params = fedavg_decompress_segment_reduce(
+                edge_params, codes, scales, assign_r, serving_r, sizes,
+                clip_norm=clip_norm)
+    elif fedavg_backend == "pallas":
         from repro.kernels.fedavg_reduce import fedavg_segment_reduce
         edge_params = fedavg_segment_reduce(edge_params, client_params,
                                             assign_r, sizes,
@@ -643,6 +771,10 @@ class RoundPlan:
     user_chunk: int | None = None
     channel_dtype: str = "f32"
     world: str = "engine"
+    compress: str | None = None     # uplink compression mode (COMPRESS_MODES)
+                                    # — STATIC: None compiles the exact
+                                    # uncompressed graph
+    topk_frac: float = 1.0          # fraction of entries uploaded per leaf
 
 
 def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
@@ -692,6 +824,41 @@ def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
     fp = faults
     n = w.n_users
 
+    # -- compressed uplink (STATIC; docs/COMPRESSION.md): the per-user
+    # payload s_k = ratio * S scales the Eq. (1)/(3) bandwidth-time
+    # coefficients; compress=None threads payload=None and compiles the
+    # exact uncompressed graph (the faults_on gating pattern).
+    compress_on = plan.compress is not None
+    if compress_on:
+        from repro.kernels import compress_topk as _ct
+        up_mbit = w.model_mbit * _ct.compression_ratio(
+            params0, plan.topk_frac, plan.compress == "topk-int8")
+    else:
+        up_mbit = w.model_mbit
+    payload0 = jnp.full((n,), up_mbit, jnp.float32) if compress_on else None
+
+    # -- per-user device heterogeneity: one FIXED draw u ~ U[0,1) per user
+    # stretches compute by spread**u and scales the uplink PSD by
+    # -spread_db * u dB.  The engine world gates STATICALLY on the scenario
+    # knobs (defaults compile the exact homogeneous graph); the sweep world
+    # applies the traced knobs unconditionally — the defaults 1.0 / 0.0 dB
+    # are IEEE-exact no-ops (x * 1.0**u == x, 10**(-0.0) == 1.0).
+    if plan.world == "engine":
+        c_spread = scenario.get("compute_spread", 1.0)
+        p_spread_db = scenario.get("power_spread_db", 0.0)
+        hetero_on = c_spread != 1.0 or p_spread_db != 0.0
+    else:
+        c_spread = scenario["compute_spread"]
+        p_spread_db = scenario["power_spread_db"]
+        hetero_on = True
+    if hetero_on:
+        u_het = jax.random.uniform(jax.random.fold_in(k_shadow, 1), (n,))
+        het_tcomp = jnp.asarray(c_spread, jnp.float32) ** u_het
+        het_power = 10.0 ** (-jnp.asarray(p_spread_db, jnp.float32)
+                             * u_het / 10.0)
+    else:
+        het_tcomp = het_power = None
+
     if need_prev and prev_bs0 is None:
         prev_bs0 = jnp.full((n,), -1, jnp.int32)
     if hier and edge_params0 is None:
@@ -739,7 +906,10 @@ def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
                     channel.sample_shadowing(k_shadow, pos, bs_pos, w,
                                              sigma_db=1.0)
             prob = channel.make_problem(k_prob, mstate, w, counts, r,
-                                        bs_bw=bs_bw, shadow_db=shadow_db)
+                                        bs_bw=bs_bw, shadow_db=shadow_db,
+                                        tcomp_scale=het_tcomp,
+                                        power_scale=het_power,
+                                        payload_mbit=payload0)
             snr_store, snr_scale = prob.snr, None
             if need_prev:
                 # geometry the hierarchy / fault layer observes (CSE'd
@@ -759,24 +929,33 @@ def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
             # same k_shadow every round -> the field is consistent in time
             dist, shadow_db = channel.dist_and_shadow(
                 pos, bs_pos, p["shadow_sigma"], k_shadow, w, plan.user_chunk)
+            # device PSD spread scales SNR BEFORE encoding, so int8/bf16
+            # channel codes carry the heterogeneous link (exact no-op at
+            # the 0 dB default: het_power == 1.0 elementwise)
+            snr_raw = channel.sample_snr(k_snr, dist, w,
+                                         shadow_db=shadow_db) \
+                * het_power[:, None]
             snr_store, snr_scale, snr_lin = channel.encode_channel(
-                channel.sample_snr(k_snr, dist, w, shadow_db=shadow_db),
-                plan.channel_dtype)
+                snr_raw, plan.channel_dtype)
             if plan.channel_dtype == "int8":
                 # Eq. (11) needs real coefficients — derive from the
                 # dequantised plane (f32; the codes carry only ranks+dB)
-                coeff = channel.bandwidth_time_coeff(snr_lin, w)
+                coeff = channel.bandwidth_time_coeff(
+                    snr_lin, w, payload_mbit=payload0)
             else:
                 coeff = channel.compress_channel(
-                    channel.bandwidth_time_coeff(snr_store, w),
+                    channel.bandwidth_time_coeff(snr_store, w,
+                                                 payload_mbit=payload0),
                     plan.channel_dtype)
             u = jax.random.uniform(k_tc, (n,))
-            tcomp = p["tcomp_min"] + u * (p["tcomp_max"] - p["tcomp_min"])
+            tcomp = (p["tcomp_min"]
+                     + u * (p["tcomp_max"] - p["tcomp_min"])) * het_tcomp
             # Eq. (8g), post-round requirement (matches make_problem)
             necessary = counts < w.rho1 * (r + 1.0)
             prob = SchedulingProblem(snr=snr_lin, tcomp=tcomp, bs_bw=bs_bw,
                                      coeff=coeff, necessary=necessary,
-                                     min_participants=min_participants)
+                                     min_participants=min_participants,
+                                     payload_mbit=payload0)
         else:
             raise ValueError(f"unknown world {plan.world!r}; "
                              f"choose 'engine' or 'sweep'")
@@ -834,6 +1013,12 @@ def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
 
         # -- 4. data plane: local SGD + Eq. (2) aggregation ----------------
         keys = jax.random.split(k_fleet, n)
+        # stochastic-rounding noise key: per-round (k_fleet varies), derived
+        # by fold_in so no client's key stream shifts; None when the mode
+        # needs no randomness (statically gated — compression-off graphs
+        # split the exact same keys as before)
+        ck = (jax.random.fold_in(k_fleet, n + 1)
+              if plan.compress == "topk-int8" else None)
         edge = state.server.edge_params
         edge_w = state.server.edge_weight
         queue = state.server.queue
@@ -850,7 +1035,9 @@ def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
                 fedavg_backend=plan.fedavg_backend, compute=plan.compute,
                 select_cap=plan.select_cap, corrupt=corrupt,
                 corrupt_mode_id=fp["corrupt_mode_id"],
-                corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
+                corrupt_scale=fp["corrupt_scale"], clip_norm=clip,
+                compress=plan.compress, topk_frac=plan.topk_frac,
+                compress_key=ck)
             t_round = jnp.full((), plan.tick_s, jnp.float32)
             eval_args, eval_model = params, lambda q: q
         else:
@@ -874,7 +1061,9 @@ def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
                         delivered=delivered if plan.faults_on else None,
                         corrupt=corrupt,
                         corrupt_mode_id=fp["corrupt_mode_id"],
-                        corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
+                        corrupt_scale=fp["corrupt_scale"], clip_norm=clip,
+                        compress=plan.compress, topk_frac=plan.topk_frac,
+                        compress_key=ck)
                 # eval sees the virtual global (edge mixture); built inside
                 # the cond so non-eval rounds skip the O(M x model) mixture
                 eval_args = (params, edge, edge_w)
@@ -889,7 +1078,9 @@ def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
                     delivered=delivered if plan.faults_on else None,
                     corrupt=corrupt,
                     corrupt_mode_id=fp["corrupt_mode_id"],
-                    corrupt_scale=fp["corrupt_scale"], clip_norm=clip)
+                    corrupt_scale=fp["corrupt_scale"], clip_norm=clip,
+                    compress=plan.compress, topk_frac=plan.topk_frac,
+                    compress_key=ck)
                 eval_args, eval_model = params, lambda q: q
 
         # -- 5. bookkeeping + eval.  Participation follows DELIVERY under
@@ -920,7 +1111,7 @@ def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
                 # fleet (bounded [0,1]) rather than the eligible count
                 out["delivered_rate"] = (n_del / n).astype(jnp.float32)
                 out["goodput_mbit_s"] = (
-                    n_del * w.model_mbit / plan.tick_s).astype(jnp.float32)
+                    n_del * up_mbit / plan.tick_s).astype(jnp.float32)
                 out["n_inflight"] = diag["n_inflight"]
                 out["n_dropped"] = diag["n_dropped"]
             elif plan.faults_on:
@@ -930,7 +1121,7 @@ def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
                     n_del / jnp.maximum(jnp.sum(res.selected), 1)
                 ).astype(jnp.float32)
                 out["goodput_mbit_s"] = (
-                    n_del * w.model_mbit / jnp.maximum(t_round, 1e-9)
+                    n_del * up_mbit / jnp.maximum(t_round, 1e-9)
                 ).astype(jnp.float32)
         else:
             # sweep records are all-f32 (they stack across seeds/scenarios)
@@ -939,7 +1130,7 @@ def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
                 n_del = diag["n_delivered"].astype(jnp.float32)
                 out["n_delivered"] = n_del
                 out["delivered_rate"] = n_del / n
-                out["goodput_mbit_s"] = (n_del * w.model_mbit
+                out["goodput_mbit_s"] = (n_del * up_mbit
                                          / jnp.float32(plan.tick_s))
                 out["n_inflight"] = diag["n_inflight"].astype(jnp.float32)
                 out["n_dropped"] = diag["n_dropped"].astype(jnp.float32)
@@ -948,7 +1139,7 @@ def make_round_step(plan: RoundPlan, w: WirelessConfig, *, scenario, faults,
                 out["n_delivered"] = n_del
                 out["delivered_rate"] = n_del / jnp.maximum(
                     jnp.sum(res.selected).astype(jnp.float32), 1.0)
-                out["goodput_mbit_s"] = (n_del * w.model_mbit
+                out["goodput_mbit_s"] = (n_del * up_mbit
                                          / jnp.maximum(t_round, 1e-9))
         if hier:
             out["handover_rate"] = handover_rate
@@ -1044,6 +1235,32 @@ class FLSimulation:
         self._faulty = fs.active
         self._fault_params = fl_faults.fault_params(fs)
 
+        # -- compressed uplink (explicit config beats the scenario) ---------
+        comp = cfg.compress if cfg.compress is not None else (
+            spec.compress if spec else None)
+        if cfg.topk_frac is not None:
+            if comp is None:
+                raise ValueError(
+                    f"topk_frac={cfg.topk_frac} only applies with a "
+                    f"compress mode (the resolved mode is off); it would "
+                    f"silently do nothing")
+            frac = float(cfg.topk_frac)
+        else:
+            frac = float(spec.topk_frac) if spec is not None else 1.0
+        self._compress, self._topk_frac = comp, frac
+
+        # -- per-user device heterogeneity (scenario-only knobs) ------------
+        self._compute_spread = spec.compute_spread if spec else 1.0
+        self._power_spread_db = spec.power_spread_db if spec else 0.0
+        self._hetero = (self._compute_spread != 1.0
+                        or self._power_spread_db != 0.0)
+        if ((comp is not None or self._hetero)
+                and cfg.scheduler not in FUSED_SCHEDULERS):
+            raise ValueError(
+                f"compressed uplink / device heterogeneity live in the "
+                f"traced round step; scheduler {cfg.scheduler!r} is "
+                f"host-side — pick one of {FUSED_SCHEDULERS}")
+
         key = jax.random.PRNGKey(cfg.seed)
         (k_data, k_part, k_pos, k_model, k_bw, self._key) = \
             jax.random.split(key, 6)
@@ -1051,8 +1268,27 @@ class FLSimulation:
         ds_name = cfg.dataset
         self.data = make_dataset(ds_name, seed=cfg.seed, n_train=cfg.n_train,
                                  n_test=cfg.n_test)
-        idx = shard_partition(k_part, self.data.y_train, w.n_users,
-                              cfg.shards_per_user)
+        # -- non-IID partition (explicit config beats the scenario) ---------
+        part = cfg.partition or (spec.partition if spec else "shard")
+        alpha = (cfg.dirichlet_alpha if cfg.dirichlet_alpha is not None
+                 else (spec.dirichlet_alpha if spec else None))
+        if part == "dirichlet":
+            if alpha is None:
+                raise ValueError(
+                    "partition='dirichlet' needs dirichlet_alpha > 0")
+            idx = dirichlet_partition(
+                k_part, self.data.y_train, w.n_users,
+                int(self.data.y_train.shape[0]) // w.n_users, float(alpha),
+                n_classes=int(jnp.max(self.data.y_train)) + 1)
+        else:
+            if alpha is not None:
+                raise ValueError(
+                    f"dirichlet_alpha={alpha} only applies with "
+                    f"partition='dirichlet' (the resolved partition is "
+                    f"{part!r}); it would silently do nothing")
+            idx = shard_partition(k_part, self.data.y_train, w.n_users,
+                                  cfg.shards_per_user)
+        self.partition = part
         self.x_clients = self.data.x_train[idx]      # [N, n_i, H, W, C]
         self.y_clients = self.data.y_train[idx]      # [N, n_i]
         self.data_sizes = jnp.full((w.n_users,), idx.shape[1])
@@ -1153,11 +1389,14 @@ class FLSimulation:
             tick_s=(self._tick_s if self._async else 1.0),
             staleness_alpha=self._alpha, buffer_size=self._buffer_size,
             faults_on=self._faulty,
-            clip_on=self.faults.clip_norm is not None, world="engine")
+            clip_on=self.faults.clip_norm is not None, world="engine",
+            compress=self._compress, topk_frac=self._topk_frac)
         scenario_cp = {"mob_model": self._mob_model,
                        "pause_s": self._mob_pause,
                        "gm_memory": self._mob_gm,
-                       "shadow_sigma": self._shadow_sigma}
+                       "shadow_sigma": self._shadow_sigma,
+                       "compute_spread": self._compute_spread,
+                       "power_spread_db": self._power_spread_db}
         init_state, self._step_fn = make_round_step(
             self._plan, w, scenario=scenario_cp, faults=self._fault_params,
             x_clients=self.x_clients, y_clients=self.y_clients,
@@ -1288,6 +1527,10 @@ class FLSimulation:
             raise ValueError(
                 "aggregation='hierarchical' lives in the traced round step; "
                 "use mode='fused' or mode='step'")
+        if mode == "eager" and (self._compress is not None or self._hetero):
+            raise ValueError(
+                "compressed uplink / device heterogeneity live in the "
+                "traced round step; use mode='fused' or mode='step'")
         if mode == "eager" and self.cfg.scheduler in sched.STATEFUL_SCHEDULERS:
             raise ValueError(
                 f"stateful scheduler {self.cfg.scheduler!r} carries per-user "

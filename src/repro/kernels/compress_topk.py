@@ -1,0 +1,393 @@
+"""Compressed-uplink client updates: top-k sparsify + int8 stochastic round.
+
+The uplink payload model (docs/COMPRESSION.md): each client sends only the
+top-k largest-magnitude entries of its model DELTA ``params_i - ref``, each
+entry optionally stochastically rounded to int8 against a per-client
+per-leaf scale.  Three cooperating pieces, per the repo's triple-path kernel
+pattern (dense oracle in :mod:`repro.kernels.ref`, chunked jnp twin here,
+Pallas streaming kernel here; dispatch in :mod:`repro.kernels.ops`):
+
+* **Threshold** — the k-th largest ``|delta|`` per client row, via dense
+  ``lax.top_k`` or the feature-chunked twin (block top-k, then top-k over
+  the gathered candidates; value-exact because the global top-k multiset is
+  a subset of the block candidates).  The survivor mask is ``|x| >=
+  thresh`` so magnitude TIES at the threshold all survive — every path
+  shares this rule, which is what makes tri-path parity bitwise.
+
+* **Sparsify + quantize** — elementwise select/round given precomputed
+  per-row ``thresh``/``scale`` and externally supplied uniform noise ``u``
+  (stochastic rounding ``q = clip(floor(x/scale + u), -127, 127)``).  The
+  noise is an INPUT, not in-kernel PRNG, so oracle/chunked/Pallas produce
+  bit-identical codes.  The Pallas kernel streams [Nb, Db] blocks.
+
+* **Decompress + accumulate** — the server never materialises a dense
+  ``[N, model]`` f32 reconstruction.  The aggregated delta is
+  ``sum_i w_i * scale_i * q_i / sum_i w_i``, and the per-client dequant
+  scale FOLDS INTO the Eq. (2) weight vector, so both existing streaming
+  reductions (:func:`repro.kernels.fedavg_reduce._reduce_leaf` and
+  ``_segment_reduce_leaf``) consume the int8 codes unchanged — the
+  in-kernel ``astype(f32)`` of each [Nb, Db] block IS the decompression.
+  Staleness discounts (buffered-async) fold into the same vector.
+
+Payload accounting (Eq. (1)'s ``s_k``): a sparse update costs
+``K * (value_bits + 32)`` bits per leaf (32-bit indices); ``topk_frac=1``
+sends dense (no indices) at ``value_bits`` per entry.  ``payload_mbit``
+turns a model pytree into the nominal per-client uplink Mbit the latency
+model and the Eq. (11) bandwidth solver consume.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.fl.server import fedavg_weights, segment_weights
+from repro.kernels.fedavg_reduce import (DEFAULT_CLIENT_BLOCK,
+                                         DEFAULT_FEATURE_BLOCK, _LANE,
+                                         _reduce_leaf, _segment_reduce_leaf)
+
+PyTree = Any
+
+QMAX = 127.0           # int8 code range [-127, 127] (symmetric; -128 unused)
+INDEX_BITS = 32        # per-entry position cost of a sparse payload
+_INT8_SUBLANE = 32     # min int8 tile sublane on TPU (f32 is 8)
+
+
+# ------------------------------------------------------------ payload model --
+def nominal_k(d: int, topk_frac: float) -> int:
+    """Entries kept per d-sized leaf row: ceil(frac * d), at least 1."""
+    return max(1, min(d, math.ceil(topk_frac * d)))
+
+
+def payload_bits(params: PyTree, topk_frac: float, quantize: bool) -> int:
+    """Nominal per-client uplink bits for one update of ``params``.
+
+    Sparse (frac < 1): every kept entry ships value + 32-bit index.
+    Dense (frac >= 1): values only — positions are implicit.
+    """
+    value_bits = 8 if quantize else 32
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        d = math.prod(leaf.shape) if leaf.shape else 1
+        if topk_frac >= 1.0:
+            total += d * value_bits
+        else:
+            total += nominal_k(d, topk_frac) * (value_bits + INDEX_BITS)
+    return total
+
+
+def compression_ratio(params: PyTree, topk_frac: float,
+                      quantize: bool) -> float:
+    """compressed bits / uncompressed (dense f32) bits — the factor the
+    per-user Eq. (1) payload ``s_k`` scales by."""
+    dense = payload_bits(params, 1.0, quantize=False)
+    return payload_bits(params, topk_frac, quantize) / dense
+
+
+# -------------------------------------------------------------- thresholds --
+def topk_threshold(x: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[N, D] -> ([N] k-th largest |x| per row, [N] row max |x|).
+
+    The mask rule is ``|x| >= thresh``: at magnitude ties the survivor
+    count may exceed k (payload accounting stays the nominal k).
+    """
+    ax = jnp.abs(x.astype(jnp.float32))
+    vals = jax.lax.top_k(ax, k)[0]
+    return vals[:, -1], vals[:, 0]
+
+
+def topk_threshold_chunked(x: jnp.ndarray, k: int,
+                           block: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Feature-chunked twin of :func:`topk_threshold` — bit-exact.
+
+    Per feature block keep ``min(k, block)`` candidates, then top-k over
+    the gathered candidates.  Any global top-k member is a block candidate
+    by construction, so the k-th candidate value equals the dense k-th
+    value; ties resolve identically because the rule compares VALUES.
+    """
+    n, d = x.shape
+    ax = jnp.abs(x.astype(jnp.float32))
+    pad = (-d) % block
+    if pad:
+        # |x| >= 0 everywhere, so -1 padding can never enter the top-k
+        # (k <= d guarantees enough real candidates)
+        ax = jnp.pad(ax, ((0, 0), (0, pad)), constant_values=-1.0)
+    kb = min(k, block)
+    cand = jax.lax.top_k(ax.reshape(n, -1, block), kb)[0].reshape(n, -1)
+    vals = jax.lax.top_k(cand, k)[0]
+    return vals[:, -1], vals[:, 0]
+
+
+def quant_scale(rowmax: jnp.ndarray) -> jnp.ndarray:
+    """Per-row int8 step: max|x| / 127, guarded to 1.0 on all-zero rows."""
+    return jnp.where(rowmax > 0.0, rowmax / QMAX, 1.0)
+
+
+# ----------------------------------------------------- sparsify + quantize --
+def _compress_math(x, thresh, scale, u, quantize: bool):
+    """The shared elementwise select/round rule (all inputs f32)."""
+    mask = jnp.abs(x) >= thresh
+    if quantize:
+        q = jnp.clip(jnp.floor(x / scale + u), -QMAX, QMAX)
+        return jnp.where(mask, q, 0.0)
+    return jnp.where(mask, x, 0.0)
+
+
+def _compress_kernel(t_ref, s_ref, x_ref, u_ref, o_ref, *, quantize: bool):
+    x = x_ref[...].astype(jnp.float32)
+    x = jnp.where(jnp.isfinite(x), x, 0.0)      # poison screen
+    out = _compress_math(x, t_ref[...], s_ref[...], u_ref[...], quantize)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def sparsify_quantize(x: jnp.ndarray, thresh: jnp.ndarray,
+                      scale: jnp.ndarray, u: jnp.ndarray, *,
+                      quantize: bool,
+                      client_block: int = DEFAULT_CLIENT_BLOCK,
+                      feature_block: int = DEFAULT_FEATURE_BLOCK,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Pallas path: [N, D] x + per-row thresh/scale + noise -> codes [N, D].
+
+    int8 codes when ``quantize`` (block sublane widened to the int8 tile
+    minimum), masked f32 values otherwise.  Non-finite entries are screened
+    to zero before the threshold comparison, matching the oracle.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = x.shape
+    out_dtype = jnp.int8 if quantize else jnp.float32
+    nb = min(max(client_block, _INT8_SUBLANE) if quantize else client_block, n)
+    d_lanes = -(-d // _LANE) * _LANE
+    db = min(feature_block, d_lanes)
+    n_pad, d_pad = (-n) % nb, (-d) % db
+    if n_pad or d_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, d_pad)))
+        thresh = jnp.pad(thresh, (0, n_pad))
+        scale = jnp.pad(scale, (0, n_pad), constant_values=1.0)
+        u = jnp.pad(u, ((0, n_pad), (0, d_pad)))
+    np_, dp = x.shape
+    out = pl.pallas_call(
+        lambda t, s, xr, ur, o: _compress_kernel(t, s, xr, ur, o,
+                                                 quantize=quantize),
+        grid=(np_ // nb, dp // db),
+        in_specs=[pl.BlockSpec((nb, 1), lambda jn, jd: (jn, 0)),
+                  pl.BlockSpec((nb, 1), lambda jn, jd: (jn, 0)),
+                  pl.BlockSpec((nb, db), lambda jn, jd: (jn, jd)),
+                  pl.BlockSpec((nb, db), lambda jn, jd: (jn, jd))],
+        out_specs=pl.BlockSpec((nb, db), lambda jn, jd: (jn, jd)),
+        out_shape=jax.ShapeDtypeStruct((np_, dp), out_dtype),
+        interpret=interpret,
+    )(thresh.reshape(-1, 1), scale.reshape(-1, 1), x, u)
+    return out[:n, :d]
+
+
+def sparsify_quantize_chunked(x: jnp.ndarray, thresh: jnp.ndarray,
+                              scale: jnp.ndarray, u: jnp.ndarray, *,
+                              quantize: bool, block: int) -> jnp.ndarray:
+    """Client-chunked jnp twin: identical elementwise math per [block, D]
+    slab via ``lax.map`` (padded final chunk), bit-identical to the oracle
+    because the rule is elementwise."""
+    n, d = x.shape
+    pad = (-n) % block
+    xf = jnp.where(jnp.isfinite(x.astype(jnp.float32)),
+                   x.astype(jnp.float32), 0.0)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        thresh = jnp.pad(thresh, (0, pad))
+        scale = jnp.pad(scale, (0, pad), constant_values=1.0)
+        u = jnp.pad(u, ((0, pad), (0, 0)))
+    nb = xf.shape[0] // block
+    out = jax.lax.map(
+        lambda args: _compress_math(args[0], args[1][:, None],
+                                    args[2][:, None], args[3], quantize),
+        (xf.reshape(nb, block, d), thresh.reshape(nb, block),
+         scale.reshape(nb, block), u.reshape(nb, block, d)))
+    out = out.reshape(-1, d)[:n]
+    return out.astype(jnp.int8) if quantize else out
+
+
+def pack_topk(q: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked-dense codes [N, D] -> the wire format ([N, k] values,
+    [N, k] int32 positions), largest magnitudes first.  The reductions
+    never need this (they stream the masked-dense codes); it exists to
+    make the payload model concrete and for tests."""
+    mag = jnp.abs(q.astype(jnp.float32))
+    _, idx = jax.lax.top_k(mag, k)
+    return jnp.take_along_axis(q, idx, axis=1), idx.astype(jnp.int32)
+
+
+# --------------------------------------------------------- tree-level API --
+def compress_delta_tree(delta: PyTree, topk_frac: float, *, quantize: bool,
+                        key: jax.Array | None = None,
+                        backend: str = "pallas",
+                        block: int | None = None,
+                        interpret: bool | None = None) -> tuple[PyTree,
+                                                                PyTree]:
+    """Compress every [N, ...] leaf of a client-delta pytree.
+
+    Returns ``(codes, scales)``: codes leaves keep the input shapes (int8
+    when ``quantize``), scales leaves are [N] f32 per-client dequant steps
+    (ones when not quantizing).  ``key`` seeds the stochastic rounding
+    (required when ``quantize``); each leaf folds in its flatten index so
+    the noise fields are independent.  ``backend="jax"`` uses the dense
+    oracle math; ``block`` engages the chunked twins on either backend.
+    """
+    if quantize and key is None:
+        raise ValueError("quantize=True needs a PRNG key for the "
+                         "stochastic rounding noise")
+    leaves, treedef = jax.tree.flatten(delta)
+    codes, scales = [], []
+    for i, leaf in enumerate(leaves):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        d = flat.shape[1]
+        k = nominal_k(d, topk_frac)
+        xf = flat.astype(jnp.float32)
+        xf = jnp.where(jnp.isfinite(xf), xf, 0.0)
+        if block is not None and block < d:
+            thresh, rowmax = topk_threshold_chunked(xf, k, block)
+        else:
+            thresh, rowmax = topk_threshold(xf, k)
+        scale = quant_scale(rowmax) if quantize else jnp.ones((n,),
+                                                              jnp.float32)
+        if quantize:
+            u = jax.random.uniform(jax.random.fold_in(key, i), flat.shape,
+                                   jnp.float32)
+        else:
+            u = jnp.zeros_like(xf)
+        if backend == "pallas":
+            q = sparsify_quantize(xf, thresh, scale, u, quantize=quantize,
+                                  interpret=interpret)
+        elif block is not None:
+            q = sparsify_quantize_chunked(xf, thresh, scale, u,
+                                          quantize=quantize, block=block)
+        else:
+            q = _compress_math(xf, thresh[:, None], scale[:, None], u,
+                               quantize)
+            q = q.astype(jnp.int8) if quantize else q
+        codes.append(q.reshape(leaf.shape))
+        scales.append(scale)
+    return (jax.tree.unflatten(treedef, codes),
+            jax.tree.unflatten(treedef, scales))
+
+
+def decompress_tree(codes: PyTree, scales: PyTree) -> PyTree:
+    """Dense reconstruction scale_i * q_i (testing/oracle only — the fused
+    reductions never call this)."""
+    return jax.tree.map(
+        lambda q, s: (q.astype(jnp.float32)
+                      * s.reshape((-1,) + (1,) * (q.ndim - 1))),
+        codes, scales)
+
+
+def compressed_clip_scales(codes: PyTree, scales: PyTree,
+                           clip_norm) -> jnp.ndarray:
+    """[N] norm-clip factors min(1, clip / ||delta_i||) computed IN the
+    compressed domain: ||delta_i||^2 = sum_leaf scale^2 * sum |q|^2, so the
+    defense costs per-row reductions over int8 codes, never a dense f32
+    reconstruction."""
+    sq = 0.0
+    for q, s in zip(jax.tree.leaves(codes), jax.tree.leaves(scales)):
+        qf = q.astype(jnp.float32)
+        sq = sq + jnp.square(s) * jnp.sum(jnp.square(qf),
+                                          axis=tuple(range(1, q.ndim)))
+    norm = jnp.sqrt(sq)
+    cv = jnp.float32(clip_norm)
+    return jnp.minimum(1.0, cv / jnp.maximum(norm, 1e-12))
+
+
+# ----------------------------------------- decompress-fused aggregation --
+def fedavg_decompress_reduce(global_params: PyTree, codes: PyTree,
+                             scales: PyTree, selected: jnp.ndarray,
+                             data_sizes: jnp.ndarray, *,
+                             weights: jnp.ndarray | None = None,
+                             clip_norm=None,
+                             client_block: int = DEFAULT_CLIENT_BLOCK,
+                             feature_block: int = DEFAULT_FEATURE_BLOCK,
+                             interpret: bool | None = None) -> PyTree:
+    """Single-tier Eq. (2) over COMPRESSED deltas, decompression fused.
+
+    ``params' = g + sum_i w_i c_i scale_i q_i / sum_i w_i`` with w_i the
+    masked Eq. (2) weights times the optional staleness ``weights`` and
+    c_i the optional compressed-domain norm-clip factor.  Per leaf the
+    dequant scale folds into the weight vector, so the EXISTING streaming
+    reduction (:func:`repro.kernels.fedavg_reduce._reduce_leaf`) runs
+    unchanged over the int8 codes — no dense [N, model] f32 reconstruction
+    exists.  Empty selection keeps the global model.  Note delta-mode clip
+    needs NO reweighting correction term: clipping scales the delta itself.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    w, total = fedavg_weights(selected, data_sizes)
+    if weights is not None:
+        w = w * weights.astype(jnp.float32)
+        total = jnp.sum(w)
+    if clip_norm is not None:
+        w = w * compressed_clip_scales(codes, scales, clip_norm)
+    safe_total = jnp.maximum(total, 1e-9)
+
+    def agg(g, q, s):
+        n = q.shape[0]
+        cb = (max(client_block, _INT8_SUBLANE) if q.dtype == jnp.int8
+              else client_block)
+        v2 = (w * s).reshape(-1, 1)
+        acc = _reduce_leaf(v2, q.reshape(n, -1), cb, feature_block,
+                           interpret)
+        new = g + (acc / safe_total).astype(g.dtype).reshape(g.shape)
+        return jnp.where(total > 0, new, g)
+
+    return jax.tree.map(agg, global_params, codes, scales)
+
+
+def fedavg_decompress_segment_reduce(edge_params: PyTree, codes: PyTree,
+                                     scales: PyTree, assign: jnp.ndarray,
+                                     serving: jnp.ndarray,
+                                     data_sizes: jnp.ndarray, *,
+                                     clip_norm=None,
+                                     client_block: int = DEFAULT_CLIENT_BLOCK,
+                                     feature_block: int =
+                                     DEFAULT_FEATURE_BLOCK,
+                                     interpret: bool | None = None) -> PyTree:
+    """Hierarchical edge Eq. (2) over COMPRESSED deltas, one fused pass.
+
+    Client i's delta is relative to its SERVING cell's edge model (what it
+    trained from), while its upload aggregates into its ASSIGNED BS, so
+
+        edge'[m] = (sum_i w_im e[serving_i] + sum_i w_im scale_i q_i)
+                   / sum_i w_im.
+
+    The second term is the EXISTING segmented streaming reduction
+    (:func:`repro.kernels.fedavg_reduce._segment_reduce_leaf`) over the
+    int8 codes with the dequant scale folded into the [N, M] weights; the
+    first term contracts the [M_assign, M_serve] weight cross-matrix with
+    the edge models — an [M, M] @ [M, D] matmul, never an [N, model]
+    gather.  Empty BSes keep their edge model.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m = assign.shape[1]
+    w, totals = segment_weights(assign, data_sizes)        # [N, M], [M]
+    if clip_norm is not None:
+        w = w * compressed_clip_scales(codes, scales, clip_norm)[:, None]
+    # base-model mass: cross[m, m'] = sum_{i: assign->m, serving=m'} w_im
+    serve_1h = jax.nn.one_hot(serving, m, dtype=jnp.float32)  # [N, M]
+    cross = jax.lax.dot_general(w, serve_1h, (((0,), (0,)), ((), ())))
+    safe = jnp.maximum(totals, 1e-9)
+
+    def agg(e, q, s):
+        n = q.shape[0]
+        cb = (max(client_block, _INT8_SUBLANE) if q.dtype == jnp.int8
+              else client_block)
+        acc = _segment_reduce_leaf(w * s[:, None], q.reshape(n, -1), cb,
+                                   feature_block, interpret)     # [M, D]
+        e_flat = e.astype(jnp.float32).reshape(m, -1)
+        base = jax.lax.dot_general(cross, e_flat,
+                                   (((1,), (0,)), ((), ())))     # [M, D]
+        avg = ((base + acc) / safe[:, None]).astype(e.dtype).reshape(e.shape)
+        keep = (totals > 0).reshape((-1,) + (1,) * (e.ndim - 1))
+        return jnp.where(keep, avg, e)
+
+    return jax.tree.map(agg, edge_params, codes, scales)

@@ -15,6 +15,7 @@ from repro.kernels import rmsnorm as rms
 from repro.kernels import bandwidth_solve as bws
 from repro.kernels import fedavg_reduce as favg
 from repro.kernels import select_topk as sel
+from repro.kernels import compress_topk as ct
 
 
 def _on_tpu() -> bool:
@@ -81,3 +82,38 @@ def fedavg_segment_reduce(edge_params, client_params, assign, data_sizes):
                                           data_sizes)
     return ref.fedavg_segment_reduce(edge_params, client_params, assign,
                                      data_sizes)
+
+
+def compress_delta(delta, topk_frac, quantize, key=None,
+                   block: int | None = None):
+    """Top-k (+int8) compress every [N, ...] delta leaf: Pallas kernel on
+    TPU, chunked twin when a ``block`` is given, dense oracle math
+    otherwise.  Returns ``(codes, scales)``."""
+    if _on_tpu():
+        return ct.compress_delta_tree(delta, topk_frac, quantize=quantize,
+                                      key=key, backend="pallas", block=block)
+    return ct.compress_delta_tree(delta, topk_frac, quantize=quantize,
+                                  key=key, backend="jax", block=block)
+
+
+def fedavg_decompress_reduce(global_params, codes, scales, selected,
+                             data_sizes, weights=None, clip_norm=None):
+    if _on_tpu():
+        return ct.fedavg_decompress_reduce(global_params, codes, scales,
+                                           selected, data_sizes,
+                                           weights=weights,
+                                           clip_norm=clip_norm)
+    return ref.fedavg_decompress_reduce(global_params, codes, scales,
+                                        selected, data_sizes,
+                                        weights=weights, clip_norm=clip_norm)
+
+
+def fedavg_decompress_segment_reduce(edge_params, codes, scales, assign,
+                                     serving, data_sizes, clip_norm=None):
+    if _on_tpu():
+        return ct.fedavg_decompress_segment_reduce(
+            edge_params, codes, scales, assign, serving, data_sizes,
+            clip_norm=clip_norm)
+    return ref.fedavg_decompress_segment_reduce(
+        edge_params, codes, scales, assign, serving, data_sizes,
+        clip_norm=clip_norm)

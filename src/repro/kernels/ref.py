@@ -57,6 +57,81 @@ def fedavg_segment_reduce(edge_params, client_params, assign, data_sizes,
                             clip_norm=clip_norm)
 
 
+def compress_update(x, k: int, *, quantize: bool, u=None):
+    """Dense top-k sparsify (+ optional int8 stochastic round) oracle.
+
+    x [N, D] -> (codes [N, D] int8|f32, scale [N] f32).  The threshold is
+    the k-th largest |x| per row (descending sort — independent of the
+    kernel's ``lax.top_k``), survivors are ``|x| >= thresh`` (ties all
+    survive), and rounding is ``clip(floor(x/scale + u), -127, 127)`` with
+    externally supplied uniform noise ``u`` so every path is bit-exact.
+    Non-finite entries screen to zero before thresholding.
+    """
+    xf = x.astype(jnp.float32)
+    xf = jnp.where(jnp.isfinite(xf), xf, 0.0)
+    ax = jnp.abs(xf)
+    vals = -jnp.sort(-ax, axis=1)
+    thresh, rowmax = vals[:, k - 1], vals[:, 0]
+    mask = ax >= thresh[:, None]
+    if not quantize:
+        scale = jnp.ones((x.shape[0],), jnp.float32)
+        return jnp.where(mask, xf, 0.0), scale
+    scale = jnp.where(rowmax > 0.0, rowmax / 127.0, 1.0)
+    q = jnp.clip(jnp.floor(xf / scale[:, None] + u), -127.0, 127.0)
+    return jnp.where(mask, q, 0.0).astype(jnp.int8), scale
+
+
+def fedavg_decompress_reduce(global_params, codes, scales, selected,
+                             data_sizes, weights=None, clip_norm=None):
+    """Dense decompress-then-aggregate oracle for the compressed single-tier
+    Eq. (2): materialises the full [N, model] f32 reconstruction (the
+    positive control for the no-dense-temporary jaxpr test) and delegates
+    to the server aggregation."""
+    from repro.fl.server import fedavg
+    client = jax.tree.map(
+        lambda g, q, s: g[None] + q.astype(jnp.float32)
+        * s.reshape((-1,) + (1,) * (q.ndim - 1)),
+        global_params, codes, scales)
+    return fedavg(global_params, client, selected, data_sizes,
+                  clip_norm=clip_norm, weights=weights)
+
+
+def fedavg_decompress_segment_reduce(edge_params, codes, scales, assign,
+                                     serving, data_sizes, clip_norm=None):
+    """Dense oracle for the compressed hierarchical edge Eq. (2).
+
+    Reconstructs every client model ``e[serving_i] + scale_i * q_i``
+    densely, then per-BS weighted-averages by the assignment.  The optional
+    clip measures the DELTA norm (deviation from the serving model the
+    client trained from) — the same rule the fused compressed-domain clip
+    applies.
+    """
+    from repro.fl.server import segment_weights
+    delta = jax.tree.map(
+        lambda q, s: q.astype(jnp.float32)
+        * s.reshape((-1,) + (1,) * (q.ndim - 1)),
+        codes, scales)
+    w, totals = segment_weights(assign, data_sizes)
+    if clip_norm is not None:
+        sq = 0.0
+        for d in jax.tree.leaves(delta):
+            sq = sq + jnp.sum(jnp.square(d), axis=tuple(range(1, d.ndim)))
+        cs = jnp.minimum(1.0, jnp.float32(clip_norm)
+                         / jnp.maximum(jnp.sqrt(sq), 1e-12))
+        w = w * cs[:, None]
+    safe = jnp.maximum(totals, 1e-9)
+
+    def agg(e, d):
+        n = d.shape[0]
+        client = e[serving].reshape(n, -1) + d.reshape(n, -1)   # [N, D]
+        s = jax.lax.dot_general(w, client, (((0,), (0,)), ((), ())))
+        avg = (s / safe[:, None]).astype(e.dtype).reshape(e.shape)
+        keep = (totals > 0).reshape((-1,) + (1,) * (e.ndim - 1))
+        return jnp.where(keep, avg, e)
+
+    return jax.tree.map(agg, edge_params, delta)
+
+
 def masked_bs_argmax(snr, remaining, scale=None):
     """Dense per-BS argmax over the remaining users (Algorithm 1 step 3).
 

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import argparse
 
-from repro.core.scenario import SCENARIOS
+from repro.core.scenario import COMPRESS_MODES, PARTITIONS, SCENARIOS
 from repro.core.scheduler import SCHEDULERS
 from repro.data.synthetic import DATASETS
 from repro.fl import FAULT_PRESETS, FLConfig, FLSimulation
@@ -101,6 +101,24 @@ def main() -> None:
     ap.add_argument("--buffer-size", type=int, default=None, metavar="B",
                     help="async event-queue capacity (default n_users, "
                          "which never overflows)")
+    ap.add_argument("--compress", default=None,
+                    choices=sorted(COMPRESS_MODES),
+                    help="uplink update compression: top-k sparsification "
+                         "(topk) or top-k + int8 stochastic-rounding "
+                         "quantization (topk-int8); per-user payload s_k "
+                         "feeds the Eq. (1)/(3)/(11) latency model "
+                         "(default: inherit the scenario, else off)")
+    ap.add_argument("--topk-frac", type=float, default=None, metavar="F",
+                    help="fraction of model coordinates kept per client "
+                         "update (requires a resolved --compress mode)")
+    ap.add_argument("--partition", default=None, choices=sorted(PARTITIONS),
+                    help="client data partition: contiguous label shards "
+                         "(shard) or Dirichlet non-IID label mixing "
+                         "(dirichlet; default: inherit the scenario)")
+    ap.add_argument("--dirichlet-alpha", type=float, default=None,
+                    metavar="A",
+                    help="Dirichlet concentration for --partition dirichlet "
+                         "(small = pathological non-IID)")
     ap.add_argument("--shard", action="store_true",
                     help="place the client-batched tensors on a (data,) "
                          "device mesh: the fleet's local SGD "
@@ -130,6 +148,9 @@ def main() -> None:
                    aggregation_async=args.async_agg, tick_s=args.tick,
                    staleness_alpha=args.staleness_alpha,
                    buffer_size=args.buffer_size,
+                   compress=args.compress, topk_frac=args.topk_frac,
+                   partition=args.partition,
+                   dirichlet_alpha=args.dirichlet_alpha,
                    shard=args.shard, mesh_devices=args.mesh)
     sim = FLSimulation(cfg)
     recs = sim.run(args.rounds, mode=args.mode)

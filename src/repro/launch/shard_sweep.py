@@ -147,7 +147,7 @@ def run_shard_sweep(scenarios: Sequence[str | ScenarioSpec],
                                    "clip_on", "async_on", "tick_s",
                                    "staleness_alpha", "buffer_size",
                                    "user_chunk", "channel_dtype",
-                                   "n_models"))
+                                   "compress", "topk_frac", "n_models"))
 def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                            cell_seed: jax.Array, x_c, y_c, w0, x_test,
                            y_test, *, mesh, cfg: WirelessConfig,
@@ -159,6 +159,7 @@ def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                            async_on: bool, tick_s: float,
                            staleness_alpha: float, buffer_size: int,
                            user_chunk: int | None, channel_dtype: str,
+                           compress: str | None, topk_frac: float,
                            n_models: int) -> dict:
     """Learning-sweep bucket over the mesh.
 
@@ -178,7 +179,8 @@ def _shard_learning_bucket(cell_params: dict, cell_keys: jax.Array,
                   faults_on=faults_on, clip_on=clip_on, async_on=async_on,
                   tick_s=tick_s, staleness_alpha=staleness_alpha,
                   buffer_size=buffer_size, user_chunk=user_chunk,
-                  channel_dtype=channel_dtype)
+                  channel_dtype=channel_dtype, compress=compress,
+                  topk_frac=topk_frac)
 
     def local(cp, ck, cs, xc, yc, w, xt, yt):
         def cell(p, k, j):
@@ -215,8 +217,12 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                              staleness_alpha: float = 0.0,
                              buffer_size: int | None = None,
                              user_chunk: int | None = None,
-                             channel_dtype: str = "f32", seed: int = 0,
-                             mesh=None,
+                             channel_dtype: str = "f32",
+                             compress: str | None = None,
+                             topk_frac: float | None = None,
+                             partition: str | None = None,
+                             dirichlet_alpha: float | None = None,
+                             seed: int = 0, mesh=None,
                              n_devices: int | None = None) -> list[dict]:
     """Device-sharded :func:`repro.launch.sweep.run_learning_sweep`.
 
@@ -256,9 +262,11 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     k_cells, k_part, k_init = jax.random.split(jax.random.PRNGKey(seed), 3)
     seed_keys = jax.random.split(k_cells, n_seeds)   # paired across scenarios
     records: dict[int, dict] = {}
-    buckets = sweep._learning_buckets(specs, base, aggregation, tau_global)
-    for (n_users, n_bs, agg, tau, faults_on, clip_on), group \
-            in buckets.items():
+    buckets = sweep._learning_buckets(specs, base, aggregation, tau_global,
+                                      compress, topk_frac, partition,
+                                      dirichlet_alpha)
+    for (n_users, n_bs, agg, tau, faults_on, clip_on, comp, frac, part,
+            alpha), group in buckets.items():
         if aggregation_async and agg == "hierarchical":
             raise ValueError(
                 f"aggregation_async composes with single-tier aggregation "
@@ -269,7 +277,8 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
         minp = int(np.ceil(bcfg.rho2 * n_users))
         buf = (int(buffer_size) if buffer_size is not None else n_users)
         x_c, y_c, w0 = sweep._learning_seed_inputs(
-            data, cnn_cfg, k_part, k_init, n_seeds, n_users, shards_per_user)
+            data, cnn_cfg, k_part, k_init, n_seeds, n_users, shards_per_user,
+            partition=part, dirichlet_alpha=alpha)
         params = sweep._scenario_params([s for _, s in group], bcfg)
         cell_params, cell_keys = _grid_cells(params, seed_keys)
         cell_seed = jnp.tile(jnp.arange(n_seeds, dtype=jnp.int32),
@@ -290,15 +299,30 @@ def run_shard_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
             staleness_alpha=float(staleness_alpha),
             buffer_size=(buf if aggregation_async else 1),
             user_chunk=user_chunk, channel_dtype=channel_dtype,
+            compress=comp, topk_frac=frac,
             n_models=len(mobility.MOBILITY_MODELS))
         outs = _grid_shape(outs, n_cells, len(group), n_seeds)
         async_info = ({"aggregation_async": True, "tick_s": float(tick_s),
                        "staleness_alpha": float(staleness_alpha),
                        "buffer_size": buf}
                       if aggregation_async else None)
-        records.update(sweep._learning_records(group, outs, n_seeds,
-                                               n_rounds, dataset, agg, tau,
-                                               scheduler, async_info))
+        recs = sweep._learning_records(group, outs, n_seeds, n_rounds,
+                                       dataset, agg, tau, scheduler,
+                                       async_info)
+        if comp is not None:
+            from repro.kernels import compress_topk as ct
+            ratio = ct.compression_ratio(
+                jax.tree.map(lambda a: a[0], w0), frac,
+                comp == "topk-int8")
+            for pos, _ in group:
+                recs[pos].update(
+                    compress=comp, topk_frac=frac,
+                    uplink_compression_ratio=float(ratio),
+                    uplink_mbit_per_client=float(bcfg.model_mbit * ratio))
+        if part != "shard":
+            for pos, _ in group:
+                recs[pos].update(partition=part, dirichlet_alpha=alpha)
+        records.update(recs)
     return [records[i] for i in range(len(specs))]
 
 

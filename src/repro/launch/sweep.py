@@ -88,8 +88,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import channel, dagsa_jit, mobility
-from repro.core.scenario import SCENARIOS, BS_LAYOUTS, ScenarioSpec, \
-    get_scenario
+from repro.core.scenario import (SCENARIOS, BS_LAYOUTS, COMPRESS_MODES,
+                                 PARTITIONS, ScenarioSpec, get_scenario)
 from repro.core.types import MobilityState, WirelessConfig
 # registers the faulty-* scenarios and supplies the traced fault samplers
 from repro.fl import faults as fl_faults
@@ -129,6 +129,11 @@ def _scenario_params(specs: Sequence[ScenarioSpec],
                          else cfg.tcomp_min_s),
         "tcomp_max": arr(lambda s: s.tcomp_max_s if s.tcomp_max_s is not None
                          else cfg.tcomp_max_s),
+        # device heterogeneity spreads (docs/COMPRESSION.md) — DATA: the
+        # homogeneous defaults (1.0 / 0.0 dB) are IEEE-exact no-ops inside
+        # the round step, so hetero and plain scenarios share a bucket
+        "compute_spread": arr(lambda s: s.compute_spread),
+        "power_spread_db": arr(lambda s: s.power_spread_db),
         # fault knobs, "f_"-prefixed (NO_FAULTS when the scenario has none);
         # severity is DATA, so scenarios of different severity share a bucket
         **{f"f_{k}": arr(lambda s, k=k: fl_faults.fault_params(
@@ -335,7 +340,9 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                        async_on: bool = False, tick_s: float = 1.0,
                        staleness_alpha: float = 0.0, buffer_size: int = 1,
                        user_chunk: int | None = None,
-                       channel_dtype: str = "f32") -> dict:
+                       channel_dtype: str = "f32",
+                       compress: str | None = None,
+                       topk_frac: float = 1.0) -> dict:
     """One (scenario, seed) FL cell: init world, scan the full round loop
     (wireless control plane + local SGD + Eq. (2) aggregation — single-tier
     or hierarchical per-BS edges with a tau_global sync — + periodic
@@ -387,7 +394,8 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
         tau_global=tau_global, async_on=async_on, tick_s=tick_s,
         staleness_alpha=staleness_alpha, buffer_size=buffer_size,
         faults_on=faults_on, clip_on=clip_on, backend=backend,
-        user_chunk=user_chunk, channel_dtype=channel_dtype, world="sweep")
+        user_chunk=user_chunk, channel_dtype=channel_dtype, world="sweep",
+        compress=compress, topk_frac=topk_frac)
     init_state, step = make_round_step(
         plan, cfg, scenario=p, faults=fp, x_clients=x_c, y_clients=y_c,
         data_sizes=data_sizes, x_test=x_test, y_test=y_test, bs_pos=bs_pos,
@@ -404,7 +412,8 @@ def _one_learning_cell(p: dict, key: jax.Array, x_c, y_c, params0,
                                    "scheduler", "faults_on", "clip_on",
                                    "async_on", "tick_s", "staleness_alpha",
                                    "buffer_size", "user_chunk",
-                                   "channel_dtype", "n_models"))
+                                   "channel_dtype", "compress", "topk_frac",
+                                   "n_models"))
 def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                      x_test, y_test, *, cfg: WirelessConfig, n_rounds: int,
                      minp: int, epochs: int, batch_size: int, lr: float,
@@ -414,6 +423,7 @@ def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                      clip_on: bool, async_on: bool, tick_s: float,
                      staleness_alpha: float, buffer_size: int,
                      user_chunk: int | None, channel_dtype: str,
+                     compress: str | None, topk_frac: float,
                      n_models: int) -> dict:
     """All scenarios of one shape bucket x all seeds, one compiled call.
 
@@ -431,7 +441,8 @@ def _learning_bucket(params: dict, seed_keys: jax.Array, x_c, y_c, w0,
                   faults_on=faults_on, clip_on=clip_on, async_on=async_on,
                   tick_s=tick_s, staleness_alpha=staleness_alpha,
                   buffer_size=buffer_size, user_chunk=user_chunk,
-                  channel_dtype=channel_dtype)
+                  channel_dtype=channel_dtype, compress=compress,
+                  topk_frac=topk_frac)
 
     def per_scenario(p):
         return jax.vmap(lambda k, xc, yc, w: run(p, k, xc, yc, w,
@@ -482,37 +493,95 @@ def _fault_flags(spec: ScenarioSpec) -> tuple[bool, bool]:
     return on, bool(on and fs.clip_norm is not None)
 
 
+def _resolve_compress(spec: ScenarioSpec, compress: str | None,
+                      topk_frac: float | None) -> tuple[str | None, float]:
+    """Effective (compress, topk_frac) for one scenario: explicit args win.
+
+    ``topk_frac`` without a resolved compress mode raises — the knob would
+    silently do nothing."""
+    comp = compress if compress is not None else spec.compress
+    if topk_frac is not None:
+        if comp is None:
+            raise ValueError(
+                f"topk_frac={topk_frac} only applies with a compress mode; "
+                f"scenario {spec.name!r} resolves to compression off — it "
+                f"would silently do nothing")
+        return comp, float(topk_frac)
+    return comp, (spec.topk_frac if comp is not None else 1.0)
+
+
+def _resolve_partition(spec: ScenarioSpec, partition: str | None,
+                       dirichlet_alpha: float | None
+                       ) -> tuple[str, float | None]:
+    """Effective (partition, alpha) for one scenario: explicit args win."""
+    part = partition or spec.partition
+    alpha = (float(dirichlet_alpha) if dirichlet_alpha is not None
+             else spec.dirichlet_alpha)
+    if part == "dirichlet":
+        if alpha is None:
+            raise ValueError(
+                f"partition='dirichlet' needs dirichlet_alpha > 0 "
+                f"(scenario {spec.name!r} sets none)")
+        return part, alpha
+    if dirichlet_alpha is not None:
+        raise ValueError(
+            f"dirichlet_alpha={dirichlet_alpha} only applies with "
+            f"partition='dirichlet' (scenario {spec.name!r} resolves to "
+            f"{part!r}); it would silently do nothing")
+    return part, None
+
+
 def _learning_buckets(specs: Sequence[ScenarioSpec], base: WirelessConfig,
-                      aggregation: str | None, tau_global: int | None
+                      aggregation: str | None, tau_global: int | None,
+                      compress: str | None = None,
+                      topk_frac: float | None = None,
+                      partition: str | None = None,
+                      dirichlet_alpha: float | None = None
                       ) -> dict[tuple, list[tuple[int, ScenarioSpec]]]:
     """Group (position, spec) by (n_users, n_bs, aggregation, tau,
-    faults_on, clip_on) — the learning sweep's compile-bucket key
-    (hierarchical and faulty buckets carry extra scan state / graph, so
-    they must not share a trace with plain ones)."""
+    faults_on, clip_on, compress, topk_frac, partition, alpha) — the
+    learning sweep's compile-bucket key (hierarchical, faulty and
+    compressed buckets carry extra scan state / graph, and the partition
+    shapes the shared per-seed client data, so none may share a trace
+    with plain ones)."""
     buckets: dict[tuple, list[tuple[int, ScenarioSpec]]] = {}
     for pos, spec in enumerate(specs):
         w = spec.wireless(base)
         agg, tau = _resolve_aggregation(spec, aggregation, tau_global)
         faults_on, clip_on = _fault_flags(spec)
+        comp, frac = _resolve_compress(spec, compress, topk_frac)
+        part, alpha = _resolve_partition(spec, partition, dirichlet_alpha)
         buckets.setdefault((w.n_users, w.n_bs, agg, tau, faults_on,
-                            clip_on), []).append((pos, spec))
+                            clip_on, comp, frac, part, alpha),
+                           []).append((pos, spec))
     return buckets
 
 
 def _learning_seed_inputs(data, cnn_cfg, k_part, k_init, n_seeds: int,
-                          n_users: int, shards_per_user: int):
+                          n_users: int, shards_per_user: int,
+                          partition: str = "shard",
+                          dirichlet_alpha: float | None = None):
     """Per-seed Non-IID partitions + model inits, [seeds, ...] stacked.
 
     Shared across scenarios within a bucket (paired seeds) and across the
-    single-device / device-sharded sweep paths."""
-    from repro.fl.partition import shard_partition
+    single-device / device-sharded sweep paths.  ``partition="dirichlet"``
+    swaps the paper's label-shard split for the per-user Dirichlet label
+    mixture (same per-user sample count)."""
+    from repro.fl.partition import dirichlet_partition, shard_partition
     from repro.models import cnn
 
     pkeys = jax.random.split(k_part, n_seeds)
     ikeys = jax.random.split(k_init, n_seeds)
-    idx = jax.vmap(partial(shard_partition, labels=data.y_train,
-                           n_users=n_users,
-                           shards_per_user=shards_per_user))(pkeys)
+    if partition == "dirichlet":
+        idx = jax.vmap(partial(
+            dirichlet_partition, labels=data.y_train, n_users=n_users,
+            samples_per_user=int(data.y_train.shape[0]) // n_users,
+            alpha=float(dirichlet_alpha),
+            n_classes=int(np.max(np.asarray(data.y_train))) + 1))(pkeys)
+    else:
+        idx = jax.vmap(partial(shard_partition, labels=data.y_train,
+                               n_users=n_users,
+                               shards_per_user=shards_per_user))(pkeys)
     x_c, y_c = data.x_train[idx], data.y_train[idx]  # [seeds, N, n_i, ...]
     w0 = jax.vmap(lambda k: cnn.init(k, cnn_cfg))(ikeys)
     return x_c, y_c, w0
@@ -654,6 +723,10 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
                        buffer_size: int | None = None,
                        user_chunk: int | None = None,
                        channel_dtype: str = "f32",
+                       compress: str | None = None,
+                       topk_frac: float | None = None,
+                       partition: str | None = None,
+                       dirichlet_alpha: float | None = None,
                        seed: int = 0) -> list[dict]:
     """Accuracy-vs-simulated-wall-clock curves, one record per scenario.
 
@@ -689,6 +762,13 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     ``compute="selected"`` + ``select_cap`` keeps per-round learning state
     [cap]-shaped in both the sync and buffered-async engines
     (docs/SCALING.md).
+
+    ``compress`` / ``topk_frac`` override every scenario's uplink
+    compression mode (docs/COMPRESSION.md); compressed records carry
+    ``compress`` / ``topk_frac`` / ``uplink_mbit_per_client`` /
+    ``uplink_compression_ratio``.  ``partition="dirichlet"`` +
+    ``dirichlet_alpha`` swap the label-shard split for the per-user
+    Dirichlet label mixture.
     """
     from repro.data import make_dataset
     from repro.models import cnn
@@ -716,9 +796,11 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
     k_cells, k_part, k_init = jax.random.split(jax.random.PRNGKey(seed), 3)
     seed_keys = jax.random.split(k_cells, n_seeds)   # paired across scenarios
     records: dict[int, dict] = {}
-    buckets = _learning_buckets(specs, base, aggregation, tau_global)
-    for (n_users, n_bs, agg, tau, faults_on, clip_on), group \
-            in buckets.items():
+    buckets = _learning_buckets(specs, base, aggregation, tau_global,
+                                compress, topk_frac, partition,
+                                dirichlet_alpha)
+    for (n_users, n_bs, agg, tau, faults_on, clip_on, comp, frac, part,
+            alpha), group in buckets.items():
         if aggregation_async and agg == "hierarchical":
             raise ValueError(
                 f"aggregation_async composes with single-tier aggregation "
@@ -729,7 +811,8 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
         minp = int(np.ceil(bcfg.rho2 * n_users))
         buf = (int(buffer_size) if buffer_size is not None else n_users)
         x_c, y_c, w0 = _learning_seed_inputs(
-            data, cnn_cfg, k_part, k_init, n_seeds, n_users, shards_per_user)
+            data, cnn_cfg, k_part, k_init, n_seeds, n_users, shards_per_user,
+            partition=part, dirichlet_alpha=alpha)
         params = _scenario_params([s for _, s in group], bcfg)
         outs = _learning_bucket(
             params, seed_keys, x_c, y_c, w0, data.x_test, data.y_test,
@@ -743,14 +826,28 @@ def run_learning_sweep(scenarios: Sequence[str | ScenarioSpec],
             staleness_alpha=float(staleness_alpha),
             buffer_size=(buf if aggregation_async else 1),
             user_chunk=user_chunk, channel_dtype=channel_dtype,
+            compress=comp, topk_frac=frac,
             n_models=len(mobility.MOBILITY_MODELS))
         async_info = ({"aggregation_async": True, "tick_s": float(tick_s),
                        "staleness_alpha": float(staleness_alpha),
                        "buffer_size": buf}
                       if aggregation_async else None)
-        records.update(_learning_records(group, outs, n_seeds, n_rounds,
-                                         dataset, agg, tau, scheduler,
-                                         async_info))
+        recs = _learning_records(group, outs, n_seeds, n_rounds,
+                                 dataset, agg, tau, scheduler, async_info)
+        if comp is not None:
+            from repro.kernels import compress_topk as ct
+            ratio = ct.compression_ratio(
+                jax.tree.map(lambda a: a[0], w0), frac,
+                comp == "topk-int8")
+            for pos, _ in group:
+                recs[pos].update(
+                    compress=comp, topk_frac=frac,
+                    uplink_compression_ratio=float(ratio),
+                    uplink_mbit_per_client=float(bcfg.model_mbit * ratio))
+        if part != "shard":
+            for pos, _ in group:
+                recs[pos].update(partition=part, dirichlet_alpha=alpha)
+        records.update(recs)
     return [records[i] for i in range(len(specs))]
 
 
@@ -843,6 +940,21 @@ def main() -> None:
     ap.add_argument("--buffer-size", type=int, default=None, metavar="B",
                     help="async event-queue capacity (default n_users, "
                          "which never overflows)")
+    ap.add_argument("--compress", default=None, choices=COMPRESS_MODES,
+                    help="override every scenario's uplink compression "
+                         "mode: top-k sparsification, optionally + int8 "
+                         "stochastic rounding (--learning only; "
+                         "docs/COMPRESSION.md)")
+    ap.add_argument("--topk-frac", type=float, default=None, metavar="F",
+                    help="fraction of each leaf's entries a client uploads "
+                         "(requires a compress mode)")
+    ap.add_argument("--partition", default=None, choices=PARTITIONS,
+                    help="override every scenario's Non-IID data split "
+                         "(--learning only)")
+    ap.add_argument("--dirichlet-alpha", type=float, default=None,
+                    metavar="A",
+                    help="Dirichlet concentration for --partition dirichlet "
+                         "(lower = more pathological)")
     args = ap.parse_args()
 
     names = list(SCENARIOS) if args.scenarios == "all" \
@@ -868,6 +980,16 @@ def main() -> None:
     if args.async_agg and args.tick is None:
         ap.error("--async needs --tick (the aggregation period in "
                  "simulated seconds)")
+    if not args.learning and (args.compress is not None
+                              or args.topk_frac is not None
+                              or args.partition is not None
+                              or args.dirichlet_alpha is not None):
+        ap.error("--compress/--topk-frac/--partition/--dirichlet-alpha "
+                 "shape the FL round loop; they only apply with --learning")
+    # --topk-frac without --compress and --dirichlet-alpha without
+    # --partition dirichlet stay legal here: a scenario may resolve the
+    # mode itself (e.g. compressed-uplink / non-iid-pathological); the
+    # per-scenario resolution raises when the knob would truly do nothing.
     if args.shard:
         # local import: shard_sweep imports this module's cell functions
         from repro.launch import shard_sweep
@@ -891,7 +1013,9 @@ def main() -> None:
             staleness_alpha=args.staleness_alpha,
             buffer_size=args.buffer_size,
             user_chunk=args.user_chunk,
-            channel_dtype=args.channel_dtype, seed=args.seed)
+            channel_dtype=args.channel_dtype, compress=args.compress,
+            topk_frac=args.topk_frac, partition=args.partition,
+            dirichlet_alpha=args.dirichlet_alpha, seed=args.seed)
         summary = " ".join(
             f"{r['scenario']}="
             f"{r['final_acc_mean']:.3f}" if r["final_acc_mean"] is not None

@@ -4,8 +4,24 @@ NOTE: no XLA device-count forcing here — smoke tests and benches must see
 the single real CPU device; only launch/dryrun.py forces 512 placeholders
 (in its own process, before jax init).
 """
+import pytest
 
 
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running end-to-end simulation test")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_executables_per_module():
+    """Free XLA compiled executables after each test module.
+
+    Every retained CPU executable pins ~3 anonymous VMAs (code / rodata /
+    data); the full suite compiles tens of thousands of them, overrunning
+    the kernel's default vm.max_map_count (65530) — when mmap then fails
+    mid-compile, jaxlib dies with SIGSEGV.  Clearing per module caps the
+    peak at one module's working set (every module passes in isolation).
+    """
+    yield
+    import jax
+    jax.clear_caches()

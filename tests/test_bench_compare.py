@@ -166,4 +166,5 @@ def test_specs_cover_all_extracted_files():
     """Every gated file name matches what CI extracts + commits."""
     assert {s.file for s in SPECS.values()} == {
         "BENCH_fl.json", "BENCH_scheduling.json", "BENCH_hfl.json",
-        "BENCH_faults.json", "BENCH_async.json", "BENCH_fleet.json"}
+        "BENCH_faults.json", "BENCH_async.json", "BENCH_fleet.json",
+        "BENCH_compress.json"}

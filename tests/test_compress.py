@@ -1,0 +1,327 @@
+"""Compressed-uplink kernels (docs/COMPRESSION.md): tri-path parity of the
+top-k sparsify + int8 stochastic-round compressor (magnitude ties included),
+decompress-fused aggregation vs the dense oracles, the
+no-dense-[N, model]-f32-temporary memory regression, int8 round-trip error
+bounds, the Eq. (1) payload model, and the partitioners that ride the same
+PR (shard tail-drop balance + Dirichlet non-IID).
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.partition import dirichlet_partition, shard_partition
+from repro.kernels import compress_topk as ct
+from repro.kernels import ref
+
+
+def _tied_update(seed: int, n: int, d: int) -> jnp.ndarray:
+    """Random update matrix with deliberate magnitude TIES at the top-k
+    threshold (duplicated entries within and across feature blocks, opposite
+    signs included) — random floats alone almost never tie."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, 1.0, (n, d)).astype(np.float32)
+    x[:, d // 2] = x[:, 3]               # cross-block same-magnitude pair
+    x[:, d - 1] = -x[:, 3]               # sign flip, same magnitude
+    x[n // 2] = x[0]                     # duplicated client row
+    x[1, :8] = 2.5                       # in-row tie plateau
+    return jnp.asarray(x)
+
+
+def _noise(seed: int, shape) -> jnp.ndarray:
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# -------------------------------------------------------- tri-path parity --
+@pytest.mark.parametrize("quantize", [False, True])
+@pytest.mark.parametrize("n,d,k,block", [
+    (6, 40, 5, 16),                      # non-divisible feature blocks
+    (8, 130, 13, 128),                   # straddles one lane block
+    (3, 24, 24, 8),                      # k == d (keep everything)
+    (5, 33, 1, 32),                      # k == 1
+])
+def test_compress_triple_path_parity_with_ties(n, d, k, block, quantize):
+    """Oracle == chunked twin == Pallas(interpret) codes, bitwise, with
+    magnitude ties at the threshold: the shared ``|x| >= thresh`` rule makes
+    every path keep the same (possibly > k) survivor set."""
+    x = _tied_update(0, n, d)
+    u = _noise(1, (n, d))
+    want, want_scale = ref.compress_update(x, k, quantize=quantize, u=u)
+
+    t0, m0 = ct.topk_threshold(x, k)
+    t1, m1 = ct.topk_threshold_chunked(x, k, block)
+    np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+
+    scale = ct.quant_scale(m0) if quantize else jnp.ones((n,), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(scale), np.asarray(want_scale))
+
+    chunked = ct.sparsify_quantize_chunked(x, t0, scale, u,
+                                           quantize=quantize, block=4)
+    pallas = ct.sparsify_quantize(x, t0, scale, u, quantize=quantize,
+                                  client_block=4, feature_block=256,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(chunked))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(pallas))
+    if quantize:
+        assert pallas.dtype == jnp.int8
+    # sparsity: at most d survivors, at least k (ties only ever add)
+    nnz = np.count_nonzero(np.asarray(want), axis=1)
+    assert np.all(nnz >= min(k, 1))
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_compress_delta_tree_backends_bit_identical(quantize):
+    """Tree-level API: pallas(interpret) / dense-jax / chunked-jax backends
+    produce identical codes and scales from the same key."""
+    key = jax.random.PRNGKey(7)
+    delta = {"w": _tied_update(2, 6, 50),
+             "b": jnp.asarray(np.random.default_rng(3).normal(
+                 size=(6, 3, 5)).astype(np.float32))}
+    outs = [ct.compress_delta_tree(delta, 0.2, quantize=quantize, key=key,
+                                   backend="pallas", interpret=True),
+            ct.compress_delta_tree(delta, 0.2, quantize=quantize, key=key,
+                                   backend="jax"),
+            ct.compress_delta_tree(delta, 0.2, quantize=quantize, key=key,
+                                   backend="jax", block=16)]
+    for codes, scales in outs[1:]:
+        for leaf in delta:
+            np.testing.assert_array_equal(np.asarray(outs[0][0][leaf]),
+                                          np.asarray(codes[leaf]))
+            np.testing.assert_array_equal(np.asarray(outs[0][1][leaf]),
+                                          np.asarray(scales[leaf]))
+
+
+def test_zero_update_and_nonfinite_rows():
+    """All-zero rows compress to all-zero codes with the guarded scale 1.0;
+    non-finite entries screen to zero before thresholding (every path)."""
+    x = jnp.zeros((3, 16))
+    x = x.at[1, 2].set(jnp.nan).at[1, 5].set(jnp.inf)
+    u = _noise(4, (3, 16))
+    for quantize in (False, True):
+        codes, scale = ref.compress_update(x, 4, quantize=quantize, u=u)
+        assert not np.any(np.asarray(codes))
+        np.testing.assert_array_equal(np.asarray(scale), 1.0)
+        t, m = ct.topk_threshold(jnp.where(jnp.isfinite(x), x, 0.0), 4)
+        got = ct.sparsify_quantize(x, t, ct.quant_scale(m) if quantize
+                                   else jnp.ones((3,)), u,
+                                   quantize=quantize, interpret=True)
+        assert not np.any(np.asarray(got))
+
+
+def test_int8_roundtrip_error_bound():
+    """Dequantized survivors satisfy |scale * q - x| <= scale (one int8
+    step): stochastic rounding is unbiased noise within one step and the
+    clip at +-127 never activates because scale = rowmax / 127."""
+    x = _tied_update(5, 8, 64)
+    u = _noise(6, (8, 64))
+    codes, scale = ref.compress_update(x, 16, quantize=True, u=u)
+    deq = np.asarray(codes, np.float32) * np.asarray(scale)[:, None]
+    mask = np.asarray(codes) != 0
+    err = np.abs(deq - np.asarray(x))[mask]
+    step = np.broadcast_to(np.asarray(scale)[:, None], x.shape)[mask]
+    assert np.all(err <= step + 1e-6)
+
+
+def test_pack_topk_wire_roundtrip():
+    """Wire format (values, positions) scatters back to the masked-dense
+    codes when magnitudes are distinct (exactly k survivors)."""
+    rng = np.random.default_rng(8)
+    mag = rng.permutation(np.arange(1.0, 21.0)).astype(np.float32)
+    x = jnp.asarray(mag[None] * rng.choice([-1.0, 1.0], 20)[None])
+    k = 6
+    codes, _ = ref.compress_update(x, k, quantize=False, u=None)
+    vals, idx = ct.pack_topk(codes, k)
+    back = np.zeros((1, 20), np.float32)
+    back[0, np.asarray(idx)[0]] = np.asarray(vals)[0]
+    np.testing.assert_array_equal(back, np.asarray(codes))
+
+
+# ------------------------------------------- decompress-fused aggregation --
+def _compressed_case(seed, n, shapes, topk_frac=0.25, quantize=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    g = {f"leaf{i}": jax.random.normal(ks[0], s)
+         for i, s in enumerate(shapes)}
+    delta = {f"leaf{i}": jax.random.normal(ks[1], (n,) + s)
+             for i, s in enumerate(shapes)}
+    codes, scales = ct.compress_delta_tree(delta, topk_frac,
+                                           quantize=quantize, key=ks[2],
+                                           backend="jax")
+    sel = jax.random.bernoulli(ks[3], 0.6, (n,))
+    sizes = jax.random.uniform(ks[4], (n,), minval=1.0, maxval=9.0)
+    return g, codes, scales, sel, sizes
+
+
+@pytest.mark.parametrize("clip_norm", [None, 0.7])
+@pytest.mark.parametrize("weights", [False, True])
+def test_decompress_reduce_matches_dense_oracle(clip_norm, weights):
+    g, codes, scales, sel, sizes = _compressed_case(9, 7, [(13,), (3, 5)])
+    wt = (jnp.linspace(0.3, 1.0, 7) if weights else None)
+    want = ref.fedavg_decompress_reduce(g, codes, scales, sel, sizes,
+                                        weights=wt, clip_norm=clip_norm)
+    got = ct.fedavg_decompress_reduce(g, codes, scales, sel, sizes,
+                                      weights=wt, clip_norm=clip_norm,
+                                      client_block=4, feature_block=256,
+                                      interpret=True)
+    for k in g:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_decompress_reduce_empty_selection_keeps_global():
+    g, codes, scales, _, sizes = _compressed_case(10, 5, [(11,)])
+    got = ct.fedavg_decompress_reduce(g, codes, scales,
+                                      jnp.zeros(5, dtype=bool), sizes,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(got["leaf0"]),
+                                  np.asarray(g["leaf0"]))
+
+
+@pytest.mark.parametrize("clip_norm", [None, 0.5])
+def test_segment_decompress_reduce_matches_dense_oracle(clip_norm):
+    """Hierarchical edge aggregation over compressed deltas: serving !=
+    assigned rows (handover in flight), one empty BS."""
+    n, m = 9, 3
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    e = {"w": jax.random.normal(ks[0], (m, 6, 4))}
+    delta = {"w": jax.random.normal(ks[1], (n, 6, 4))}
+    codes, scales = ct.compress_delta_tree(delta, 0.3, quantize=True,
+                                           key=ks[2], backend="jax")
+    bs = jax.random.randint(ks[3], (n,), 0, 2)       # BS 2 stays empty
+    assign = jax.nn.one_hot(bs, m, dtype=jnp.bool_)
+    assign = assign & (jnp.arange(n) != 4)[:, None]  # one undelivered row
+    serving = (bs + (jnp.arange(n) % 2)) % 2         # some serve != assign
+    sizes = jax.random.uniform(ks[4], (n,), minval=1.0, maxval=9.0)
+    want = ref.fedavg_decompress_segment_reduce(e, codes, scales, assign,
+                                                serving, sizes,
+                                                clip_norm=clip_norm)
+    got = ct.fedavg_decompress_segment_reduce(e, codes, scales, assign,
+                                              serving, sizes,
+                                              clip_norm=clip_norm,
+                                              client_block=4,
+                                              feature_block=256,
+                                              interpret=True)
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want["w"]),
+                               rtol=1e-5, atol=1e-5)
+    # the empty BS keeps its edge model bitwise
+    np.testing.assert_array_equal(np.asarray(got["w"][2]),
+                                  np.asarray(e["w"][2]))
+
+
+def test_compressed_clip_matches_dense_norm():
+    """The compressed-domain norm (scale^2 * sum q^2 per leaf) equals the
+    dense reconstruction's norm, so the clip factors agree."""
+    _, codes, scales, _, _ = _compressed_case(12, 6, [(13,), (3, 5)])
+    cs = ct.compressed_clip_scales(codes, scales, 0.9)
+    dense = ct.decompress_tree(codes, scales)
+    sq = sum(np.sum(np.square(np.asarray(d)), axis=tuple(range(1, d.ndim)))
+             for d in jax.tree.leaves(dense))
+    want = np.minimum(1.0, 0.9 / np.maximum(np.sqrt(sq), 1e-12))
+    np.testing.assert_allclose(np.asarray(cs), want, rtol=1e-6)
+
+
+def test_no_dense_f32_decompress_temporary():
+    """Memory regression: the fused decompress-reduce jaxpr contains NO
+    [N, model]-sized f32 array — the int8 codes stream through the existing
+    reduction and dequantization folds into the weight vector.  Positive
+    control: the dense oracle reconstructs the full f32[N, D] matrix."""
+    n, d = 64, 4096
+    g = jax.ShapeDtypeStruct((d,), jnp.float32)
+    q = jax.ShapeDtypeStruct((n, d), jnp.int8)
+    s = jax.ShapeDtypeStruct((n,), jnp.float32)
+    sel = jax.ShapeDtypeStruct((n,), jnp.bool_)
+    sz = jax.ShapeDtypeStruct((n,), jnp.float32)
+    fused = str(jax.make_jaxpr(
+        lambda a, b, c, e, f: ct.fedavg_decompress_reduce(
+            {"w": a}, {"w": b}, {"w": c}, e, f, interpret=True)
+    )(g, q, s, sel, sz))
+    assert not re.search(rf"f32\[{n},\d{{3,}}\]", fused)
+    dense = str(jax.make_jaxpr(
+        lambda a, b, c, e, f: ref.fedavg_decompress_reduce(
+            {"w": a}, {"w": b}, {"w": c}, e, f)
+    )(g, q, s, sel, sz))
+    assert f"f32[{n},{d}]" in dense
+
+
+# ------------------------------------------------------------ payload model --
+def test_payload_model():
+    params = {"w": jnp.zeros((100,)), "b": jnp.zeros((4, 5))}
+    assert ct.payload_bits(params, 1.0, quantize=False) == 120 * 32
+    assert ct.payload_bits(params, 1.0, quantize=True) == 120 * 8
+    # sparse: ceil(0.1 * d) entries at value+index bits per leaf
+    want = 10 * (8 + 32) + 2 * (8 + 32)
+    assert ct.payload_bits(params, 0.1, quantize=True) == want
+    r = ct.compression_ratio(params, 0.1, quantize=True)
+    assert r == want / (120 * 32)
+    assert r < 0.2                       # >= 5x reduction at topk 0.1 int8
+    assert ct.nominal_k(7, 0.01) == 1    # floor of one entry
+    assert ct.nominal_k(7, 1.0) == 7
+
+
+# -------------------------------------------------------------- partitions --
+def test_shard_partition_divisible_is_lossless():
+    """When shards divide the dataset evenly, every sample is used exactly
+    once (the tail-spread is the identity)."""
+    labels = jnp.asarray(np.repeat(np.arange(10), 10))
+    part = shard_partition(jax.random.PRNGKey(0), labels, 10,
+                           shards_per_user=2)
+    assert part.shape == (10, 10)
+    assert sorted(np.asarray(part).ravel().tolist()) == list(range(100))
+
+
+def test_shard_partition_tail_drop_spread_across_labels():
+    """Regression (tail-truncation bugfix): with a non-divisible dataset the
+    dropped samples spread across the label-sorted order instead of all
+    coming out of the last classes — kept-per-class counts stay balanced."""
+    n_per_class = 103                    # 10 * 103 = 1030; 20 shards of 51
+    labels_np = np.repeat(np.arange(10), n_per_class)
+    part = shard_partition(jax.random.PRNGKey(1), jnp.asarray(labels_np),
+                           10, shards_per_user=2)
+    kept = np.asarray(part).ravel()
+    assert kept.size == 1020             # 10 samples dropped in total
+    assert np.unique(kept).size == kept.size
+    per_class = np.bincount(labels_np[kept], minlength=10)
+    assert per_class.max() - per_class.min() <= 1
+    # the old truncation dropped ALL 10 from the final class:
+    assert per_class[9] >= n_per_class - 2
+
+
+def test_shard_partition_too_small_raises():
+    with pytest.raises(ValueError, match="too small"):
+        shard_partition(jax.random.PRNGKey(0), jnp.zeros((5,), jnp.int32),
+                        10, shards_per_user=2)
+
+
+def test_dirichlet_partition_shapes_and_concentration():
+    labels = jnp.asarray(np.repeat(np.arange(10), 60))
+    lo = dirichlet_partition(jax.random.PRNGKey(2), labels, 20, 30,
+                             alpha=0.05)
+    hi = dirichlet_partition(jax.random.PRNGKey(2), labels, 20, 30,
+                             alpha=100.0)
+    for part in (lo, hi):
+        assert part.shape == (20, 30)
+        idx = np.asarray(part)
+        assert idx.min() >= 0 and idx.max() < labels.shape[0]
+    ln = np.asarray(labels)
+    classes = [np.unique(ln[np.asarray(p)]).size for p in lo]
+    classes_hi = [np.unique(ln[np.asarray(p)]).size for p in hi]
+    # pathological alpha concentrates users on a few classes; large alpha
+    # approaches IID (most of the 10 classes present per user)
+    assert np.mean(classes) < 4.0
+    assert np.mean(classes_hi) > 8.0
+
+
+# ----------------------------------------------------------- config guards --
+def test_flconfig_compression_validation():
+    from repro.fl import FLConfig
+    with pytest.raises(ValueError, match="compress"):
+        FLConfig(compress="gzip")
+    with pytest.raises(ValueError, match="topk_frac"):
+        FLConfig(compress="topk", topk_frac=0.0)
+    with pytest.raises(ValueError, match="silently"):
+        FLConfig(topk_frac=0.5)          # no compress mode anywhere
+    with pytest.raises(ValueError):
+        FLConfig(partition="shard", dirichlet_alpha=0.3)
+    FLConfig(scenario="compressed-uplink", topk_frac=0.5)  # scenario resolves
